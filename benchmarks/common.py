@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing, CSV emission, result storage."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "benchmarks")
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    """Median wall time (us) of fn(*args) after one warmup."""
+    fn(*args, **kw)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: List[Dict], name: str) -> None:
+    """Print the required CSV (name,us_per_call,derived) and persist."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', 0):.1f},"
+              f"{r.get('derived', '')}")

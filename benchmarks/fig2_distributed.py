@@ -1,0 +1,128 @@
+"""Figure 2 reproduction: distributed convergence + weak scaling on toy data.
+
+Left panels: convergence of CVR-Sync / CVR-Async / D-SVRG / D-SAGA /
+EASGD / PS-SVRG / dist-SGD with p workers (paper: 192 cores; here p=8
+simulated workers — numerically identical semantics, see DESIGN.md §2).
+
+Right panels (the LINEAR-SCALING headline): weak scaling — per-worker data
+FIXED (|Omega_s| = const), workers swept; the hardware-independent form of
+the claim is that communication ROUNDS to reach eps stay ~flat as p grows.
+We report rounds-to-eps and a simulated wall-clock using the measured
+per-gradient cost + a per-round communication cost model (2 x d floats,
+ICI 50 GB/s + 10us latency per hop).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ConvexConfig
+from repro.core import baselines, convex, distributed
+
+
+def _sharded(problem, p, n, d, seed=0):
+    cfg = ConvexConfig(problem=problem, n=n, d=d, workers=p)
+    return distributed.make_distributed(jax.random.PRNGKey(seed), cfg)
+
+
+def rounds_to(rels, eps):
+    r = np.asarray(rels)
+    hit = np.nonzero(r < eps)[0]
+    return int(hit[0]) + 1 if hit.size else float("inf")
+
+
+def sim_time_per_round(n_local, d, grad_us):
+    """Simulated seconds per round: n_local sequential gradient evals on
+    each worker (parallel across workers) + one (x, gbar) exchange."""
+    comm = 2 * d * 4 / 50e9 + 10e-6
+    return n_local * grad_us * 1e-6 + comm
+
+
+def run(quick: bool = False):
+    rows = []
+    n, d = (1000, 100) if quick else (2000, 1000)
+    rounds = 10 if quick else 16
+
+    # ---- convergence panel (logistic + ridge), p = 8 ----
+    for problem in ("logistic", "ridge"):
+        sp = _sharded(problem, 8, n, d)
+        eta = convex.auto_eta(sp.merged(), 0.4)
+        key = jax.random.PRNGKey(1)
+        t0 = time.perf_counter()
+        _, r_sync = distributed.run_sync(sp, eta=eta, rounds=rounds, key=key)
+        t_sync = (time.perf_counter() - t0) / rounds
+        _, r_async = distributed.run_async(sp, eta=eta, rounds=rounds,
+                                           key=key)
+        _, r_dsvrg = distributed.run_dsvrg(sp, eta=eta, rounds=rounds,
+                                           key=key)
+        _, r_dsaga = distributed.run_dsaga(sp, eta=eta / 2, rounds=rounds,
+                                           key=key, tau=n // 2)
+        _, r_easgd = baselines.run_easgd(sp, eta=eta, rounds=rounds, key=key)
+        _, r_ps = baselines.run_ps_svrg(sp, eta=eta, rounds=rounds, key=key)
+        _, r_sgd = baselines.run_dist_sgd(sp, eta=eta, rounds=rounds,
+                                          key=key, decay=0.01)
+        final = {
+            "cvr_sync": float(r_sync[-1]), "cvr_async": float(r_async[-1]),
+            "d_svrg": float(r_dsvrg[-1]), "d_saga": float(r_dsaga[-1]),
+            "easgd": float(r_easgd[-1]), "ps_svrg": float(r_ps[-1]),
+            "dist_sgd": float(r_sgd[-1]),
+        }
+        rows.append({
+            "name": f"fig2/convergence-{problem}-p8",
+            "us_per_call": t_sync * 1e6,
+            "derived": ";".join(f"{k}={v:.2e}" for k, v in final.items()),
+            "curves": {
+                "cvr_sync": np.asarray(r_sync).tolist(),
+                "cvr_async": np.asarray(r_async).tolist(),
+                "d_svrg": np.asarray(r_dsvrg).tolist(),
+                "d_saga": np.asarray(r_dsaga).tolist(),
+                "easgd": np.asarray(r_easgd).tolist(),
+                "ps_svrg": np.asarray(r_ps).tolist(),
+                "dist_sgd": np.asarray(r_sgd).tolist(),
+            },
+        })
+
+    # ---- weak scaling panel ----
+    ps = (2, 4, 8) if quick else (2, 4, 8, 16)
+    sc_rounds = rounds if quick else 36
+    for problem in ("logistic", "ridge"):
+        scaling = {}
+        grad_us = None
+        for p in ps:
+            sp = _sharded(problem, p, n, d, seed=2)
+            eta = convex.auto_eta(sp.merged(), 0.4)
+            key = jax.random.PRNGKey(2)
+            t0 = time.perf_counter()
+            _, rels = distributed.run_sync(sp, eta=eta, rounds=sc_rounds,
+                                           key=key)
+            wall = time.perf_counter() - t0
+            if grad_us is None:
+                grad_us = wall / sc_rounds / n / p * 1e6 * p  # per local eval
+            # per-problem tolerance: logistic's tiny strong convexity
+            # (mu = 2e-4) makes its tail slow; the scaling readout only
+            # needs a threshold every p reaches
+            rt = rounds_to(rels, 2e-3 if problem == "logistic" else 1e-4)
+            sim = (rt * sim_time_per_round(n, d, grad_us)
+                   if np.isfinite(rt) else float("inf"))
+            scaling[p] = {"rounds_to_eps": rt, "sim_seconds": sim,
+                          "total_data": p * n}
+        base_r = scaling[ps[0]]["rounds_to_eps"]
+        last_r = scaling[ps[-1]]["rounds_to_eps"]
+        rows.append({
+            "name": f"fig2/weak-scaling-{problem}",
+            "us_per_call": 0.0,
+            "derived": (";".join(
+                f"p{p}:rounds={scaling[p]['rounds_to_eps']}"
+                for p in ps)
+                + f";flat={'yes' if last_r <= base_r * 2 else 'no'}"),
+            "scaling": scaling,
+        })
+    emit(rows, "fig2_distributed")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Figure 3 reproduction: large-dataset distributed runs (SUSY-like /
+MILLIONSONG-like shape-matched synthetics, scaled for the 1-core container;
+see DESIGN.md §9) + worker-count sweep.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ConvexConfig
+from repro.core import convex, distributed
+
+
+def run(quick: bool = False):
+    rows = []
+    cases = [
+        ("susy-like", "logistic", 2000 if quick else 6250, 18),
+        ("millionsong-like", "ridge", 2000 if quick else 5800, 90),
+    ]
+    rounds = 8 if quick else 12
+    for name, problem, n_per, d in cases:
+        for p in ((4,) if quick else (4, 16)):
+            cfg = ConvexConfig(problem=problem, n=n_per, d=d, workers=p)
+            sp = distributed.make_distributed(jax.random.PRNGKey(3), cfg)
+            key = jax.random.PRNGKey(4)
+            eta = convex.auto_eta(sp.merged(), 0.4)
+            t0 = time.perf_counter()
+            _, r_sync = distributed.run_sync(sp, eta=eta, rounds=rounds,
+                                             key=key)
+            wall = time.perf_counter() - t0
+            _, r_async = distributed.run_async(sp, eta=eta, rounds=rounds,
+                                               key=key)
+            rows.append({
+                "name": f"fig3/{name}-p{p}",
+                "us_per_call": wall / rounds * 1e6,
+                "derived": (f"n_total={p * n_per};"
+                            f"sync_final={float(r_sync[-1]):.2e};"
+                            f"async_final={float(r_async[-1]):.2e}"),
+                "curves": {"sync": np.asarray(r_sync).tolist(),
+                           "async": np.asarray(r_async).tolist()},
+            })
+    emit(rows, "fig3_large")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,104 @@
+"""Roofline report: reads results/dryrun/<mesh>/*.json (written by
+repro.launch.dryrun) and emits the EXPERIMENTS.md §Roofline table +
+hillclimb-candidate selection (worst roofline fraction / most
+collective-bound / most representative of the paper's technique).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load(mesh: str = "pod"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def one_liner(r):
+    """What would move the dominant term down."""
+    rf = r["roofline"]
+    b = rf["bottleneck"]
+    if b == "compute":
+        if rf["useful_fraction"] < 0.3:
+            return ("compute-bound with low useful fraction: cut remat "
+                    "recompute / redundant replicated compute (shard the "
+                    "mixer over 'model')")
+        return "compute-bound near useful peak: more chips or lower remat"
+    if b == "memory":
+        return ("memory-bound: bf16 the f32 elementwise pipes, fuse VR "
+                "update (Pallas vr_update), larger microbatch per device")
+    return ("collective-bound: raise CentralVR local_epoch K (fewer "
+            "epoch-boundary exchanges), overlap FSDP gathers with compute")
+
+
+def run(quick: bool = False, mesh: str = "pod"):
+    recs = load(mesh)
+    rows = []
+    for r in recs:
+        rf = r["roofline"]
+        t = {"compute": rf["t_compute"], "memory": rf["t_memory"],
+             "collective": rf["t_collective"]}
+        dom = max(t.values())
+        frac = rf["t_compute"] / max(dom, 1e-12)  # roofline fraction
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+            "us_per_call": dom * 1e6,
+            "derived": (f"bottleneck={rf['bottleneck']};"
+                        f"Tc_ms={rf['t_compute'] * 1e3:.2f};"
+                        f"Tm_ms={rf['t_memory'] * 1e3:.2f};"
+                        f"Tx_ms={rf['t_collective'] * 1e3:.3f};"
+                        f"useful={rf['useful_fraction']:.3f};"
+                        f"roofline_frac={frac:.3f};"
+                        f"peak_GiB={(rf['peak_memory_bytes'] or 0) / 2**30:.1f}"),
+            "fix": one_liner(r),
+            "record": {k: r.get(k) for k in
+                       ("arch", "shape", "workers", "vr", "comm_every",
+                        "compile_s", "window")},
+        })
+    if rows:
+        # hillclimb candidate selection
+        train_rows = [r for r in rows if "train" in r["name"] or
+                      "train_4k" in r["name"]]
+        by_frac = min(rows, key=lambda r: float(
+            r["derived"].split("roofline_frac=")[1].split(";")[0]))
+        by_coll = max(rows, key=lambda r: float(
+            r["derived"].split("Tx_ms=")[1].split(";")[0]))
+        rows.append({"name": "roofline/hillclimb-picks", "us_per_call": 0,
+                     "derived": (f"worst_frac={by_frac['name']};"
+                                 f"most_collective={by_coll['name']};"
+                                 f"paper_representative=qwen2-7b/train_4k")})
+    emit(rows, f"roofline_{mesh}")
+    return rows
+
+
+def markdown_table(mesh: str = "pod") -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | mode | T_comp ms | T_mem ms | T_coll ms | "
+        "bottleneck | useful | peak GiB/dev | what moves it |",
+        "|" + "---|" * 10,
+    ]
+    for r in recs:
+        rf = r["roofline"]
+        peak = (rf.get("peak_memory_bytes") or 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['mode']} "
+            f"| {rf['t_compute'] * 1e3:.1f} | {rf['t_memory'] * 1e3:.1f} "
+            f"| {rf['t_collective'] * 1e3:.2f} | {rf['bottleneck']} "
+            f"| {rf['useful_fraction']:.3f} | {peak:.1f} "
+            f"| {one_liner(r)} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()
+    print(markdown_table())

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report. Prints ``name,us_per_call,derived`` CSV per row.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI-speed)")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig1,fig2,fig3,table1,theory,roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig1_single_worker, fig2_distributed, fig3_large,
+                            roofline_report, table1_accounting, tau_sweep,
+                            theory_rates, variance)
+
+    suites = {
+        "fig1": fig1_single_worker.run,
+        "fig2": fig2_distributed.run,
+        "fig3": fig3_large.run,
+        "table1": table1_accounting.run,
+        "theory": theory_rates.run,
+        "tau": tau_sweep.run,
+        "variance": variance.run,
+        "roofline": roofline_report.run,
+    }
+    only = [s for s in args.only.split(",") if s]
+    failures = []
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

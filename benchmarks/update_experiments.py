@@ -1,0 +1,45 @@
+"""Inject the generated roofline tables into EXPERIMENTS.md between the
+<!-- BEGIN:<mesh> --> / <!-- END:<mesh> --> markers (idempotent).
+
+    PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+from __future__ import annotations
+
+import os
+import re
+
+from benchmarks.roofline_report import load, markdown_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def summarize(mesh: str) -> str:
+    recs = load(mesh)
+    if not recs:
+        return f"_(no dry-run records for {mesh} yet)_"
+    bott = {}
+    for r in recs:
+        b = r["roofline"]["bottleneck"]
+        bott[b] = bott.get(b, 0) + 1
+    head = (f"{len(recs)} combos compiled on `{mesh}`; bottleneck mix: "
+            + ", ".join(f"{k}={v}" for k, v in sorted(bott.items())) + ".\n\n")
+    return head + markdown_table(mesh)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    for mesh in ("pod", "multipod", "pod_opt"):
+        begin, end = f"<!-- BEGIN:{mesh} -->", f"<!-- END:{mesh} -->"
+        if begin in text and end in text:
+            pat = re.escape(begin) + r".*?" + re.escape(end)
+            text = re.sub(pat, begin + "\n" + summarize(mesh) + "\n" + end,
+                          text, flags=re.S)
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the paper's algorithm in both of its homes.
+
+1. Convex (paper-faithful): CentralVR vs SGD on l2-regularized logistic
+   regression — linear convergence with a CONSTANT step size.
+2. LM (framework): a tiny decoder trained with the CentralVR optimizer.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.config import ConvexConfig, TrainConfig, get_arch
+from repro.core import baselines, centralvr, convex
+from repro.train import loop
+
+
+def convex_demo():
+    print("=== CentralVR on logistic regression (paper §6.1 toy) ===")
+    cfg = ConvexConfig(problem="logistic", n=2000, d=20)
+    prob = convex.make_problem(jax.random.PRNGKey(0), cfg)
+    _, rels_cvr, evals = centralvr.run(prob, eta=0.2, epochs=12,
+                                       key=jax.random.PRNGKey(1))
+    _, rels_sgd = baselines.run_sgd(prob, eta=0.2, epochs=12,
+                                    key=jax.random.PRNGKey(1))
+    print(f"{'epoch':>6} {'CentralVR':>12} {'SGD':>12}")
+    for e in range(0, 12, 3):
+        print(f"{e:6d} {rels_cvr[e]:12.2e} {rels_sgd[e]:12.2e}")
+    print(f"final: CentralVR {rels_cvr[-1]:.2e} vs SGD {rels_sgd[-1]:.2e} "
+          f"(same constant step, same gradient budget)\n")
+
+
+def lm_demo():
+    print("=== CentralVR as the optimizer of a tiny LM ===")
+    cfg = get_arch("qwen2-7b").reduced()
+    tcfg = TrainConfig(seq_len=64, global_batch=4, microbatch=2,
+                       optimizer="sgd", learning_rate=0.2,
+                       vr="centralvr", vr_table_size=4)
+    res = loop.run_training(cfg, tcfg, steps=20, log_every=5)
+    print(f"eval loss after 20 steps: {res.final_eval_loss:.3f}\n")
+
+
+if __name__ == "__main__":
+    convex_demo()
+    lm_demo()

@@ -1,0 +1,46 @@
+"""Batched serving example: prefill a batch of prompts, then decode with
+the sharded KV cache — across three architecture families (dense GQA,
+attention-free SSM, hybrid RG-LRU) to show the cache abstraction.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_arch
+from repro.data import synthetic
+from repro.models import model
+
+
+def serve(arch: str, batch=4, prompt=32, gen=16):
+    cfg = get_arch(arch).reduced()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = synthetic.eval_batch(cfg, 0, batch=batch, seq=prompt)
+    cache = model.init_cache(cfg, batch, prompt + gen)
+    step = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, cfg, t, c, pos))
+
+    t0 = time.time()
+    logits = None
+    for t in range(prompt):                      # prefill via decode steps
+        logits, cache = step(params, prompts[:, t:t + 1], cache, t)
+    tok = jnp.argmax(logits, -1)[:, None]
+    toks = [tok]
+    for t in range(prompt, prompt + gen - 1):    # decode
+        logits, cache = step(params, tok, cache, t)
+        tok = jnp.argmax(logits, -1)[:, None]
+        toks.append(tok)
+    dt = time.time() - t0
+    out = jnp.concatenate(toks, 1)
+    print(f"{arch:22s} [{cfg.family:6s}] {batch} seqs x {gen} new tokens "
+          f"in {dt:.2f}s -> {out[0, :8].tolist()}")
+
+
+if __name__ == "__main__":
+    for arch in ("qwen2-7b", "mamba2-130m", "recurrentgemma-2b"):
+        serve(arch)

@@ -1,0 +1,4 @@
+"""repro: a multi-pod JAX training/inference framework implementing
+"Efficient Distributed SGD with Variance Reduction" (De & Goldstein, 2015)
+as a first-class distributed-optimizer feature."""
+__version__ = "1.0.0"

@@ -1,0 +1,66 @@
+"""Minimal sharding-aware checkpointing: pytrees -> .npz (+ json manifest).
+
+Arrays are gathered to host (works for sharded arrays), keyed by their
+tree path; restore rebuilds into an existing abstract/concrete tree and
+re-places onto the provided shardings. Deliberately orbax-free — the
+container is offline and the trees here are plain dicts/NamedTuples.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(path: str, tree, *, step: Optional[int] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(path, **arrays)
+    manifest = {"step": step, "keys": sorted(arrays),
+                "shapes": {k: list(v.shape) for k, v in arrays.items()},
+                "dtypes": {k: str(v.dtype) for k, v in arrays.items()}}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like, shardings: Any = None):
+    """Rebuild the tree of ``like`` (same structure) from the npz; place on
+    ``shardings`` (same structure, optional)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = _flatten_with_paths(like)
+    leaves = []
+    for key in flat:
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        leaves.append(data[key])
+    flat_like = list(flat.values())
+    restored = [np.asarray(a, dtype=l.dtype) for a, l in
+                zip(leaves, flat_like)]
+    tree = jax.tree_util.tree_unflatten(
+        treedef, [jax.numpy.asarray(a) for a in restored])
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def latest_step(path: str) -> Optional[int]:
+    try:
+        with open(path + ".json") as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

@@ -1,0 +1,32 @@
+"""Architecture registry: importing this package registers every assigned arch.
+
+Each module defines exactly one :class:`repro.config.ModelConfig` with the
+numbers from its source paper / model card (cited in the module docstring)
+and calls :func:`repro.config.register`.
+"""
+from repro.configs import (  # noqa: F401
+    paper_convex,
+    qwen2_7b,
+    internvl2_26b,
+    mamba2_130m,
+    qwen3_14b,
+    musicgen_large,
+    qwen3_moe_30b_a3b,
+    starcoder2_15b,
+    recurrentgemma_2b,
+    qwen2_moe_a2_7b,
+    qwen1_5_110b,
+)
+
+ASSIGNED_ARCHS = (
+    "qwen2-7b",
+    "internvl2-26b",
+    "mamba2-130m",
+    "qwen3-14b",
+    "musicgen-large",
+    "qwen3-moe-30b-a3b",
+    "starcoder2-15b",
+    "recurrentgemma-2b",
+    "qwen2-moe-a2.7b",
+    "qwen1.5-110b",
+)

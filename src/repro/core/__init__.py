@@ -1,0 +1,10 @@
+"""The paper's contribution: CentralVR and its distributed variants.
+
+Modules:
+  convex       -- the paper's experimental problems (GLM scalar-residual form)
+  centralvr    -- Algorithm 1 (single worker)
+  distributed  -- Algorithms 2-5 (Sync/Async CentralVR, D-SVRG, D-SAGA)
+  baselines    -- SGD/SVRG/SAGA (sequential) + dist-SGD/EASGD/PS-SVRG
+  theory       -- Theorem 1 constants
+"""
+from repro.core import baselines, centralvr, convex, distributed, theory  # noqa: F401

@@ -1,0 +1,241 @@
+"""Comparison baselines used in the paper's experiments (§6.2):
+
+  * plain (distributed) SGD with periodic averaging,
+  * EASGD — elastic averaging SGD [36], constant & decaying step sizes,
+  * PS-SVRG — asynchronous parameter-server SVRG [29].
+
+All run on the same :class:`ShardedProblem` substrate as the proposed
+methods so convergence-per-gradient-evaluation comparisons are exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import convex
+from repro.core.convex import Problem
+from repro.core.distributed import ShardedProblem
+
+
+# ---------------------------------------------------------------------------
+# Sequential SGD / SVRG / SAGA (single worker, for Fig. 1)
+# ---------------------------------------------------------------------------
+
+def run_sgd(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+            decay: float = 0.0):
+    """Plain SGD, permutation sampling; eta_l = eta / (1 + decay*l)."""
+    x = jnp.zeros((prob.d,))
+    g0 = jnp.linalg.norm(convex.full_grad(prob, x))
+
+    @jax.jit
+    def one_epoch(x, k, eta_l):
+        perm = jax.random.permutation(k, prob.n)
+
+        def body(x, i):
+            g = (convex.scalar_residual(prob, x, i) * prob.A[i]
+                 + 2.0 * prob.lam * x)
+            return x - eta_l * g, None
+
+        x, _ = jax.lax.scan(body, x, perm)
+        return x, jnp.linalg.norm(convex.full_grad(prob, x)) / g0
+
+    rels = []
+    for l, k in enumerate(jax.random.split(key, epochs)):
+        x, rel = one_epoch(x, k, eta / (1.0 + decay * l))
+        rels.append(float(rel))
+    return x, jnp.array(rels)
+
+
+def run_svrg(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+             inner: int = 0):
+    """SVRG [17]: snapshot + full gradient every epoch; update (3).
+    Gradient evaluations per outer epoch: n (full grad) + 2*inner."""
+    inner = inner or prob.n
+    x = jnp.zeros((prob.d,))
+    g0 = jnp.linalg.norm(convex.full_grad(prob, x))
+
+    @jax.jit
+    def one_epoch(x, k):
+        xbar = x
+        gbar = convex.full_grad(prob, xbar)
+        idx = jax.random.randint(k, (inner,), 0, prob.n)
+
+        def body(x, i):
+            g = ((convex.scalar_residual(prob, x, i)
+                  - convex.scalar_residual(prob, xbar, i)) * prob.A[i]
+                 + gbar + 2.0 * prob.lam * (x - xbar))
+            return x - eta * g, None
+
+        x, _ = jax.lax.scan(body, x, idx)
+        return x, jnp.linalg.norm(convex.full_grad(prob, x)) / g0
+
+    rels = []
+    for k in jax.random.split(key, epochs):
+        x, rel = one_epoch(x, k)
+        rels.append(float(rel))
+    # grad evals per epoch: n + 2*inner (3n at inner=n)
+    return x, jnp.array(rels)
+
+
+def run_saga(prob: Problem, *, eta: float, epochs: int, key: jax.Array):
+    """SAGA [12]: update (4), table mean refreshed every iteration.
+    1 gradient evaluation per iteration; table init at x0."""
+    x = jnp.zeros((prob.d,))
+    g0 = jnp.linalg.norm(convex.full_grad(prob, x))
+    table = convex.scalar_residual_all(prob, x)
+    gbar = convex.data_grad_from_scalars(prob, table)
+
+    @jax.jit
+    def one_epoch(carry, k):
+        x, table, gbar = carry
+        idx = jax.random.randint(k, (prob.n,), 0, prob.n)
+
+        def body(carry, i):
+            x, table, gbar = carry
+            s_new = convex.scalar_residual(prob, x, i)
+            v = (s_new - table[i]) * prob.A[i] + gbar + 2.0 * prob.lam * x
+            gbar = gbar + (s_new - table[i]) * prob.A[i] / prob.n
+            table = table.at[i].set(s_new)
+            return (x - eta * v, table, gbar), None
+
+        (x, table, gbar), _ = jax.lax.scan(body, (x, table, gbar), idx)
+        rel = jnp.linalg.norm(convex.full_grad(prob, x)) / g0
+        return (x, table, gbar), rel
+
+    rels = []
+    carry = (x, table, gbar)
+    for k in jax.random.split(key, epochs):
+        carry, rel = one_epoch(carry, k)
+        rels.append(float(rel))
+    return carry[0], jnp.array(rels)
+
+
+# ---------------------------------------------------------------------------
+# Distributed baselines
+# ---------------------------------------------------------------------------
+
+def run_dist_sgd(sp: ShardedProblem, *, eta: float, rounds: int,
+                 key: jax.Array, tau: int = 0, decay: float = 0.0):
+    """Distributed SGD: tau local steps (default: one local epoch), then
+    average — the 'one-shot-averaging per round' baseline."""
+    tau = tau or sp.ns
+    x = jnp.zeros((sp.d,))
+    merged = sp.merged()
+    g0 = jnp.linalg.norm(convex.full_grad(merged, x))
+
+    @jax.jit
+    def round_(x, k, eta_l):
+        def local(A, b, kk):
+            prob = Problem(A, b, sp.lam, sp.kind)
+            idx = jax.random.randint(kk, (tau,), 0, sp.ns)
+
+            def body(xl, i):
+                g = convex.scalar_residual(prob, xl, i) * A[i] + 2.0 * sp.lam * xl
+                return xl - eta_l * g, None
+
+            xl, _ = jax.lax.scan(body, x, idx)
+            return xl
+
+        xs = jax.vmap(local)(sp.A, sp.b, jax.random.split(k, sp.p))
+        x = xs.mean(0)
+        return x, jnp.linalg.norm(convex.full_grad(merged, x)) / g0
+
+    rels = []
+    for l, k in enumerate(jax.random.split(key, rounds)):
+        x, rel = round_(x, k, eta / (1.0 + decay * l * tau) ** 0.5)
+        rels.append(float(rel))
+    return x, jnp.array(rels)
+
+
+def run_easgd(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
+              tau: int = 16, rho: float = 1.0, decay: float = 0.0):
+    """EASGD [36]: workers do tau local SGD steps, then the elastic update
+      x_s <- x_s - alpha*(x_s - xc),  xc <- xc + alpha*sum_s(x_s - xc)/p'
+    with alpha = eta*rho (the paper's beta=p*alpha convention, symmetric
+    moving-average form). Step size optionally decays as eta0/(1+gamma*k)^.5
+    on a local clock, as in [36]/§6.2.
+    """
+    p = sp.p
+    alpha = min(0.9 / p, eta * rho * tau)   # stability-capped elastic rate
+    xc = jnp.zeros((sp.d,))
+    xs = jnp.zeros((p, sp.d))
+    merged = sp.merged()
+    g0 = jnp.linalg.norm(convex.full_grad(merged, xc))
+    steps_per_round = max(sp.ns // tau, 1)
+
+    @jax.jit
+    def round_(xc, xs, k, eta_l):
+        def local(A, b, xl, kk):
+            prob = Problem(A, b, sp.lam, sp.kind)
+            idx = jax.random.randint(kk, (steps_per_round * tau,), 0, sp.ns)
+            idx = idx.reshape(steps_per_round, tau)
+
+            def comm_block(carry, idx_tau):
+                xl, xc_view = carry
+
+                def body(x, i):
+                    g = convex.scalar_residual(prob, x, i) * A[i] + 2.0 * sp.lam * x
+                    return x - eta_l * g, None
+
+                xl, _ = jax.lax.scan(body, xl, idx_tau)
+                diff = xl - xc_view
+                # symmetric elastic move; the center's share is applied
+                # after the vmap (sum of worker contributions)
+                return (xl - alpha * diff, xc_view + alpha * diff), diff
+
+            (xl, _), diffs = jax.lax.scan(comm_block, (xl, xc), idx)
+            return xl, diffs.sum(0)
+
+        xs, diffs = jax.vmap(local)(sp.A, sp.b, xs, jax.random.split(k, p))
+        xc = xc + alpha * diffs.sum(0) / p
+        rel = jnp.linalg.norm(convex.full_grad(merged, xc)) / g0
+        return xc, xs, rel
+
+    rels = []
+    for l, k in enumerate(jax.random.split(key, rounds)):
+        eta_l = eta / (1.0 + decay * l * sp.ns) ** 0.5
+        xc, xs, rel = round_(xc, xs, k, eta_l)
+        rels.append(float(rel))
+    return xc, jnp.array(rels)
+
+
+def run_ps_svrg(sp: ShardedProblem, *, eta: float, rounds: int,
+                key: jax.Array, epoch_mult: int = 2):
+    """Parameter-server SVRG [29]: every worker streams one corrected
+    gradient per step to the server (communication every iteration — the
+    high-bandwidth regime the paper contrasts against). Simulated with
+    synchronized arrivals (staleness 0, the method's best case); epoch
+    size 2n as recommended in [29]. Per round: one full gradient + 2
+    gradient evaluations per inner step per worker."""
+    merged = sp.merged()
+    x = jnp.zeros((sp.d,))
+    g0 = jnp.linalg.norm(convex.full_grad(merged, x))
+    inner = epoch_mult * sp.ns
+
+    @jax.jit
+    def round_(x, k):
+        xbar = x
+        gbar = convex.full_grad(merged, xbar)
+
+        def body(x, ks):
+            # each worker contributes one corrected gradient; the server
+            # applies their average (p gradients -> one server step)
+            i = jax.random.randint(ks, (sp.p,), 0, sp.ns)
+
+            def worker_grad(A, b, ii):
+                prob = Problem(A, b, sp.lam, sp.kind)
+                return ((convex.scalar_residual(prob, x, ii)
+                         - convex.scalar_residual(prob, xbar, ii)) * A[ii]
+                        + gbar + 2.0 * sp.lam * (x - xbar))
+
+            g = jax.vmap(worker_grad)(sp.A, sp.b, i).mean(0)
+            return x - eta * g, None
+
+        x, _ = jax.lax.scan(body, x, jax.random.split(k, inner))
+        return x, jnp.linalg.norm(convex.full_grad(merged, x)) / g0
+
+    rels = []
+    for k in jax.random.split(key, rounds):
+        x, rel = round_(x, k)
+        rels.append(float(rel))
+    return x, jnp.array(rels)

@@ -1,0 +1,139 @@
+"""CentralVR, single-worker case (Algorithm 1 of the paper).
+
+The update (Eqs. 5-6):
+
+    x <- x - eta * ( grad f_i(x) - grad f_i(xtilde_i) + gbar )
+
+with gbar = (1/n) sum_j grad f_j(xtilde_j) frozen over the epoch and
+refreshed at epoch end from the running accumulator gtilde (line 11).
+
+Storage uses the GLM scalar-residual structure (one scalar per sample, the
+paper's own observation in §2.3); the regularizer gradient 2*lam*x is added
+exactly outside the correction (see core/convex.py docstring).
+
+Both sampling modes of the paper are implemented:
+  * permutation sampling (§2.2, the practical default) — the accumulator
+    identity makes one epoch an exact full-gradient step in aggregate
+    (Eq. 7), which ``tests/test_paper_invariants.py`` checks bit-for-bit;
+  * uniform-with-replacement (§3) — the regime of Theorem 1.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import convex
+from repro.core.convex import Problem
+
+
+class VRState(NamedTuple):
+    x: jax.Array        # (d,) iterate
+    table: jax.Array    # (n,) stored scalar residuals s_j = l'(a_j^T xtilde_j)
+    gbar: jax.Array     # (d,) data term of the epoch-frozen mean gradient
+
+
+# ---------------------------------------------------------------------------
+# Initialization (Algorithm 1, line 2: one epoch of plain SGD)
+# ---------------------------------------------------------------------------
+
+def init_state(prob: Problem, eta: float, key: jax.Array,
+               x0: Optional[jax.Array] = None) -> VRState:
+    x0 = jnp.zeros((prob.d,)) if x0 is None else x0
+    perm = jax.random.permutation(key, prob.n)
+
+    def body(carry, i):
+        x, table, acc = carry
+        s = convex.scalar_residual(prob, x, i)
+        g = s * prob.A[i] + 2.0 * prob.lam * x
+        table = table.at[i].set(s)
+        acc = acc + s * prob.A[i] / prob.n
+        return (x - eta * g, table, acc), None
+
+    init = (x0, jnp.zeros((prob.n,)), jnp.zeros((prob.d,)))
+    (x, table, acc), _ = jax.lax.scan(body, init, perm)
+    return VRState(x=x, table=table, gbar=acc)
+
+
+# ---------------------------------------------------------------------------
+# One epoch
+# ---------------------------------------------------------------------------
+
+def epoch(prob: Problem, state: VRState, eta: float, order: jax.Array,
+          *, track_iterates: bool = False):
+    """Run n CentralVR updates visiting ``order`` (a permutation for the
+    practical variant, i.i.d. uniform draws for the Theorem-1 variant).
+
+    Returns the new state (gbar <- gtilde per line 11) and, optionally, the
+    iterate trajectory for Lyapunov-function measurements.
+    """
+
+    def body(carry, i):
+        x, table, acc = carry
+        s_new = convex.scalar_residual(prob, x, i)
+        # v = (s_new - s_old) a_i + gbar + 2 lam x   (Eq. 6, scalar form)
+        v = (s_new - table[i]) * prob.A[i] + state.gbar + 2.0 * prob.lam * x
+        x_next = x - eta * v
+        table = table.at[i].set(s_new)
+        acc = acc + s_new * prob.A[i] / prob.n
+        return (x_next, table, acc), (x if track_iterates else None)
+
+    init = (state.x, state.table, jnp.zeros((prob.d,)))
+    (x, table, acc), traj = jax.lax.scan(body, init, order)
+    # permutation sampling: every index is visited exactly once, so the
+    # running accumulator IS the table mean (line 11: gbar <- gtilde)
+    gbar_next = acc
+    return VRState(x=x, table=table, gbar=gbar_next), traj
+
+
+def epoch_uniform(prob: Problem, state: VRState, eta: float, key: jax.Array,
+                  *, track_iterates: bool = False):
+    """Theorem-1 regime: i.i.d. uniform sampling, gbar refreshed from table."""
+    idx = jax.random.randint(key, (prob.n,), 0, prob.n)
+
+    def body(carry, i):
+        x, table = carry
+        s_new = convex.scalar_residual(prob, x, i)
+        v = (s_new - table[i]) * prob.A[i] + state.gbar + 2.0 * prob.lam * x
+        x_next = x - eta * v
+        table = table.at[i].set(s_new)
+        return (x_next, table), (x if track_iterates else None)
+
+    (x, table), traj = jax.lax.scan(body, (state.x, state.table), idx)
+    gbar_next = convex.data_grad_from_scalars(prob, table)
+    return VRState(x=x, table=table, gbar=gbar_next), traj
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+        sampling: str = "permutation", x0: Optional[jax.Array] = None):
+    """Full Algorithm 1. Returns (final state, per-epoch relative grad norms,
+    gradient-evaluation counts). 1 gradient evaluation per iteration
+    (Table 1 row 'CentralVR'), plus the n initialization evaluations.
+    """
+    k_init, k_run = jax.random.split(key)
+    state = init_state(prob, eta, k_init, x0=x0)
+    g0 = jnp.linalg.norm(convex.full_grad(prob, jnp.zeros((prob.d,))))
+
+    @jax.jit
+    def one_epoch(state, k):
+        if sampling == "permutation":
+            order = jax.random.permutation(k, prob.n)
+            new_state, _ = epoch(prob, state, eta, order)
+        else:
+            new_state, _ = epoch_uniform(prob, state, eta, k)
+        rel = jnp.linalg.norm(convex.full_grad(prob, new_state.x)) / g0
+        return new_state, rel
+
+    rels = []
+    grad_evals = [prob.n]  # init epoch
+    keys = jax.random.split(k_run, epochs)
+    for m in range(epochs):
+        state, rel = one_epoch(state, keys[m])
+        rels.append(float(rel))
+        grad_evals.append(grad_evals[-1] + prob.n)
+    return state, jnp.array(rels), jnp.array(grad_evals[1:])

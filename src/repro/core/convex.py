@@ -1,0 +1,183 @@
+"""The paper's experimental substrate (§6): l2-regularized logistic and
+ridge regression, with the GLM scalar-residual structure that makes the
+SAGA/CentralVR gradient table O(n) scalars instead of O(n·d) vectors
+(the storage observation in §2.3 of the paper).
+
+Every f_i has the form  f_i(x) = l(a_i^T x; b_i) + lam * ||x||^2, so
+
+    grad f_i(x) = s_i(x) * a_i + 2*lam*x,     s_i(x) = l'(a_i^T x; b_i).
+
+We apply variance reduction to the data term only and treat the
+regularizer's gradient 2*lam*x exactly (it is deterministic, so adding it
+outside the correction keeps the estimator unbiased and strictly reduces
+variance). The stored "gradient" for index i is therefore the scalar s_i.
+
+Loss convention: the paper prints ``log(1 + exp(b a^T x))``; we use the
+standard ``log(1 + exp(-b a^T x))`` (b in {-1,+1}) — the two differ only by
+the sign of b, i.e. a relabeling of the classes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Problem(NamedTuple):
+    """A finite-sum convex problem; a pytree safe to close over in jit."""
+
+    A: jax.Array          # (n, d) features
+    b: jax.Array          # (n,) labels (+-1 for logistic, real for ridge)
+    lam: jnp.float32      # l2 coefficient
+    kind: str             # "logistic" | "ridge"  (static)
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.A.shape[1]
+
+
+# pytree: `kind` is static metadata
+jax.tree_util.register_pytree_node(
+    Problem,
+    lambda p: ((p.A, p.b, p.lam), p.kind),
+    lambda kind, leaves: Problem(*leaves, kind=kind),
+)
+
+
+# ---------------------------------------------------------------------------
+# Data generators (paper §6.1)
+# ---------------------------------------------------------------------------
+
+def make_logistic_data(key, n: int, d: int, lam: float = 1e-4) -> Problem:
+    """Two unit-variance normals with means separated by one unit."""
+    k1, k2 = jax.random.split(key)
+    half = n // 2
+    mu = jnp.zeros((d,)).at[0].set(0.5)
+    a_pos = jax.random.normal(k1, (half, d)) + mu
+    a_neg = jax.random.normal(k2, (n - half, d)) - mu
+    A = jnp.concatenate([a_pos, a_neg])
+    b = jnp.concatenate([jnp.ones((half,)), -jnp.ones((n - half,))])
+    return Problem(A, b, jnp.float32(lam), "logistic")
+
+
+def make_ridge_data(key, n: int, d: int, lam: float = 1e-4) -> Problem:
+    """b = A x_true + eps, A and eps standard normal."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    A = jax.random.normal(k1, (n, d))
+    x_true = jax.random.normal(k2, (d,))
+    b = A @ x_true + jax.random.normal(k3, (n,))
+    return Problem(A, b, jnp.float32(lam), "ridge")
+
+
+def make_problem(key, cfg) -> Problem:
+    """From a :class:`repro.config.ConvexConfig`."""
+    fn = make_logistic_data if cfg.problem == "logistic" else make_ridge_data
+    return fn(key, cfg.n, cfg.d, cfg.lam)
+
+
+# ---------------------------------------------------------------------------
+# Losses / gradients
+# ---------------------------------------------------------------------------
+
+def _margins(prob: Problem, x: jax.Array) -> jax.Array:
+    return prob.A @ x
+
+
+def full_loss(prob: Problem, x: jax.Array) -> jax.Array:
+    z = _margins(prob, x)
+    if prob.kind == "logistic":
+        data = jnp.mean(jnp.logaddexp(0.0, -prob.b * z))
+    else:
+        data = jnp.mean((z - prob.b) ** 2)
+    return data + prob.lam * jnp.sum(x * x)
+
+
+def scalar_residual(prob: Problem, x: jax.Array, idx) -> jax.Array:
+    """s_i(x) = l'(a_i^T x; b_i) for the given indices (vectorized)."""
+    a = prob.A[idx]
+    bb = prob.b[idx]
+    z = a @ x
+    if prob.kind == "logistic":
+        return -bb * jax.nn.sigmoid(-bb * z)
+    return 2.0 * (z - bb)
+
+
+def scalar_residual_all(prob: Problem, x: jax.Array) -> jax.Array:
+    z = _margins(prob, x)
+    if prob.kind == "logistic":
+        return -prob.b * jax.nn.sigmoid(-prob.b * z)
+    return 2.0 * (z - prob.b)
+
+
+def sample_grad(prob: Problem, x: jax.Array, i) -> jax.Array:
+    """grad f_i(x) (single index), regularizer included."""
+    s = scalar_residual(prob, x, i)
+    return s * prob.A[i] + 2.0 * prob.lam * x
+
+
+def data_grad_from_scalars(prob: Problem, s: jax.Array) -> jax.Array:
+    """(1/n) sum_j s_j a_j — the data term of the mean gradient."""
+    return prob.A.T @ s / prob.n
+
+
+def full_grad(prob: Problem, x: jax.Array) -> jax.Array:
+    s = scalar_residual_all(prob, x)
+    return data_grad_from_scalars(prob, s) + 2.0 * prob.lam * x
+
+
+# ---------------------------------------------------------------------------
+# Smoothness / strong-convexity constants and exact solutions (theory.py
+# consumes these; tests compare measured rates against Theorem 1)
+# ---------------------------------------------------------------------------
+
+def constants(prob: Problem):
+    """(mu, L) such that every f_i is mu-strongly convex, L-smooth."""
+    row_sq = jnp.sum(prob.A * prob.A, axis=1)
+    if prob.kind == "logistic":
+        L = 0.25 * jnp.max(row_sq) + 2.0 * prob.lam
+    else:
+        L = 2.0 * jnp.max(row_sq) + 2.0 * prob.lam
+    mu = 2.0 * prob.lam
+    return mu, L
+
+
+def auto_eta(prob: Problem, c: float = 0.3) -> float:
+    """Practical step size c/L (the paper tunes per-problem constants; we
+    derive them from the smoothness constant so every dataset shape gets a
+    stable-but-fast step)."""
+    _, L = constants(prob)
+    return float(c / L)
+
+
+def solve_exact(prob: Problem, iters: int = 100) -> jax.Array:
+    """x*: closed form for ridge, Newton for logistic (d is small)."""
+    n, d = prob.A.shape
+    if prob.kind == "ridge":
+        H = 2.0 * (prob.A.T @ prob.A) / n + 2.0 * prob.lam * jnp.eye(d)
+        g = 2.0 * (prob.A.T @ prob.b) / n
+        return jnp.linalg.solve(H, g)
+
+    def newton_step(x, _):
+        z = prob.A @ x
+        p = jax.nn.sigmoid(-prob.b * z)
+        g = prob.A.T @ (-prob.b * p) / n + 2.0 * prob.lam * x
+        w = p * (1.0 - p)
+        H = (prob.A * w[:, None]).T @ prob.A / n + 2.0 * prob.lam * jnp.eye(d)
+        return x - jnp.linalg.solve(H, g), None
+
+    x0 = jnp.zeros((d,))
+    x, _ = jax.lax.scan(newton_step, x0, None, length=iters)
+    return x
+
+
+def rel_grad_norm(prob: Problem, x: jax.Array, g0: jax.Array | None = None):
+    """The paper's y-axis: ||grad f(x)|| / ||grad f(x0)||."""
+    g = jnp.linalg.norm(full_grad(prob, x))
+    if g0 is None:
+        return g
+    return g / g0

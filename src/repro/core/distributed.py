@@ -1,0 +1,412 @@
+"""Distributed algorithms of the paper, on the convex substrate:
+
+  * CentralVR-Sync   (Algorithm 2)
+  * CentralVR-Async  (Algorithm 3) — delta algebra + staleness simulator
+  * Distributed SVRG (Algorithm 4)
+  * Distributed SAGA (Algorithm 5)
+
+Workers are simulated SPMD-style: the p local shards are stacked along a
+leading axis and local epochs run under ``jax.vmap`` (numerically identical
+to p independent processes; on the real mesh the same code runs under
+``shard_map`` — see ``repro/train`` for the LM-scale version). The central
+server of the paper is realized as an average across the worker axis — on
+a TPU pod this is the epoch-boundary ``pmean`` (DESIGN.md §2).
+
+Asynchrony: TPUs are SPMD, so CentralVR-Async's lock-free arrival order is
+modelled by a deterministic staleness schedule: at event t (round-robin
+over workers, optionally with heterogeneous speeds), worker s runs its
+epoch from the central state it fetched at its *previous* event — i.e.
+effective staleness p-1 events, the natural value for a round-robin
+server. The *delta* form of the central update (x += dx/p) is kept exactly
+as in Algorithm 3; the paper argues this is what makes fast workers unable
+to bias the average.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import convex
+from repro.core.convex import Problem
+
+
+class ShardedProblem(NamedTuple):
+    """p stacked local shards; the global objective is the mean over all
+    p * ns samples (§4 of the paper)."""
+
+    A: jax.Array    # (p, ns, d)
+    b: jax.Array    # (p, ns)
+    lam: jnp.float32
+    kind: str
+
+    @property
+    def p(self):
+        return self.A.shape[0]
+
+    @property
+    def ns(self):
+        return self.A.shape[1]
+
+    @property
+    def d(self):
+        return self.A.shape[2]
+
+    def local(self, s) -> Problem:
+        return Problem(self.A[s], self.b[s], self.lam, self.kind)
+
+    def merged(self) -> Problem:
+        return Problem(self.A.reshape(-1, self.d), self.b.reshape(-1),
+                       self.lam, self.kind)
+
+
+jax.tree_util.register_pytree_node(
+    ShardedProblem,
+    lambda p: ((p.A, p.b, p.lam), p.kind),
+    lambda kind, leaves: ShardedProblem(*leaves, kind=kind),
+)
+
+
+def shard_problem(prob: Problem, p: int) -> ShardedProblem:
+    n = (prob.n // p) * p
+    return ShardedProblem(prob.A[:n].reshape(p, -1, prob.d),
+                          prob.b[:n].reshape(p, -1), prob.lam, prob.kind)
+
+
+def make_distributed(key, cfg) -> ShardedProblem:
+    """Paper §6.2: each worker gets its OWN toy dataset of size cfg.n
+    (total data scales linearly with workers — the weak-scaling setup)."""
+    keys = jax.random.split(key, cfg.workers)
+    gen = (convex.make_logistic_data if cfg.problem == "logistic"
+           else convex.make_ridge_data)
+    probs = [gen(k, cfg.n, cfg.d, cfg.lam) for k in keys]
+    return ShardedProblem(jnp.stack([q.A for q in probs]),
+                          jnp.stack([q.b for q in probs]),
+                          jnp.float32(cfg.lam), cfg.problem)
+
+
+# ---------------------------------------------------------------------------
+# Local epoch primitives (vmapped over the worker axis)
+# ---------------------------------------------------------------------------
+
+def _local_centralvr_epoch(A, b, lam, kind, x, table, gbar, eta, perm):
+    """One CentralVR epoch on one worker's shard (Alg 2 lines 6-12)."""
+    prob = Problem(A, b, lam, kind)
+    ns = A.shape[0]
+
+    def body(carry, i):
+        x, table, acc = carry
+        s_new = convex.scalar_residual(prob, x, i)
+        v = (s_new - table[i]) * A[i] + gbar + 2.0 * lam * x
+        table = table.at[i].set(s_new)
+        acc = acc + s_new * A[i] / ns
+        return (x - eta * v, table, acc), None
+
+    (x, table, acc), _ = jax.lax.scan(body, (x, table, jnp.zeros_like(x)), perm)
+    return x, table, acc   # acc = local gtilde (data term)
+
+
+def _local_sgd_epoch(A, b, lam, kind, x, eta, perm):
+    prob = Problem(A, b, lam, kind)
+    ns = A.shape[0]
+
+    def body(carry, i):
+        x, table, acc = carry
+        s = convex.scalar_residual(prob, x, i)
+        g = s * A[i] + 2.0 * lam * x
+        table = table.at[i].set(s)
+        acc = acc + s * A[i] / ns
+        return (x - eta * g, table, acc), None
+
+    init = (x, jnp.zeros((ns,)), jnp.zeros_like(x))
+    (x, table, acc), _ = jax.lax.scan(body, init, perm)
+    return x, table, acc
+
+
+class SyncState(NamedTuple):
+    x: jax.Array        # (d,) shared iterate
+    tables: jax.Array   # (p, ns) per-worker scalar tables
+    gbar: jax.Array     # (d,) shared epoch-frozen mean gradient (data term)
+
+
+# ---------------------------------------------------------------------------
+# CentralVR-Sync (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def sync_init(sp: ShardedProblem, eta: float, key: jax.Array) -> SyncState:
+    """Init with one plain-SGD epoch per worker, then average (line 2)."""
+    keys = jax.random.split(key, sp.p)
+    perms = jax.vmap(lambda k: jax.random.permutation(k, sp.ns))(keys)
+    x0 = jnp.zeros((sp.d,))
+    xs, tables, accs = jax.vmap(
+        lambda A, b, perm: _local_sgd_epoch(A, b, sp.lam, sp.kind, x0, eta, perm)
+    )(sp.A, sp.b, perms)
+    return SyncState(x=xs.mean(0), tables=tables, gbar=accs.mean(0))
+
+
+def sync_round(sp: ShardedProblem, st: SyncState, eta: float, key: jax.Array
+               ) -> SyncState:
+    """One communication round: a full local epoch everywhere, then the
+    central average of (x, gbar) — Algorithm 2 lines 4-18."""
+    keys = jax.random.split(key, sp.p)
+    perms = jax.vmap(lambda k: jax.random.permutation(k, sp.ns))(keys)
+    xs, tables, accs = jax.vmap(
+        lambda A, b, table, perm: _local_centralvr_epoch(
+            A, b, sp.lam, sp.kind, st.x, table, st.gbar, eta, perm)
+    )(sp.A, sp.b, st.tables, perms)
+    # central node: average x and gbar (lines 16-18); on a pod: pmean
+    return SyncState(x=xs.mean(0), tables=tables, gbar=accs.mean(0))
+
+
+def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array):
+    merged = sp.merged()
+    k_init, k_run = jax.random.split(key)
+    st = sync_init(sp, eta, k_init)
+    g0 = jnp.linalg.norm(convex.full_grad(merged, jnp.zeros((sp.d,))))
+
+    @jax.jit
+    def step(st, k):
+        st = sync_round(sp, st, eta, k)
+        rel = jnp.linalg.norm(convex.full_grad(merged, st.x)) / g0
+        return st, rel
+
+    rels = []
+    for k in jax.random.split(k_run, rounds):
+        st, rel = step(st, k)
+        rels.append(float(rel))
+    return st, jnp.array(rels)
+
+
+# ---------------------------------------------------------------------------
+# CentralVR-Async (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+class AsyncState(NamedTuple):
+    x_c: jax.Array        # central iterate
+    gbar_c: jax.Array     # central mean gradient (data term)
+    tables: jax.Array     # (p, ns)
+    x_old: jax.Array      # (p, d) each worker's previous sent x
+    gbar_old: jax.Array   # (p, d) each worker's previous sent gbar
+    x_fetch: jax.Array    # (p, d) central x as of each worker's last fetch
+    gbar_fetch: jax.Array # (p, d)
+
+
+def async_init(sp: ShardedProblem, eta: float, key: jax.Array) -> AsyncState:
+    st = sync_init(sp, eta, key)
+    p = sp.p
+    # Algorithm 3 line 2 sets x_old = gbar_old = 0 with x_c = x0; starting
+    # instead from the SGD-init iterate requires the workers' "previous
+    # contribution" to equal that iterate, otherwise the first p events
+    # add the init point a second time (x_c <- x_init + mean(x_s) instead
+    # of mean(x_s)). Same algebra, transient removed.
+    return AsyncState(
+        x_c=st.x, gbar_c=st.gbar, tables=st.tables,
+        x_old=jnp.tile(st.x, (p, 1)), gbar_old=jnp.tile(st.gbar, (p, 1)),
+        x_fetch=jnp.tile(st.x, (p, 1)), gbar_fetch=jnp.tile(st.gbar, (p, 1)),
+    )
+
+
+def async_event(sp: ShardedProblem, st: AsyncState, s: int, eta: float,
+                key: jax.Array) -> AsyncState:
+    """Worker s completes one local epoch computed from its stale fetch,
+    sends (dx, dgbar); the central node applies x += dx/p (Alg 3 l.18-21);
+    the worker then fetches the fresh central state."""
+    p = sp.p
+    alpha = 1.0 / p
+    perm = jax.random.permutation(key, sp.ns)
+    x_new, table, gtilde = _local_centralvr_epoch(
+        sp.A[s], sp.b[s], sp.lam, sp.kind,
+        st.x_fetch[s], st.tables[s], st.gbar_fetch[s], eta, perm)
+    dx = x_new - st.x_old[s]
+    dg = gtilde - st.gbar_old[s]
+    x_c = st.x_c + alpha * dx
+    gbar_c = st.gbar_c + alpha * dg
+    return AsyncState(
+        x_c=x_c, gbar_c=gbar_c,
+        tables=st.tables.at[s].set(table),
+        x_old=st.x_old.at[s].set(x_new),
+        gbar_old=st.gbar_old.at[s].set(gtilde),
+        x_fetch=st.x_fetch.at[s].set(x_c),        # receive updated x
+        gbar_fetch=st.gbar_fetch.at[s].set(gbar_c),
+    )
+
+
+def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
+              speeds=None):
+    """``rounds`` epochs per worker. ``speeds``: optional per-worker relative
+    speeds; faster workers fire proportionally more events (heterogeneous
+    cluster simulation). Default: round-robin (staleness p-1)."""
+    merged = sp.merged()
+    k_init, k_run = jax.random.split(key)
+    st = async_init(sp, eta, k_init)
+    g0 = jnp.linalg.norm(convex.full_grad(merged, jnp.zeros((sp.d,))))
+
+    event_fns = [jax.jit(lambda st, k, s=s: async_event(sp, st, s, eta, k))
+                 for s in range(sp.p)]
+
+    # build the event schedule
+    import numpy as np
+    if speeds is None:
+        schedule = list(range(sp.p)) * rounds
+    else:
+        speeds = np.asarray(speeds, dtype=float)
+        t_next = 1.0 / speeds
+        schedule = []
+        for _ in range(rounds * sp.p):
+            s = int(np.argmin(t_next))
+            schedule.append(s)
+            t_next[s] += 1.0 / speeds[s]
+
+    rels = []
+    keys = jax.random.split(k_run, len(schedule))
+    for t, s in enumerate(schedule):
+        st = event_fns[s](st, keys[t])
+        if (t + 1) % sp.p == 0:
+            rel = jnp.linalg.norm(convex.full_grad(merged, st.x_c)) / g0
+            rels.append(float(rel))
+    return st, jnp.array(rels)
+
+
+# ---------------------------------------------------------------------------
+# Distributed SVRG (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
+              tau: int = 0):
+    """tau local steps from the shared snapshot (default tau = 2*ns, the
+    paper's recommendation from [17]); gbar = full gradient at the snapshot
+    (the synchronization step); then average x across workers.
+    2 gradient evaluations per iteration (Table 1)."""
+    merged = sp.merged()
+    tau = tau or 2 * sp.ns
+    x = jnp.zeros((sp.d,))
+    g0 = jnp.linalg.norm(convex.full_grad(merged, x))
+
+    @jax.jit
+    def round_(x, k):
+        xbar = x
+        gbar = convex.full_grad(merged, xbar)   # sync step (line 5)
+
+        def local(A, b, kk):
+            prob = Problem(A, b, sp.lam, sp.kind)
+            idx = jax.random.randint(kk, (tau,), 0, sp.ns)
+
+            def body(xl, i):
+                g = (convex.scalar_residual(prob, xl, i) * A[i]
+                     - convex.scalar_residual(prob, xbar, i) * A[i]
+                     + gbar + 2.0 * sp.lam * (xl - xbar))
+                return xl - eta * g, None
+
+            xl, _ = jax.lax.scan(body, xbar, idx)
+            return xl
+
+        xs = jax.vmap(local)(sp.A, sp.b, jax.random.split(k, sp.p))
+        x = xs.mean(0)
+        rel = jnp.linalg.norm(convex.full_grad(merged, x)) / g0
+        return x, rel
+
+    rels = []
+    for k in jax.random.split(key, rounds):
+        x, rel = round_(x, k)
+        rels.append(float(rel))
+    return x, jnp.array(rels)
+
+
+# ---------------------------------------------------------------------------
+# Distributed SAGA (Algorithm 5)
+# ---------------------------------------------------------------------------
+
+class DSagaState(NamedTuple):
+    x_c: jax.Array
+    gbar_c: jax.Array
+    tables: jax.Array     # (p, ns) scalar residuals
+    x_old: jax.Array      # (p, d)
+    gbar_old: jax.Array   # (p, d) — literal mode: previous local final gbar
+
+
+def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
+              tau: int = 100, literal_scaling: bool = False):
+    """Algorithm 5. Each worker runs tau SAGA steps with its local table;
+    the running mean gbar is updated with the GLOBAL 1/n scaling (§5.2);
+    deltas (dx, dgbar) are pushed with server coefficient alpha.
+
+    Delta semantics for gbar: Algorithm 5 as literally printed computes
+    dgbar against the worker's own previous *final* local gbar and applies
+    server coefficient alpha=1/p. That delta embeds the central drift
+    caused by OTHER workers between the two events (the local gbar starts
+    from the fetched central value), so with alpha=1 it echoes and
+    diverges, and with alpha=1/p the server's gbar lags the true table
+    mean by a factor ~p and convergence plateaus (we measured both; see
+    EXPERIMENTS.md). The §5.2 prose — "the previous contribution to the
+    average from that local worker is just replaced by the new
+    contribution ... gbar is built from the most recent gradient
+    computations at each index" — pins down the intended semantics:
+    the delta must isolate the worker's OWN table-update contribution,
+    i.e. dgbar = gbar_local_final - gbar_fetched (the sum of its 1/n-scaled
+    table updates this block), applied with coefficient 1 (indices are
+    disjoint across workers, so the sum keeps the server gbar exactly equal
+    to the global table mean at every event). That is the default here;
+    ``literal_scaling=True`` reproduces the printed lines for comparison.
+    """
+    merged = sp.merged()
+    n_global = sp.p * sp.ns
+    x0 = jnp.zeros((sp.d,))
+    g0 = jnp.linalg.norm(convex.full_grad(merged, x0))
+
+    # init tables at x0 (Alg 5 line 2-3)
+    s_all = jax.vmap(lambda A, b: convex.scalar_residual_all(
+        Problem(A, b, sp.lam, sp.kind), x0))(sp.A, sp.b)
+    gbar0 = (jnp.einsum("psd,ps->d", sp.A, s_all) / n_global)
+    st = DSagaState(x_c=x0, gbar_c=gbar0, tables=s_all,
+                    x_old=jnp.tile(x0, (sp.p, 1)),
+                    gbar_old=jnp.tile(gbar0, (sp.p, 1)))
+
+    alpha = 1.0 / sp.p
+    alpha_g = alpha if literal_scaling else 1.0
+
+    def event(st: DSagaState, s: int, k) -> DSagaState:
+        """Worker s: tau local SAGA steps from its fetched central state,
+        then the delta push (Alg 5 lines 12-20). Events interleave
+        round-robin — the async arrival order, one at a time (the paper's
+        implementation is 'locked': one worker updates the server at a
+        time, §6.2)."""
+        A, b = sp.A[s], sp.b[s]
+        prob = Problem(A, b, sp.lam, sp.kind)
+        idx = jax.random.randint(k, (tau,), 0, sp.ns)
+
+        def body(carry, i):
+            x, table, gbar = carry
+            s_new = convex.scalar_residual(prob, x, i)
+            v = (s_new - table[i]) * A[i] + gbar + 2.0 * sp.lam * x
+            # line 9: global 1/n scaling of the running-mean update
+            gbar = gbar + (s_new - table[i]) * A[i] / n_global
+            table = table.at[i].set(s_new)
+            return (x - eta * v, table, gbar), None
+
+        (x, table, gbar), _ = jax.lax.scan(
+            body, (st.x_c, st.tables[s], st.gbar_c), idx)
+        dx = x - st.x_old[s]
+        if literal_scaling:
+            dg = gbar - st.gbar_old[s]       # printed line 13
+        else:
+            dg = gbar - st.gbar_c            # own contribution only
+        return DSagaState(
+            x_c=st.x_c + alpha * dx,
+            gbar_c=st.gbar_c + alpha_g * dg,
+            tables=st.tables.at[s].set(table),
+            x_old=st.x_old.at[s].set(x),
+            gbar_old=st.gbar_old.at[s].set(gbar),
+        )
+
+    event_fns = [jax.jit(lambda st, k, s=s: event(st, s, k))
+                 for s in range(sp.p)]
+    rels = []
+    n_events = rounds * sp.p
+    keys = jax.random.split(key, n_events)
+    for t in range(n_events):
+        st = event_fns[t % sp.p](st, keys[t])
+        if (t + 1) % sp.p == 0:
+            rel = jnp.linalg.norm(convex.full_grad(merged, st.x_c)) / g0
+            rels.append(float(rel))
+    return st, jnp.array(rels)

@@ -1,0 +1,79 @@
+"""Synthetic data pipeline.
+
+Two jobs:
+
+1. LM token streams with the FINITE-SUM structure the paper's technique
+   needs: each (worker w, microbatch index i) pair maps to a FIXED
+   minibatch — `epoch_batch(w, i)` returns the same tokens every epoch, so
+   f_i = loss(microbatch_i) is a well-defined component function and the
+   CentralVR/SAGA gradient tables are meaningful. Tokens are generated
+   statelessly from fold_in-chained PRNG keys (no host state, shardable,
+   identical across restarts — also what checkpoint resume relies on).
+
+2. Frontend stubs for the VLM/audio archs: precomputed patch/frame
+   embeddings of the right shape (the assignment's one sanctioned stub).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def _key(seed: int, *idx: int):
+    k = jax.random.PRNGKey(seed)
+    for i in idx:
+        k = jax.random.fold_in(k, i)
+    return k
+
+
+def microbatch_tokens(cfg: ModelConfig, seed: int, worker: int, index: int,
+                      batch: int, seq: int):
+    """The i-th FIXED microbatch of worker w: same tokens every epoch.
+    Markov-ish stream: low-entropy structure so training loss can fall."""
+    k = _key(seed, worker, index)
+    base = jax.random.randint(k, (batch, seq), 0, cfg.vocab_size)
+    # overlay periodic structure (learnable signal)
+    period = jax.random.randint(jax.random.fold_in(k, 1), (batch, 1), 2, 17)
+    pos = jnp.arange(seq)[None, :]
+    structured = (pos % period) * 37 % cfg.vocab_size
+    use = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.7, (batch, seq))
+    return jnp.where(use, structured, base).astype(jnp.int32)
+
+
+def epoch_batch(cfg: ModelConfig, seed: int, step: int, *, workers: int,
+                accum: int, microbatch: int, seq: int, table_size: int):
+    """Tokens for one train step: (W, A, mb, S). The microbatch INDEX
+    cycles modulo table_size — step k uses component function
+    i = k mod M on every worker (permutation = sequential cycling)."""
+    idx = step % table_size
+    ws = []
+    for w in range(workers):
+        accs = [microbatch_tokens(cfg, seed, w, idx * accum + a,
+                                  microbatch, seq)
+                for a in range(accum)]
+        ws.append(jnp.stack(accs))
+    return jnp.stack(ws)     # (W, A, mb, S)
+
+
+def frontend_embeds(cfg: ModelConfig, seed: int, batch: int,
+                    dtype=jnp.float32):
+    """STUB modality frontend: pre-computed patch/frame embeddings with the
+    statistics of a trained encoder output (unit-RMS, correlated)."""
+    if not (cfg.frontend and cfg.frontend_tokens):
+        return None
+    k = _key(seed, 999)
+    base = jax.random.normal(k, (batch, cfg.frontend_tokens, cfg.d_model),
+                             dtype)
+    # smooth across tokens (neighbouring patches correlate)
+    sm = 0.5 * base + 0.5 * jnp.roll(base, 1, axis=1)
+    return sm
+
+
+def eval_batch(cfg: ModelConfig, seed: int, batch: int, seq: int):
+    """Held-out batch (indices offset far from the training table)."""
+    return microbatch_tokens(cfg, seed, worker=10_000, index=0,
+                             batch=batch, seq=seq)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True against the
+ref.py oracles):
+
+  vr_update/       fused CentralVR/SAGA update (the paper's hot loop)
+  flash_attention/ causal GQA flash attention (online softmax, windows)
+  rmsnorm/         fused RMSNorm
+  ssd_scan/        fused Mamba2 SSD chunk scan (state in VMEM scratch)
+"""

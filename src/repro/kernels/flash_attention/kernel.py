@@ -1,0 +1,122 @@
+"""Causal GQA flash attention, Pallas TPU kernel (forward).
+
+TPU adaptation of the flash algorithm: the grid's LAST dimension iterates
+kv blocks SEQUENTIALLY per (head, q-block) — TPU grids execute in order on
+a core, so the online-softmax running state lives in VMEM scratch across
+grid steps instead of a CUDA thread-block register file. Block shapes keep
+the MXU busy ((q_blk, hd) x (hd, kv_blk) matmuls with hd=64..256) and the
+working set in VMEM:
+
+    q tile (q_blk, hd) + k/v tiles (kv_blk, hd) + scratch (q_blk, kv_blk)
+    ~ (128*256 + 2*128*256 + 128*128) * 4B ~ 0.5 MiB  << ~16 MiB VMEM.
+
+GQA: the grid runs per Q head; the k/v BlockSpec index_map folds the
+q-head -> kv-head mapping (h // group) so no kv replication is
+materialized in HBM. Sliding windows mask inside the same kernel — this is
+what serves the dense archs' ``long_500k`` variant.
+
+The pure-jnp oracle is models/attention.chunked_attention (itself checked
+against the naive quadratic reference).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  q_blk: int, kv_blk: int, nk: int, scale: float,
+                  window, seq_len: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # (q_blk, hd)
+    k = k_ref[0]                                   # (kv_blk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (q_blk, kv_blk)
+
+    q_pos = qi * q_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = kj * kv_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jax.lax.dot_general(
+                        p.astype(v_ref.dtype), v_ref[0],
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, window=None, q_blk: int = 128,
+                    kv_blk: int = 128, interpret: bool = False):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd). Causal.
+
+    S must be a multiple of the block sizes (ops.py pads otherwise).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q_blk = min(q_blk, S)
+    kv_blk = min(kv_blk, S)
+    nq, nk = S // q_blk, S // kv_blk
+    assert nq * q_blk == S and nk * kv_blk == S
+
+    # layout: heads major so one grid row streams one head's sequence
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+
+    def kv_row(bh):                 # q row (b*H + h) -> kv row (b*KV + h//G)
+        return (bh // H) * KV + (bh % H) // G
+
+    grid = (B * H, nq, nk)
+    fn = pl.pallas_call(
+        functools.partial(_flash_kernel, q_blk=q_blk, kv_blk=kv_blk, nk=nk,
+                          scale=1.0 / (hd ** 0.5), window=window,
+                          seq_len=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_blk, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_blk, hd),
+                         lambda bh, qi, kj: (kv_row(bh), kj, 0)),
+            pl.BlockSpec((1, kv_blk, hd),
+                         lambda bh, qi, kj: (kv_row(bh), kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, hd),
+                               lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    out = fn(qh, kh, vh)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,34 @@
+"""jit'd wrapper: pads sequence to block multiples, dispatches the kernel.
+
+On-TPU this is the drop-in replacement for
+``models.attention.chunked_attention``; the container validates it with
+``interpret=True`` (Pallas executes the kernel body on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "q_blk", "kv_blk", "interpret"))
+def flash_attention(q, k, v, *, window=None, q_blk: int = 128,
+                    kv_blk: int = 128, interpret: bool = False):
+    B, S, H, hd = q.shape
+    q_blk = min(q_blk, S)
+    kv_blk = min(kv_blk, S)
+    blk = max(q_blk, kv_blk)
+    pad = (-S) % blk
+    if pad:
+        zq = jnp.zeros((B, pad, H, hd), q.dtype)
+        zk = jnp.zeros((B, pad, k.shape[2], hd), k.dtype)
+        q = jnp.concatenate([q, zq], axis=1)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zk], axis=1)
+    out = kernel.flash_attention(q, k, v, window=window, q_blk=q_blk,
+                                 kv_blk=kv_blk, interpret=interpret)
+    return out[:, :S]

@@ -1,0 +1,14 @@
+"""Oracle for the flash kernel: the pure-jnp chunked implementation (which
+tests verify against the naive quadratic reference), re-exported with the
+kernel's exact signature."""
+from __future__ import annotations
+
+from repro.models.attention import chunked_attention, naive_attention
+
+
+def flash_attention_ref(q, k, v, *, window=None):
+    return chunked_attention(q, k, v, window=window, q_chunk=64, kv_chunk=64)
+
+
+def flash_attention_naive(q, k, v, *, window=None):
+    return naive_attention(q, k, v, window=window)

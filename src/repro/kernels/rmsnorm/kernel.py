@@ -1,0 +1,44 @@
+"""Fused RMSNorm Pallas kernel (TPU target).
+
+Every block in the zoo runs 2 RMSNorms per layer on the residual stream;
+unfused, XLA emits square -> reduce -> rsqrt -> mul as separate HBM passes
+over a (tokens, d_model) tensor. The fused kernel reads x once per tile
+and writes y once: tiles are (rows_blk, d) — the full feature dim stays
+resident so the row reduction happens in VMEM in one pass.
+
+VMEM: rows_blk=256, d=8192 (largest arch) f32 -> 8 MiB in+out tiles; ops.py
+drops rows_blk to fit smaller d or tighter budgets.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x2d, scale, *, eps: float = 1e-6, rows_blk: int = 256,
+            interpret: bool = False):
+    """x2d: (rows, d) with rows % rows_blk == 0 (ops.py pads)."""
+    rows, d = x2d.shape
+    assert rows % rows_blk == 0, (rows, rows_blk)
+    fn = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // rows_blk,),
+        in_specs=[
+            pl.BlockSpec((rows_blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x2d.dtype),
+        interpret=interpret,
+    )
+    return fn(x2d, scale)

@@ -1,0 +1,25 @@
+"""jit'd wrapper: reshapes (..., d) to rows, pads, dispatches the kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, interpret: bool = False):
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    rows = x2.shape[0]
+    # pick rows_blk: <=256, divides padded rows, tile <= ~8 MiB
+    rows_blk = max(min(256, 8 * 1024 * 1024 // (4 * d)), 8)
+    pad = (-rows) % rows_blk
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, d), x.dtype)])
+    y = kernel.rmsnorm(x2, scale, eps=eps, rows_blk=rows_blk,
+                       interpret=interpret)
+    return y[:rows].reshape(shape)

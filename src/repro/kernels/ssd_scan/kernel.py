@@ -1,0 +1,103 @@
+"""Fused SSD (Mamba2) chunk-scan kernel — Pallas, TPU target.
+
+The SSD block is mamba2's entire compute; its chunked form is a sequence
+of small dense ops per chunk (cumsum, two (Q,Q)/(Q,N) matmuls, decay
+masks, state update) that XLA executes as ~10 separate HBM-visiting
+fusions per chunk (the dominant memory term of the mamba2 rows in
+§Roofline). This kernel fuses one (batch, head) chunk STEP into a single
+VMEM-resident body and carries the (P, N) recurrent state in scratch
+across the sequential chunk grid dimension — the same grid idiom as the
+flash kernel (TPU grids execute the last dim in order).
+
+Per-block working set (Q=64, N=128, P=64, f32):
+    x (Q,P) + B,C (Q,N) + decay (Q,Q) + state (P,N) + y (Q,P)
+    ~ (4096 + 2*8192 + 4096 + 8192 + 4096) * 4 B ~ 150 KiB  << VMEM.
+
+Oracle: repro.models.ssm._ssd_chunked (itself verified against the naive
+sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(la_ref, x_ref, b_ref, c_ref, y_ref, h_scr, *, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    la = la_ref[0, 0].astype(jnp.float32)           # (Q,)
+    x = x_ref[0, 0].astype(jnp.float32)             # (Q, P)
+    B = b_ref[0, 0].astype(jnp.float32)             # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)             # (Q, N)
+    Q = la.shape[0]
+
+    L = jnp.cumsum(la)                              # (Q,)
+    # intra-chunk dual form
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(jnp.minimum(L[:, None] - L[None, :], 0.0))
+    w = jnp.where(jj <= ii, scores * decay, 0.0)
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: y += exp(L) * (C @ h^T)
+    h = h_scr[...]                                  # (P, N)
+    y = y + jnp.exp(L)[:, None] * jax.lax.dot_general(
+        C, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    # state update: h' = exp(tot) h + x^T @ (B * exp(tot - L))
+    tot = L[Q - 1]
+    dte = jnp.exp(tot - L)                          # (Q,)
+    cs = jax.lax.dot_general(x, B * dte[:, None], (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (P, N)
+    h_scr[...] = h * jnp.exp(tot) + cs
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(la, x, Bc, Cc, *, chunk: int, interpret: bool = False):
+    """la: (BH, S) log-decay; x: (BH, S, P) discretized input;
+    Bc, Cc: (BH_kv, S, N) with BH = B*H rows mapping to BH_kv = B rows
+    (B/C shared across heads). Returns y: (BH, S, P).
+
+    S must be a multiple of chunk (ops.py pads). Heads-share mapping:
+    row bh of la/x uses row bh // H of Bc/Cc, with H = BH // BH_kv.
+    """
+    BH, S = la.shape
+    P = x.shape[-1]
+    N = Bc.shape[-1]
+    Hgroup = BH // Bc.shape[0]
+    assert S % chunk == 0
+    nc = S // chunk
+
+    la3 = la.reshape(BH, nc, chunk)
+    x3 = x.reshape(BH, nc, chunk, P)
+    b3 = Bc.reshape(Bc.shape[0], nc, chunk, N)
+    c3 = Cc.reshape(Cc.shape[0], nc, chunk, N)
+
+    fn = pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=nc),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, P), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bh, ci: (bh // Hgroup, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bh, ci: (bh // Hgroup, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P),
+                               lambda bh, ci: (bh, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nc, chunk, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )
+    y = fn(la3, x3, b3, c3)
+    return y.reshape(BH, S, P)

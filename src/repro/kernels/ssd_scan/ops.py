@@ -1,0 +1,36 @@
+"""jit'd wrapper for the fused SSD chunk-scan kernel: model-layout
+adapter + sequence padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A_log, Bc, Cc, *, chunk: int = 64,
+             interpret: bool = False):
+    """Model-layout entry: x (B,S,H,P), dt (B,S,H), A_log (H,),
+    Bc/Cc (B,S,N) -> y (B,S,H,P). Zero initial state."""
+    B_, S, H, P = x.shape
+    N = Bc.shape[-1]
+    la = (-jnp.exp(A_log.astype(jnp.float32))[None, None, :]
+          * dt.astype(jnp.float32))
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    pad = (-S) % chunk
+    if pad:
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    la_f = la.transpose(0, 2, 1).reshape(B_ * H, Sp)
+    x_f = xdt.transpose(0, 2, 1, 3).reshape(B_ * H, Sp, P)
+    y = kernel.ssd_scan(la_f, x_f, Bc.astype(jnp.float32),
+                        Cc.astype(jnp.float32), chunk=chunk,
+                        interpret=interpret)
+    y = y.reshape(B_, H, Sp, P).transpose(0, 2, 1, 3)
+    return y[:, :S]

@@ -1,0 +1,30 @@
+"""Oracle for the SSD chunk-scan kernel: the pure-jnp chunked SSD from the
+model (itself verified against the naive sequential recurrence)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import _ssd_chunked
+
+
+def ssd_scan_ref(la, x, Bc, Cc, *, chunk: int):
+    """Same flat signature as the kernel: la (BH,S), x (BH,S,P),
+    Bc/Cc (B,S,N) with heads grouped."""
+    BH, S = la.shape
+    P = x.shape[-1]
+    B_, N = Bc.shape[0], Bc.shape[-1]
+    H = BH // B_
+    # reshape to the model layout (B, S, H, P)
+    x4 = x.reshape(B_, H, S, P).transpose(0, 2, 1, 3)
+    la4 = la.reshape(B_, H, S).transpose(0, 2, 1)
+    # _ssd_chunked takes dt & A_log; reconstruct via la = a*dt with a=-1,
+    # dt=-la  and x_in*dt = x  =>  pass x/dt with dt=-la... simpler: use
+    # dt=1, A_log chosen per-step impossible. Instead call with
+    # dt = -la (>0) and A_log = 0 => a = -1 => a*dt = la. x must then be
+    # divided by dt before the call since _ssd_chunked multiplies by dt.
+    dt = -la4
+    safe = jnp.maximum(dt, 1e-30)
+    x_div = x4 / safe[..., None]
+    y, _ = _ssd_chunked(x_div, dt, jnp.zeros((H,)), Bc, Cc,
+                        jnp.zeros((B_, H, P, N)), chunk)
+    return y.transpose(0, 2, 1, 3).reshape(BH, S, P)

@@ -1,0 +1,56 @@
+"""jit'd public wrapper: pytree-level fused VR update.
+
+Flattens the param pytree into one contiguous stream per buffer, pads to
+the kernel tile, runs the fused kernel, and unflattens — one kernel launch
+per training step regardless of tree structure.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vr_update import kernel
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    return flat, leaves, treedef
+
+
+def _unflatten(flat, leaves, treedef, dtype=None):
+    out = []
+    o = 0
+    for l in leaves:
+        chunk = flat[o:o + l.size].reshape(l.shape)
+        out.append(chunk.astype(dtype or l.dtype))
+        o += l.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "m", "saga", "interpret"))
+def vr_update(x_tree, g_tree, gold_tree, gbar_tree, gtilde_tree, *,
+              eta: float, m: int, saga: bool = False,
+              interpret: bool = False):
+    """Returns (x', table', gtilde', gbar') as pytrees like the inputs."""
+    x, x_leaves, treedef = _flatten(x_tree)
+    g = _flatten(g_tree)[0]
+    gold = _flatten(gold_tree)[0]
+    gbar = _flatten(gbar_tree)[0]
+    gtilde = _flatten(gtilde_tree)[0]
+    n = x.shape[0]
+    pad = (-n) % kernel.TILE
+    if pad:
+        z = jnp.zeros((pad,), jnp.float32)
+        x, g, gold, gbar, gtilde = (jnp.concatenate([t, z])
+                                    for t in (x, g, gold, gbar, gtilde))
+    xo, tbl, gto, gbo = kernel.vr_update_flat(
+        x, g, gold, gbar, gtilde, eta=eta, m=m, saga=saga,
+        interpret=interpret)
+    return (_unflatten(xo[:n], x_leaves, treedef),
+            _unflatten(tbl[:n], x_leaves, treedef, jnp.float32),
+            _unflatten(gto[:n], x_leaves, treedef, jnp.float32),
+            _unflatten(gbo[:n], x_leaves, treedef, jnp.float32))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused VR update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def vr_update_ref(x, g, g_old, gbar, gtilde, *, eta: float, m: int,
+                  saga: bool = False):
+    v = g - g_old + gbar
+    x_new = (x.astype(jnp.float32) - eta * v).astype(x.dtype)
+    table_new = g
+    gtilde_new = gtilde + g / m
+    gbar_new = gbar + (g - g_old) / m if saga else gbar
+    return x_new, table_new, gtilde_new, gbar_new

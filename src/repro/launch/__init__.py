@@ -1,0 +1,3 @@
+# NOTE: launch.dryrun must be executed as a script/module entry point so its
+# XLA_FLAGS device-count override precedes jax init; do not import it here.
+from repro.launch import mesh  # noqa: F401

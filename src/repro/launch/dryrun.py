@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init). This file is the ONLY place the 512-device placeholder platform
+#   is forced; tests and benches see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, WITHOUT allocating any model memory
+(ShapeDtypeStruct stand-ins).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 x pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multipod
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+        --shape train_4k --mesh pod [--paper-mode]
+
+Per combo it records memory_analysis / cost_analysis / parsed collective
+bytes to results/dryrun/<mesh>/<arch>__<shape>[__paper].json; the roofline
+report (benchmarks/roofline_report.py, EXPERIMENTS.md §Roofline) reads
+those files.
+
+Baseline configuration (the 40-row table): the DEPLOYABLE config —
+CentralVR as optimizer (table M=4 below 20B params, SVRG above), FSDP
+sharding, SGD base step; on the multi-pod mesh the CentralVR workers are
+the two pods (hierarchical mode: the paper's epoch-boundary exchange rides
+the slow cross-pod links). --paper-mode instead replicates params along
+the data axes with one CentralVR worker per data-axis group (Algorithm 2's
+literal memory model) — it OOMs for the largest archs, which is part of
+the §Perf story.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+
+def _combo_tcfg(cfg, shape, paper_mode: bool):
+    from repro.config import TrainConfig
+    big = cfg.param_count() > 2e10
+    return TrainConfig(
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        microbatch=1,
+        optimizer="sgd",
+        vr="svrg" if big else "centralvr",
+        vr_table_size=4,
+        local_epoch=1,
+        remat="block",
+        dp_replicated=paper_mode,
+    )
+
+
+def _arch_window(cfg, shape):
+    """long_500k on quadratic-attention archs uses the sliding-window
+    variant (window 4096) — the one sanctioned fallback (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return 4096
+    return None
+
+
+def input_shapes_for(cfg, shape, W: int, accum: int, mb: int):
+    """Abstract batch arrays for the train path: (W, A, mb, S[-S_f])."""
+    import jax
+    import jax.numpy as jnp
+
+    S = shape.seq_len
+    n_f = cfg.frontend_tokens if cfg.frontend else 0
+    toks = jax.ShapeDtypeStruct((W, accum, mb, S - n_f), jnp.int32)
+    fe = (jax.ShapeDtypeStruct((W, accum, mb, n_f, cfg.d_model),
+                               jnp.bfloat16) if n_f else None)
+    return toks, fe
+
+
+def run_combo(arch: str, shape_name: str, mesh_name: str,
+              paper_mode: bool = False, out_dir: str = "results/dryrun",
+              optimized: bool = False, dump_hlo: str = ""):
+    """optimized=True applies the beyond-paper sharding/layout wins from
+    the §Perf hillclimb (EXPERIMENTS.md): TP head padding, serving without
+    FSDP (bf16 replicated-over-data weights), prefill activation pinning,
+    decode KV-cache slot sharding over 'model'."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.config import INPUT_SHAPES, get_arch
+    from repro.launch import mesh as meshlib
+    from repro.models import model as modellib
+    from repro.roofline import analysis
+    from repro.sharding import specs
+    from repro.train import step as tstep
+
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    window = _arch_window(cfg, shape)
+    if window is not None:
+        cfg = dataclasses.replace(cfg, sliding_window=window)
+    if optimized and any(k in ("attn", "local") for k in cfg.layer_kinds())             and cfg.num_heads % 16:
+        cfg = dataclasses.replace(
+            cfg, pad_heads_to=((cfg.num_heads + 15) // 16) * 16)
+
+    mesh = meshlib.make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "paper_mode": paper_mode, "chips": int(chips),
+              "window": window, "optimized": optimized,
+              "pad_heads_to": cfg.pad_heads_to}
+
+    if shape.mode == "train":
+        if optimized:
+            # bf16 masters + bf16 VR state: halves FSDP gather traffic
+            # (incl. the SVRG snapshot pass) and VR memory (§Perf It.6)
+            cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+        tcfg = _combo_tcfg(cfg, shape, paper_mode)
+        vr_workers = ("data" if paper_mode else
+                      ("pod" if mesh_name == "multipod" else "none"))
+        train_step, meta = tstep.make_train_step(cfg, tcfg, mesh, vr_workers)
+        W = meta["workers"]
+        # microbatch = product of data axes NOT used as worker axes (each
+        # device holds 1 sequence per microbatch step); accum covers the rest
+        sizes = meshlib.mesh_axis_sizes(mesh)
+        w_axes = meshlib.worker_axes(mesh, vr_workers) if tcfg.vr != "none" else ()
+        R = 1
+        for a in ("pod", "data"):
+            if a in sizes and a not in w_axes:
+                R *= sizes[a]
+        mb = min(R, max(shape.global_batch // W, 1))
+        accum = max(shape.global_batch // (W * mb), 1)
+        state_shapes = tstep.eval_shape_train_state(cfg, tcfg, W)
+        sh = tstep.state_shardings(state_shapes, cfg, tcfg, mesh, vr_workers)
+        toks, fe = input_shapes_for(cfg, shape, W, accum, mb)
+        if W == 1:
+            toks = jax.ShapeDtypeStruct(toks.shape[1:], toks.dtype)
+            fe = (jax.ShapeDtypeStruct(fe.shape[1:], fe.dtype)
+                  if fe is not None else None)
+        bsh = tstep.batch_sharding(mesh, tcfg, vr_workers,
+                                   with_fe=fe is not None)
+        args = (state_shapes, toks) + ((fe,) if fe is not None else ())
+        in_sh = (sh, bsh["tokens"]) + ((bsh["fe"],) if fe is not None else ())
+        fn = jax.jit(train_step, in_shardings=in_sh,
+                     out_shardings=(sh, None))
+        record.update(workers=W, accum=accum, microbatch=mb, vr=tcfg.vr,
+                      comm_every=meta["comm_every"])
+        grads_per_step = meta["grads_per_step"]
+        mode = "train"
+    else:
+        # Serving (optimized): no FSDP — weights replicated over 'data',
+        # TP over 'model', stored bf16 (no optimizer states exist to
+        # justify f32); §Perf #3 measured FSDP per-token gathers dominating
+        # decode otherwise.
+        serve_fsdp = not paper_mode and not optimized
+        if optimized:
+            cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+        n_f = cfg.frontend_tokens if cfg.frontend else 0
+        B = shape.global_batch
+        data_ok = B % 16 == 0
+        dspec = ("data" if data_ok else None)
+        act_sh = (NamedSharding(mesh, P(dspec, None, None))
+                  if optimized and data_ok else None)
+        serve_step, serve_prefill = tstep.make_serve_step(
+            cfg, act_sharding=act_sh)
+        if shape.mode == "prefill":
+            toks = jax.ShapeDtypeStruct((B, shape.seq_len - n_f), jnp.int32)
+            fe = (jax.ShapeDtypeStruct((B, n_f, cfg.d_model), jnp.bfloat16)
+                  if n_f else None)
+            params_shapes = jax.eval_shape(
+                lambda: modellib.init_params(cfg, jax.random.PRNGKey(0)))
+            psh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                specs.tree_specs(params_shapes, cfg, fsdp=serve_fsdp,
+                                 axis_sizes=meshlib.mesh_axis_sizes(mesh)))
+            tsh = NamedSharding(mesh, P(dspec, None))
+            args = (params_shapes, toks) + ((fe,) if fe is not None else ())
+            in_sh = (psh, tsh) + (
+                (NamedSharding(mesh, P(dspec, None, None)),)
+                if fe is not None else ())
+            fn = jax.jit(serve_prefill, in_shardings=in_sh)
+        else:
+            cache_len = shape.seq_len
+            params_shapes = jax.eval_shape(
+                lambda: modellib.init_params(cfg, jax.random.PRNGKey(0)))
+            cache_shapes = jax.eval_shape(
+                lambda: modellib.init_cache(cfg, B, cache_len))
+            psh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                specs.tree_specs(params_shapes, cfg, fsdp=serve_fsdp,
+                                 axis_sizes=meshlib.mesh_axis_sizes(mesh)))
+
+            def cspec(path, leaf):   # batch over data when divisible;
+                # optimized: attention cache SLOTS over 'model' (flash-
+                # decode style partial softmax) when they divide
+                ps = specs._path_str(path)
+                n_lead = 1 if "stack" in ps else 0
+                rest = leaf.ndim - n_lead - 1
+                dims = [dspec] + [None] * rest
+                if (optimized and rest >= 2
+                        and leaf.shape[n_lead + 1] % 16 == 0):
+                    dims[1] = "model"
+                return NamedSharding(mesh, P(*([None] * n_lead), *dims))
+
+            csh = jax.tree_util.tree_map_with_path(cspec, cache_shapes)
+            tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            args = (params_shapes, tok, cache_shapes, pos)
+            in_sh = (psh, NamedSharding(mesh, P(dspec, None)), csh,
+                     NamedSharding(mesh, P()))
+            fn = jax.jit(serve_step, in_shardings=in_sh,
+                         out_shardings=(None, csh))
+        grads_per_step = 1
+        mode = shape.mode
+        record.update(workers=0, vr="none")
+
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    if dump_hlo:
+        with open(dump_hlo, "w") as f:
+            f.write(compiled.as_text())
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    mem_d = {k: getattr(mem, k) for k in
+             ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes")
+             if hasattr(mem, k)}
+    hlo = compiled.as_text()
+    roof = analysis.analyze(cfg, shape, mode, mesh_name, chips,
+                            cost or {}, hlo, mem_d,
+                            grads_per_step=grads_per_step)
+    record.update(
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        cost={k: float(v) for k, v in (cost or {}).items()
+              if k in ("flops", "bytes accessed", "transcendentals")},
+        memory=mem_d, roofline=roof.to_dict(),
+        hlo_bytes=len(hlo))
+
+    suffix = "__paper" if paper_mode else ""
+    mesh_dir = mesh_name + ("_opt" if optimized else "")
+    path = os.path.join(out_dir, mesh_dir,
+                        f"{arch}__{shape_name}{suffix}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    print(f"OK  {arch:20s} {shape_name:12s} {mesh_name:8s}"
+          f"{' paper' if paper_mode else ''}  "
+          f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
+          f"bottleneck={roof.bottleneck}  "
+          f"Tc={roof.t_compute*1e3:.1f}ms Tm={roof.t_memory*1e3:.1f}ms "
+          f"Tx={roof.t_collective*1e3:.2f}ms")
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--paper-mode", action="store_true")
+    ap.add_argument("--optimized", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    from repro.config import INPUT_SHAPES, list_archs
+
+    if args.all:
+        combos = [(a, s) for a in list_archs() for s in INPUT_SHAPES]
+    else:
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    mesh_dir = args.mesh + ("_opt" if args.optimized else "")
+    for arch, shape in combos:
+        suffix = "__paper" if args.paper_mode else ""
+        path = os.path.join(args.out, mesh_dir, f"{arch}__{shape}{suffix}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"SKIP {arch} {shape} (exists)")
+            continue
+        try:
+            run_combo(arch, shape, args.mesh, args.paper_mode, args.out,
+                      optimized=args.optimized)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch} {shape}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall combos compiled")
+
+
+if __name__ == "__main__":
+    main()

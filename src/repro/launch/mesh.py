@@ -1,0 +1,62 @@
+"""Mesh construction. IMPORTANT: functions, never module-level constants —
+importing this module must not touch jax device state (the dry-run forces a
+512-device host platform and must do so before any jax initialization).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment: one v5e pod = (data=16, model=16) = 256 chips;
+    two pods add a leading 'pod' axis = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def make_test_mesh(devices: Optional[int] = None,
+                   model_axis: int = 2):
+    """Small mesh over whatever devices exist (tests force 8 host devices
+    via a subprocess; plain test runs see (1, 1))."""
+    n = devices or len(jax.devices())
+    model = model_axis if n % model_axis == 0 and n > 1 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def worker_axes(mesh, vr_workers: str) -> Tuple[str, ...]:
+    """Which mesh axes carry CentralVR worker copies.
+
+    'data' — paper-faithful: one worker per data-axis group (params
+             replicated along these axes), includes 'pod' when present.
+    'pod'  — hierarchical (optimized): workers across pods, FSDP inside.
+    'none' — plain data-parallel (no VR worker copies).
+    """
+    names = mesh.axis_names
+    if vr_workers == "none":
+        return ()
+    if vr_workers == "pod":
+        return ("pod",) if "pod" in names else ()
+    if vr_workers == "data":
+        return tuple(a for a in ("pod", "data") if a in names)
+    raise ValueError(vr_workers)
+
+
+def worker_count(mesh, vr_workers: str) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    n = 1
+    for a in worker_axes(mesh, vr_workers):
+        n *= sizes[a]
+    return max(n, 1)

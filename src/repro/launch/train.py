@@ -1,0 +1,73 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
+        --steps 100 --vr centralvr --workers data
+
+On the production mesh this is the same entry point with --mesh production
+(requires 256/512 real devices); the CPU container uses the default
+single-device mesh with reduced configs.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-smoke reduced variant")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--vr", default="centralvr",
+                    choices=["none", "centralvr", "svrg", "saga"])
+    ap.add_argument("--vr-table-size", type=int, default=8)
+    ap.add_argument("--local-epoch", type=int, default=1)
+    ap.add_argument("--workers", default="none",
+                    choices=["none", "data", "pod"])
+    ap.add_argument("--dp-replicated", action="store_true")
+    ap.add_argument("--mesh", default="test", choices=["test", "production",
+                                                       "production-multipod"])
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    from repro.config import TrainConfig, get_arch
+    from repro.launch import mesh as meshlib
+    from repro.train import loop
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        microbatch=args.microbatch, learning_rate=args.lr,
+        optimizer=args.optimizer, vr=args.vr,
+        vr_table_size=args.vr_table_size, local_epoch=args.local_epoch,
+        dp_replicated=args.dp_replicated, seed=args.seed)
+    if args.mesh == "production":
+        mesh = meshlib.make_production_mesh()
+    elif args.mesh == "production-multipod":
+        mesh = meshlib.make_production_mesh(multi_pod=True)
+    else:
+        mesh = meshlib.make_test_mesh()
+
+    res = loop.run_training(
+        cfg, tcfg, steps=args.steps, mesh=mesh, vr_workers=args.workers,
+        checkpoint_path=args.checkpoint or None,
+        checkpoint_every=args.checkpoint_every)
+    print(f"done: {res.steps} steps in {res.wall_time:.1f}s; "
+          f"final train loss {res.losses[-1]:.4f}; "
+          f"eval loss {res.final_eval_loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Architecture zoo: unified decoder stack covering dense / MoE / SSM /
+hybrid / VLM-stub / audio-stub families (see repro/configs)."""
+from repro.models import attention, layers, model, moe, rglru, ssm, transformer  # noqa: F401

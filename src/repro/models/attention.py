@@ -1,0 +1,225 @@
+"""GQA attention: chunked (flash-style) causal attention for train/prefill,
+single-token KV-cache attention for decode.
+
+The chunked implementation is the pure-JAX analogue of the Pallas flash
+kernel in ``repro/kernels/flash_attention`` (which uses it as its oracle):
+an outer scan over query chunks and an inner scan over kv chunks carrying
+the online-softmax statistics, so peak memory is O(chunk^2) per (batch,
+head) instead of O(S^2). Sliding-window masking folds into the same chunk
+mask, which is how the dense archs run the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init_attn(cfg: ModelConfig, key, dtype, *, window: int = 0):
+    d, KV, hd = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    H = cfg.padded_heads        # physical heads (>= logical num_heads)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers._dense_init(ks[0], (d, H, hd), d, dtype),
+        "wk": layers._dense_init(ks[1], (d, KV, hd), d, dtype),
+        "wv": layers._dense_init(ks[2], (d, KV, hd), d, dtype),
+        "wo": layers._dense_init(ks[3], (H, hd, d), H * hd, dtype),
+    }
+    if H != cfg.num_heads:      # zero the padded heads (kept inert by the
+        mask = (jnp.arange(H) < cfg.num_heads).astype(dtype)   # output mask)
+        p["wq"] = p["wq"] * mask[None, :, None]
+        p["wo"] = p["wo"] * mask[:, None, None]
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = layers.rms_norm_1d(p["q_norm"], q)
+        k = layers.rms_norm_1d(p["k_norm"], k)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, window: Optional[int] = None,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      softcap: Optional[float] = None):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd); returns (B, S, H, hd).
+
+    Causal; optional sliding window (key j visible to query i iff
+    i - window < j <= i). Online softmax over kv chunks.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq, nk = S // q_chunk, S // kv_chunk
+    assert nq * q_chunk == S and nk * kv_chunk == S, (S, q_chunk, kv_chunk)
+
+    qs = q.reshape(B, nq, q_chunk, KV, G, hd)
+    ks = k.reshape(B, nk, kv_chunk, KV, hd)
+    vs = v.reshape(B, nk, kv_chunk, KV, hd)
+    acc_t = jnp.promote_types(q.dtype, jnp.float32)  # f32 acc (f64 under x64)
+    scale = (1.0 / jnp.sqrt(hd)).astype(acc_t)
+
+    q_pos = jnp.arange(S).reshape(nq, q_chunk)
+    k_pos = jnp.arange(S).reshape(nk, kv_chunk)
+
+    def q_block(qi, q_blk):
+        # online softmax over kv chunks
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            k_blk, v_blk, kp = inputs
+            s = jnp.einsum("bqkgh,bckh->bqkgc", q_blk, k_blk,
+                           preferred_element_type=acc_t) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            qp = q_pos[qi][:, None]                       # (q_chunk, 1)
+            mask = kp[None, :] <= qp
+            if window is not None:
+                mask &= kp[None, :] > (qp - window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckh->bqkgh", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=acc_t)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, q_chunk, KV, G), NEG_INF, acc_t)
+        l0 = jnp.zeros((B, q_chunk, KV, G), acc_t)
+        a0 = jnp.zeros((B, q_chunk, KV, G, hd), acc_t)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks.swapaxes(0, 1), vs.swapaxes(0, 1), k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (jnp.arange(nq), qs.swapaxes(0, 1)))
+    out = out.swapaxes(0, 1).reshape(B, S, H, hd)
+    return out
+
+
+def _head_mask(cfg: ModelConfig, out):
+    """Zero the padded heads so they are exactly inert: their (uniform-
+    softmax) outputs never reach wo and no gradient flows into their rows."""
+    H = cfg.padded_heads
+    if H == cfg.num_heads:
+        return out
+    mask = (jnp.arange(H) < cfg.num_heads).astype(out.dtype)
+    return out * mask[..., :, None]
+
+
+def attend_train(p, cfg: ModelConfig, x, *, window: Optional[int] = None,
+                 q_chunk: int = 512, kv_chunk: int = 512):
+    """Full block for train/prefill: project, chunked attention, out-proj."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    w = window if window is not None else cfg.sliding_window
+    out = chunked_attention(q, k, v, window=w, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk,
+                            softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", _head_mask(cfg, out), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+               *, window: Optional[int] = None):
+    """Cache for one attention layer. Window (or hybrid-local) layers use a
+    ring buffer of size window; full attention keeps max_len slots."""
+    w = window if window is not None else cfg.sliding_window
+    slots = min(max_len, w) if w else max_len
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, slots, KV, hd), dtype),
+        "v": jnp.zeros((batch, slots, KV, hd), dtype),
+    }
+
+
+def attend_decode(p, cfg: ModelConfig, x, cache, pos, *,
+                  window: Optional[int] = None):
+    """x: (B, 1, d); pos: scalar current position. Returns (out, new_cache).
+
+    The cache is a ring buffer when windowed: slot = pos % slots.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    slots = cache["k"].shape[1]
+    slot = pos % slots
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, 1)
+
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    G = cfg.padded_heads // KV
+    qh = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bckh->bkgc", qh, k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(hd)
+    if cfg.attn_logit_softcap:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    # valid slots: ring position c holds absolute index; with sequential
+    # decode, slots filled so far = min(pos+1, slots)
+    c_idx = jnp.arange(slots)
+    valid = c_idx < jnp.minimum(pos + 1, slots)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgc,bckh->bkgh", w, v_cache)
+    out = out.reshape(B, 1, cfg.padded_heads, hd)
+    y = jnp.einsum("bshk,hkd->bsd", _head_mask(cfg, out), p["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Naive reference (small shapes only; used by tests)
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, window: Optional[int] = None,
+                    softcap: Optional[float] = None):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgh,bckh->bqkgc", qh, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = j <= i
+    if window is not None:
+        mask &= j > (i - window)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)

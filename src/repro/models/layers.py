@@ -1,0 +1,130 @@
+"""Shared layer primitives: norms, MLPs, rotary embeddings, initializers.
+
+Pure-functional style: params are plain pytrees (nested dicts of arrays);
+``init_*`` builds them, ``apply_*`` consumes them. No framework dependency —
+this keeps pjit/shard_map sharding rules a simple path-pattern match
+(see repro/sharding/specs.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / jnp.sqrt(in_axis_size)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dtype):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p, x, norm_type: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mean = xf.mean(-1, keepdims=True)
+        var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_1d(scale, x, eps: float = 1e-6):
+    """RMSNorm over the last axis with a free-standing scale (qk_norm etc.)."""
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff: int = 0):
+    d, ff = cfg.d_model, (d_ff or cfg.d_ff)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wg": _dense_init(ks[0], (d, ff), d, dtype),
+            "wu": _dense_init(ks[1], (d, ff), d, dtype),
+            "wd": _dense_init(ks[2], (ff, d), ff, dtype),
+        }
+    p = {
+        "wi": _dense_init(ks[0], (d, ff), d, dtype),
+        "wo": _dense_init(ks[1], (ff, d), ff, dtype),
+    }
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((ff,), dtype)
+        p["bo"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_mlp(p, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+        return h @ p["wd"]
+    h = x @ p["wi"]
+    if "bi" in p:
+        h = h + p["bi"]
+    h = jax.nn.gelu(h)
+    h = h @ p["wo"]
+    if "bo" in p:
+        h = h + p["bo"]
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key, dtype):
+    p = {"tok": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model)) * 0.02
+                 ).astype(dtype)}
+    return p
+
+
+def embed_tokens(p, tokens):
+    return p["tok"][tokens]
+
+
+def init_lm_head(cfg: ModelConfig, key, dtype):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": _dense_init(key, (cfg.d_model, cfg.vocab_size), cfg.d_model,
+                             dtype)}
+
+
+def lm_logits(head_p, embed_p, x, tie: bool):
+    if tie:
+        return x @ embed_p["tok"].T.astype(x.dtype)
+    return x @ head_p["w"]

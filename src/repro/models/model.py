@@ -1,0 +1,95 @@
+"""Top-level model API: init / train loss / prefill / decode for every
+architecture in the zoo, including the VLM/audio frontend stubs.
+
+Inputs are batch dicts:
+  train/prefill: {"tokens": (B, S) int32, ["labels": (B, S)],
+                  ["frontend_embeds": (B, S_f, d) — VLM/audio stub]}
+  decode:        {"token": (B, 1) int32, "pos": scalar int32} + cache
+
+For frontend models the total sequence is S_f + S_text; the loss is masked
+over the embedding positions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers, transformer
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_stack, k_head, k_fr = jax.random.split(key, 4)
+    p = {
+        "embed": layers.init_embed(cfg, k_embed, dtype),
+        "layers": transformer.init_stack(cfg, k_stack, dtype),
+        "final_norm": layers.init_norm(cfg, dtype),
+        "head": layers.init_lm_head(cfg, k_head, dtype),
+    }
+    if cfg.frontend is not None:
+        p["frontend_proj"] = layers._dense_init(
+            k_fr, (cfg.d_model, cfg.d_model), cfg.d_model, dtype)
+    return p
+
+
+def _embed_inputs(p, cfg: ModelConfig, batch):
+    compute = jnp.dtype(cfg.dtype)
+    x = layers.embed_tokens(p["embed"], batch["tokens"]).astype(compute)
+    if cfg.frontend is not None and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(compute) @ p[
+            "frontend_proj"].astype(compute)
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def forward(p, cfg: ModelConfig, batch, *, remat: str = "block",
+            window: Optional[int] = None, act_sharding=None):
+    """Full-sequence forward: returns (logits[f32], aux)."""
+    x = _embed_inputs(p, cfg, batch)
+    x, aux = transformer.apply_stack_train(p["layers"], cfg, x, remat=remat,
+                                           window=window,
+                                           act_sharding=act_sharding)
+    x = layers.apply_norm(p["final_norm"], x, cfg.norm_type)
+    logits = layers.lm_logits(p["head"], p["embed"], x, cfg.tie_embeddings)
+    return logits.astype(jnp.float32), aux
+
+
+def loss_fn(p, cfg: ModelConfig, batch, *, remat: str = "block",
+            window: Optional[int] = None, act_sharding=None):
+    """Next-token cross-entropy (+ MoE aux). Labels default to shifted
+    tokens. Frontend positions are excluded from the loss."""
+    logits, aux = forward(p, cfg, batch, remat=remat, window=window,
+                          act_sharding=act_sharding)
+    tokens = batch["tokens"]
+    labels = batch.get("labels")
+    n_f = logits.shape[1] - tokens.shape[1]        # frontend positions
+    if labels is None:
+        labels = tokens[:, 1:]
+        logits_txt = logits[:, n_f:-1] if n_f else logits[:, :-1]
+    else:
+        logits_txt = logits[:, n_f:] if n_f else logits
+    logp = jax.nn.log_softmax(logits_txt, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return transformer.init_stack_cache(cfg, batch, max_len,
+                                        jnp.dtype(cfg.dtype))
+
+
+def decode_step(p, cfg: ModelConfig, token, cache, pos):
+    """token: (B, 1) -> (logits (B, vocab), new_cache)."""
+    compute = jnp.dtype(cfg.dtype)
+    x = layers.embed_tokens(p["embed"], token).astype(compute)
+    x, cache = transformer.apply_stack_decode(p["layers"], cache, cfg, x, pos)
+    x = layers.apply_norm(p["final_norm"], x, cfg.norm_type)
+    logits = layers.lm_logits(p["head"], p["embed"], x, cfg.tie_embeddings)
+    return logits[:, 0].astype(jnp.float32), cache
+
+
+def param_count_actual(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

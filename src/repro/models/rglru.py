@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin [arXiv:2402.19427]).
+
+    r_t = sigmoid(W_a x_t)          recurrence gate (block-diagonal, per head)
+    i_t = sigmoid(W_x x_t)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over time (parallel prefix,
+log-depth — the TPU-native replacement for the paper's linear-scan CUDA
+kernel); decode is the O(1) recurrence.
+
+The full recurrent block is Griffin's: two d->dr branches, branch one goes
+conv1d(4) -> RG-LRU, branch two GeLU; elementwise product, project back.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers
+
+CONV_K = 4
+C_RGLRU = 8.0
+
+
+def init_rglru(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    dr = d                                  # Griffin uses d_rec = d_model
+    H = cfg.rglru_heads or cfg.num_heads
+    hb = dr // H
+    ks = jax.random.split(key, 5)
+    # Lambda init so that a^c in [0.9, 0.999] (paper's init range)
+    u = jax.random.uniform(ks[0], (dr,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / C_RGLRU))  # softplus^-1(-log u / c)
+    return {
+        "wx_in": layers._dense_init(ks[1], (d, dr), d, dtype),
+        "wy_in": layers._dense_init(ks[2], (d, dr), d, dtype),
+        "conv_w": (jax.random.normal(ks[3], (CONV_K, dr)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "wa": (jax.random.normal(ks[4], (H, hb, hb)) / jnp.sqrt(hb)
+               ).astype(dtype),
+        "wi": (jax.random.normal(jax.random.fold_in(ks[4], 1), (H, hb, hb))
+               / jnp.sqrt(hb)).astype(dtype),
+        "lambda": lam.astype(jnp.float32),
+        "out": layers._dense_init(jax.random.fold_in(ks[1], 1), (dr, d), dr,
+                                  dtype),
+    }
+
+
+def _blockdiag(w, x):
+    """x: (..., dr) -> per-head block-diagonal matmul; w: (H, hb, hb)."""
+    H, hb, _ = w.shape
+    xh = x.reshape(*x.shape[:-1], H, hb)
+    yh = jnp.einsum("...hb,hbc->...hc", xh, w)
+    return yh.reshape(*x.shape)
+
+
+def _gates(p, x):
+    """Returns (log_a, gated_input) for the RG-LRU at inputs x (B,S,dr)."""
+    r = jax.nn.sigmoid(_blockdiag(p["wa"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(_blockdiag(p["wi"], x).astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lambda"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * i * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def rglru_scan(p, x):
+    """x: (B, S, dr) -> h: (B, S, dr), h_final. Parallel prefix scan."""
+    log_a, b = _gates(p, x)
+    a = jnp.exp(log_a)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh, hh[:, -1]
+
+
+def rglru_step(p, x, h_prev):
+    """x: (B, 1, dr); O(1) decode step."""
+    log_a, b = _gates(p, x)
+    h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
+    return h[:, None, :], h
+
+
+class RecCache(NamedTuple):
+    conv: jax.Array   # (B, CONV_K-1, dr)
+    h: jax.Array      # (B, dr)
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int, dtype) -> RecCache:
+    dr = cfg.d_model
+    return RecCache(conv=jnp.zeros((batch, CONV_K - 1, dr), dtype),
+                    h=jnp.zeros((batch, dr), jnp.float32))
+
+
+def apply_rec_train(p, cfg: ModelConfig, u):
+    """Griffin recurrent block, full sequence. u: (B, S, d)."""
+    x = u @ p["wx_in"]
+    y = jax.nn.gelu(u @ p["wy_in"])
+    # causal depthwise conv
+    pad = jnp.pad(x, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    x = sum(pad[:, i:i + u.shape[1], :] * p["conv_w"][i]
+            for i in range(CONV_K)) + p["conv_b"]
+    h, _ = rglru_scan(p, x)
+    return (h.astype(u.dtype) * y) @ p["out"]
+
+
+def apply_rec_decode(p, cfg: ModelConfig, u, cache: RecCache):
+    x_new = u @ p["wx_in"]                                 # (B, 1, dr)
+    y = jax.nn.gelu(u @ p["wy_in"])
+    conv_in = jnp.concatenate([cache.conv, x_new], axis=1)
+    x = (sum(conv_in[:, i, :] * p["conv_w"][i] for i in range(CONV_K))
+         + p["conv_b"])[:, None, :]
+    h_seq, h = rglru_step(p, x, cache.h)
+    out = (h_seq.astype(u.dtype) * y) @ p["out"]
+    return out, RecCache(conv=conv_in[:, 1:], h=h)

@@ -1,0 +1,200 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q;
+within a chunk the recurrence is computed in its "dual" quadratic
+attention-like form (MXU-friendly), and a lax.scan over chunks carries the
+(B, H, P, N) recurrent state between chunks — O(S·Q) work, O(S/Q) scan
+steps, exactly the blocked structure the paper uses on GPUs, re-tiled here
+for TPU (chunk dim sized for the MXU, state carried in registers/VMEM).
+
+Decode is the O(1) recurrence h <- a h + dt B x, y = C h + D x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers
+
+CONV_K = 4  # depthwise conv kernel size (Mamba default)
+
+
+def dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    return di, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    di, H, P, N = dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * N + H           # z, x, B, C, dt
+    conv_dim = di + 2 * N                     # conv over (x, B, C)
+    return {
+        "in_proj": layers._dense_init(ks[0], (d, d_in_proj), d, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": layers._dense_init(ks[2], (di, d), di, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, H, P, N = dims(cfg)
+    z, xs, Bc, Cc, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, xs, Bc, Cc, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv, kernel CONV_K. xBC: (B, S, C)."""
+    pad = jnp.pad(xBC, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(CONV_K))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, A_log, Bc, Cc, h0, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); Bc, Cc: (B, S, N); h0: (B, H, P, N).
+    Returns (y: (B, S, H, P), h_final).
+    """
+    B_, S, H, P = x.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:                      # pad to a chunk multiple (zero input,
+        pad = Q - S % Q            # zero log-decay: padding is inert)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    dt = dt.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+    a = -jnp.exp(A_log.astype(jnp.float32))               # (H,) negative
+    la = a[None, None, :] * dt                            # (B, S, H) log-decay
+    xdt = (x.astype(jnp.float32) * dt[..., None])         # discretized input
+
+    def re(t, shape):
+        return t.reshape(shape)
+
+    la_c = re(la, (B_, nc, Q, H))
+    x_c = re(xdt, (B_, nc, Q, H, P))
+    B_c = re(Bc, (B_, nc, Q, N)).astype(jnp.float32)
+    C_c = re(Cc, (B_, nc, Q, N)).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # Everything per-chunk INSIDE the scan: the (Q, Q, H) decay tensors
+    # exist for one chunk at a time (peak O(B·Q²·H) instead of
+    # O(B·S·Q·H) — materializing all chunks at once cost 16 GiB/layer at
+    # S=32k and 392 GiB peak for mamba2 prefill; EXPERIMENTS.md §Perf It.9)
+    def step(h, inp):
+        la_i, x_i, B_i, C_i = inp       # (B,Q,H), (B,Q,H,P), (B,Q,N) x2
+        L = jnp.cumsum(la_i, axis=1)                      # (B, Q, H)
+        # intra-chunk dual quadratic form
+        scores = jnp.einsum("bqn,bkn->bqk", C_i, B_i)
+        decay = jnp.exp(jnp.minimum(L[:, :, None, :] - L[:, None, :, :],
+                                    0.0))                 # (B,Q,Q,H)
+        w = scores[..., None] * decay * causal[None, :, :, None]
+        y = jnp.einsum("bqkh,bkhp->bqhp", w, x_i)
+        # inter-chunk: contribution of the carried state
+        y = y + jnp.einsum("bqn,bhpn,bqh->bqhp", C_i, h, jnp.exp(L))
+        # state update
+        tot = L[:, -1, :]                                 # (B, H)
+        decay_to_end = jnp.exp(tot[:, None, :] - L)       # (B, Q, H)
+        cs = jnp.einsum("bqn,bqhp,bqh->bhpn", B_i, x_i, decay_to_end)
+        h = h * jnp.exp(tot)[:, :, None, None] + cs
+        return h, y
+
+    h_final, ys = jax.lax.scan(
+        step, h0, (la_c.swapaxes(0, 1), x_c.swapaxes(0, 1),
+                   B_c.swapaxes(0, 1), C_c.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B_, S, H, P)
+    return y[:, :S_orig], h_final
+
+
+def ssd_naive(x, dt, A_log, Bc, Cc, h0):
+    """Sequential reference recurrence (tests compare against this)."""
+    dt = dt.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+    a = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(a * dtt)                          # (B, H)
+        upd = jnp.einsum("bhp,bn->bhpn", (xt * dtt[..., None]), bt)
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1), Bc.swapaxes(0, 1).astype(jnp.float32),
+          Cc.swapaxes(0, 1).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, CONV_K-1, di + 2N) last conv inputs
+    h: jax.Array      # (B, H, P, N) recurrent state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    di, H, P, N = dims(cfg)
+    return SSMCache(conv=jnp.zeros((batch, CONV_K - 1, di + 2 * N), dtype),
+                    h=jnp.zeros((batch, H, P, N), jnp.float32))
+
+
+def apply_ssm_train(p, cfg: ModelConfig, u):
+    """u: (B, S, d) -> (B, S, d). Full block: proj, conv, SSD, gate, norm."""
+    di, H, P, N = dims(cfg)
+    proj = u @ p["in_proj"]
+    z, xs, Bc, Cc, dt = _split_proj(cfg, proj)
+    xBC = _causal_conv(jnp.concatenate([xs, Bc, Cc], -1),
+                       p["conv_w"], p["conv_b"])
+    xs, Bc, Cc = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    x_h = xs.reshape(*xs.shape[:2], H, P)
+    h0 = jnp.zeros((u.shape[0], H, P, N), jnp.float32)
+    y, _ = _ssd_chunked(x_h, dt, p["A_log"], Bc, Cc, h0, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * x_h.astype(jnp.float32)
+    y = y.reshape(*xs.shape[:2], di).astype(u.dtype)
+    y = layers.rms_norm_1d(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+def apply_ssm_decode(p, cfg: ModelConfig, u, cache: SSMCache):
+    """u: (B, 1, d); O(1) per token."""
+    di, H, P, N = dims(cfg)
+    proj = u @ p["in_proj"]
+    z, xs, Bc, Cc, dt = _split_proj(cfg, proj)
+    xBC_new = jnp.concatenate([xs, Bc, Cc], -1)            # (B, 1, C)
+    conv_in = jnp.concatenate([cache.conv, xBC_new], axis=1)
+    out = sum(conv_in[:, i, :] * p["conv_w"][i] for i in range(CONV_K))
+    xBC = jax.nn.silu(out + p["conv_b"])[:, None, :]
+    xs, Bc, Cc = jnp.split(xBC, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(a * dt[:, 0])                          # (B, H)
+    x_h = xs[:, 0].reshape(-1, H, P).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", x_h * dt[:, 0, :, None],
+                     Bc[:, 0].astype(jnp.float32))
+    h = cache.h * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc[:, 0].astype(jnp.float32))
+    y = y + p["D"][None, :, None] * x_h
+    y = y.reshape(-1, 1, di).astype(u.dtype)
+    y = layers.rms_norm_1d(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    return out, SSMCache(conv=conv_in[:, 1:], h=h)

@@ -1,0 +1,226 @@
+"""Decoder stack: heterogeneous block kinds (attn / local / ssm / rec),
+layers stacked per pattern-position and lax.scan-ned over super-blocks so
+the HLO stays small at 80 layers; per-super-block remat policy.
+
+Layout: the layer pattern (cfg.layer_kinds) has period ``pat_len``;
+``n_super = num_layers // pat_len`` super-blocks are scanned with stacked
+params; the remainder layers (e.g. recurrentgemma's 26 = 8*3 + 2) are
+unrolled as an explicit tail.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention, layers, moe, rglru, ssm
+
+
+def pattern_info(cfg: ModelConfig):
+    kinds = cfg.layer_kinds()
+    pat = cfg.block_pattern or (kinds[0],)
+    pat_len = len(pat)
+    n_super = cfg.num_layers // pat_len
+    n_tail = cfg.num_layers - n_super * pat_len
+    return pat, pat_len, n_super, kinds[n_super * pat_len:]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, kind: str, key, dtype) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": layers.init_norm(cfg, dtype)}
+    if kind in ("attn", "local"):
+        p["mixer"] = attention.init_attn(cfg, k1, dtype)
+    elif kind == "ssm":
+        p["mixer"] = ssm.init_ssm(cfg, k1, dtype)
+    elif kind == "rec":
+        p["mixer"] = rglru.init_rglru(cfg, k1, dtype)
+    else:
+        raise ValueError(kind)
+    if kind != "ssm":                       # ssm blocks have no separate MLP
+        p["norm2"] = layers.init_norm(cfg, dtype)
+        if cfg.is_moe:
+            p["ffn"] = moe.init_moe(cfg, k2, dtype)
+        else:
+            p["ffn"] = layers.init_mlp(cfg, k3, dtype)
+    return p
+
+
+def _cast_params(p, dtype):
+    """Cast float params to the compute dtype at point of use (params are
+    stored in param_dtype, typically f32, for optimizer stability), and —
+    when the explicit weight-gather context is active — constrain each
+    2D-sharded leaf to its FSDP-unsharded spec so the ZeRO gather is one
+    bf16 all-gather per weight per layer execution instead of deferred
+    activation-sized partial sums (see sharding/gather_ctx.py)."""
+    from repro.sharding import gather_ctx
+
+    def one(path, w):
+        if not jnp.issubdtype(w.dtype, jnp.floating):
+            return w
+        w = w.astype(dtype)
+        if gather_ctx.active():
+            ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                          for k in path)
+            w = gather_ctx.constrain(ps, w)
+        return w
+
+    return jax.tree_util.tree_map_with_path(one, p)
+
+
+def apply_block_train(p, cfg: ModelConfig, kind: str, x,
+                      window: Optional[int] = None):
+    """Returns (x, aux)."""
+    p = _cast_params(p, jnp.dtype(cfg.dtype))
+    h = layers.apply_norm(p["norm1"], x, cfg.norm_type)
+    if kind == "attn":
+        mix = attention.attend_train(p["mixer"], cfg, h, window=window)
+    elif kind == "local":
+        mix = attention.attend_train(p["mixer"], cfg, h,
+                                     window=cfg.local_window)
+    elif kind == "ssm":
+        mix = ssm.apply_ssm_train(p["mixer"], cfg, h)
+    else:
+        mix = rglru.apply_rec_train(p["mixer"], cfg, h)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h = layers.apply_norm(p["norm2"], x, cfg.norm_type)
+        if cfg.is_moe:
+            y, aux = moe.apply_moe(p["ffn"], cfg, h)
+        else:
+            y = layers.apply_mlp(p["ffn"], h, cfg.mlp_type)
+        x = x + y
+    return x, aux
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype):
+    if kind == "attn":
+        return attention.init_cache(cfg, batch, max_len, dtype)
+    if kind == "local":
+        return attention.init_cache(cfg, batch, max_len, dtype,
+                                    window=cfg.local_window)
+    if kind == "ssm":
+        return ssm.init_ssm_cache(cfg, batch, dtype)
+    return rglru.init_rec_cache(cfg, batch, dtype)
+
+
+def apply_block_decode(p, cfg: ModelConfig, kind: str, x, cache, pos):
+    p = _cast_params(p, jnp.dtype(cfg.dtype))
+    h = layers.apply_norm(p["norm1"], x, cfg.norm_type)
+    if kind == "attn":
+        mix, cache = attention.attend_decode(p["mixer"], cfg, h, cache, pos)
+    elif kind == "local":
+        mix, cache = attention.attend_decode(p["mixer"], cfg, h, cache, pos,
+                                             window=cfg.local_window)
+    elif kind == "ssm":
+        mix, cache = ssm.apply_ssm_decode(p["mixer"], cfg, h, cache)
+    else:
+        mix, cache = rglru.apply_rec_decode(p["mixer"], cfg, h, cache)
+    x = x + mix
+    if "ffn" in p:
+        h = layers.apply_norm(p["norm2"], x, cfg.norm_type)
+        if cfg.is_moe:
+            y, _ = moe.apply_moe(p["ffn"], cfg, h)
+        else:
+            y = layers.apply_mlp(p["ffn"], h, cfg.mlp_type)
+        x = x + y
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack init: stacked super-blocks + tail
+# ---------------------------------------------------------------------------
+
+def init_stack(cfg: ModelConfig, key, dtype):
+    pat, pat_len, n_super, tail_kinds = pattern_info(cfg)
+
+    def init_one_super(k):
+        ks = jax.random.split(k, pat_len)
+        return [init_block(cfg, kind, kk, dtype)
+                for kind, kk in zip(pat, ks)]
+
+    keys = jax.random.split(key, n_super + 1)
+    stacked = jax.vmap(init_one_super)(keys[:n_super])
+    tail = [init_block(cfg, kind, jax.random.fold_in(keys[-1], i), dtype)
+            for i, kind in enumerate(tail_kinds)]
+    return {"stack": stacked, "tail": tail}
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)   # "block": save only layer inputs
+
+
+def apply_stack_train(p, cfg: ModelConfig, x, *, remat: str = "block",
+                      window: Optional[int] = None, act_sharding=None):
+    """x: (B, S, d) -> (x, total_aux). ``act_sharding`` pins the residual
+    stream's sharding at block boundaries (batch over 'data' in FSDP mode)
+    so GSPMD gathers WEIGHTS per layer, never the (much larger) activations
+    — without it the partitioner is free to all-gather the batch."""
+    pat, pat_len, n_super, tail_kinds = pattern_info(cfg)
+
+    def constrain(x):
+        if act_sharding is not None:
+            return jax.lax.with_sharding_constraint(x, act_sharding)
+        return x
+
+    def super_body(carry, sp):
+        x, aux = carry
+        for j, kind in enumerate(pat):
+            x, a = apply_block_train(sp[j], cfg, kind, x, window=window)
+            x = constrain(x)
+            aux = aux + a
+        return (x, aux), None
+
+    body = _remat_wrap(super_body, remat)
+    (x, aux), _ = jax.lax.scan(body, (constrain(x), jnp.zeros((), jnp.float32)),
+                               p["stack"])
+    for tp, kind in zip(p["tail"], tail_kinds):
+        x, a = apply_block_train(tp, cfg, kind, x, window=window)
+        x = constrain(x)
+        aux = aux + a
+    return x, aux
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    pat, pat_len, n_super, tail_kinds = pattern_info(cfg)
+
+    def one_super(_):
+        return [init_block_cache(cfg, kind, batch, max_len, dtype)
+                for kind in pat]
+
+    stacked = jax.vmap(one_super)(jnp.arange(n_super))
+    tail = [init_block_cache(cfg, kind, batch, max_len, dtype)
+            for kind in tail_kinds]
+    return {"stack": stacked, "tail": tail}
+
+
+def apply_stack_decode(p, cache, cfg: ModelConfig, x, pos):
+    """x: (B, 1, d) -> (x, new_cache)."""
+    pat, pat_len, n_super, tail_kinds = pattern_info(cfg)
+
+    def super_body(x, inp):
+        sp, sc = inp
+        new_sc = []
+        for j, kind in enumerate(pat):
+            x, c = apply_block_decode(sp[j], cfg, kind, x, sc[j], pos)
+            new_sc.append(c)
+        return x, new_sc
+
+    x, new_stack = jax.lax.scan(super_body, x, (p["stack"], cache["stack"]))
+    new_tail = []
+    for tp, tc, kind in zip(p["tail"], cache["tail"], tail_kinds):
+        x, c = apply_block_decode(tp, cfg, kind, x, tc, pos)
+        new_tail.append(c)
+    return x, {"stack": new_stack, "tail": new_tail}

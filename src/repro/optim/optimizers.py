@@ -1,0 +1,95 @@
+"""Gradient transformations (optax-style minimal API, self-contained).
+
+Each optimizer is a (init, update) pair:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, m, params=None):
+        m = jax.tree_util.tree_map(lambda mm, g: beta * mm + g, m, grads)
+        return jax.tree_util.tree_map(lambda mm: -lr * mm, m), m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam / AdamW (decoupled decay when weight_decay > 0)."""
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(mu=jax.tree_util.tree_map(f32, params),
+                         nu=jax.tree_util.tree_map(f32, params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamState(mu=mu, nu=nu, count=c)
+
+    return Optimizer(init, update)
+
+
+def make(name: str, lr: float, weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr)
+    if name == "adam":
+        return adam(lr)
+    if name == "adamw":
+        return adam(lr, weight_decay=weight_decay or 0.01)
+    raise ValueError(f"unknown optimizer {name!r}")

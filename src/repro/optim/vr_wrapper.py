@@ -1,0 +1,141 @@
+"""The paper's technique as a first-class LM-training feature: variance-
+reduced gradient corrections over the finite sum of M fixed microbatches.
+
+At LM scale the paper's f_i (one data sample) becomes f_i = loss of the
+i-th FIXED microbatch of the worker's shard (the data pipeline replays
+microbatch i every epoch — the finite-sum structure is preserved; see
+repro/data/synthetic.py). Three corrections:
+
+  * ``centralvr`` — Algorithm 1/2: per-index gradient table (M param-sized
+    slots), anchor gbar frozen over the epoch, refreshed from the running
+    accumulator at epoch end. 1 gradient per step.
+  * ``svrg``      — Algorithm 4: snapshot params + anchor; correction
+    g(x) - g(y) + gbar needs a SECOND gradient at the snapshot (2 grads
+    per step, no table — the memory/compute trade of Table 1). The anchor
+    is the epoch-averaged gradient (the synchronous full-gradient pass of
+    classic SVRG does not exist at LM scale; the epoch average is the
+    CentralVR-style anchor, recorded as an adaptation).
+  * ``saga``      — Algorithm 5: table + anchor updated EVERY step
+    (running mean). The high-communication-frequency contrast case.
+
+All states are pytrees shaped like params (with a leading (M,) table axis
+for table modes) so they shard exactly like params (FSDP'd tables in the
+optimized mode).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+class VRState(NamedTuple):
+    table: Any          # (M, ...) per leaf, or () for svrg
+    gbar: Any           # anchor
+    gtilde: Any         # running accumulator
+    snapshot: Any       # params snapshot (svrg) or ()
+    idx: jax.Array      # current microbatch index in [0, M)
+
+
+def init_vr(mode: str, params, M: int) -> Optional[VRState]:
+    """VR state dtype FOLLOWS the param dtype: f32 masters get f32 tables/
+    anchors (the faithful default); bf16 masters (the optimized large-model
+    profile) get bf16 VR state — halving both the VR memory footprint and
+    the FSDP gather traffic of the SVRG snapshot pass (§Perf It.6)."""
+    if mode == "none":
+        return None
+    zeros = tmap(lambda p: jnp.zeros(p.shape, p.dtype)
+                 if jnp.issubdtype(p.dtype, jnp.floating)
+                 else jnp.zeros(p.shape, jnp.float32), params)
+    if mode == "svrg":
+        table = ()
+        snapshot = tmap(lambda p: p.astype(p.dtype), params)
+    else:
+        table = tmap(lambda z: jnp.zeros((M,) + z.shape, z.dtype), zeros)
+        snapshot = ()
+    return VRState(table=table, gbar=zeros, gtilde=zeros,
+                   snapshot=snapshot, idx=jnp.zeros((), jnp.int32))
+
+
+def correct(mode: str, state: VRState, g, M: int, *, g_snap=None,
+            params=None):
+    """One VR step (mode is STATIC). Returns (corrected_grads, new_state).
+
+    g: fresh minibatch gradient at current params.
+    g_snap: gradient of the SAME minibatch at the snapshot (svrg only).
+    params: current params (svrg snapshot refresh at epoch end).
+    """
+    i = state.idx
+    at_epoch_end = i == (M - 1)
+
+    if mode == "svrg":
+        v = tmap(lambda a, b, c: a.astype(c.dtype) - b.astype(c.dtype)
+                 + c, g, g_snap, state.gbar)
+        gtilde = tmap(lambda t, a: t + a.astype(t.dtype) / M,
+                      state.gtilde, g)
+
+        def refresh(_):
+            # epoch end: y <- x, gbar <- epoch average, reset accumulator
+            return VRState((), gtilde,
+                           tmap(jnp.zeros_like, gtilde),
+                           tmap(lambda p: p + 0, params),
+                           jnp.zeros((), jnp.int32))
+
+        def keep(_):
+            return VRState((), state.gbar, gtilde, state.snapshot,
+                           i + 1)
+
+        return v, jax.lax.cond(at_epoch_end, refresh, keep, None)
+
+    # table modes: correction v = g - table[i] + gbar.
+    # Table slot access goes through lax.switch over STATIC indices: a
+    # vmapped dynamic-slice/update over an FSDP-sharded table trips the
+    # SPMD partitioner (verifier error "slice dim size > dynamic slice
+    # dimension" on the 2-pod mesh); static slices partition cleanly and
+    # are cheaper than a gather. M is small (config vr_table_size).
+    old = jax.lax.switch(
+        i, [(lambda m: lambda: tmap(lambda t: t[m], state.table))(m)
+            for m in range(M)])
+    v = tmap(lambda a, o, c: a.astype(o.dtype) - o + c, g, old,
+             state.gbar)
+    table = jax.lax.switch(
+        i, [(lambda m: lambda: tmap(
+            lambda t, a: t.at[m].set(a.astype(t.dtype)),
+            state.table, g))(m) for m in range(M)])
+
+    if mode == "saga":
+        # anchor tracks the table mean every step (Alg 5 line 9)
+        gbar = tmap(lambda c, a, o: c + (a.astype(c.dtype) - o) / M,
+                    state.gbar, g, old)
+        return v, VRState(table, gbar, state.gtilde, (),
+                          (i + 1) % M)
+
+    # centralvr: anchor frozen; accumulator refreshed at epoch end
+    gtilde = tmap(lambda t, a: t + a.astype(t.dtype) / M,
+                  state.gtilde, g)
+
+    def roll(_):
+        return VRState(table, gtilde, tmap(jnp.zeros_like, gtilde),
+                       (), jnp.zeros((), jnp.int32))
+
+    def keep(_):
+        return VRState(table, state.gbar, gtilde, (), i + 1)
+
+    return v, jax.lax.cond(at_epoch_end, roll, keep, None)
+
+
+def grads_per_step(mode: str) -> int:
+    """Table 1: gradient evaluations per iteration."""
+    return 2 if mode == "svrg" else 1
+
+
+def storage_multiplier(mode: str, M: int) -> float:
+    """Extra param-sized buffers held by the VR state."""
+    if mode == "none":
+        return 0.0
+    if mode == "svrg":
+        return 3.0            # snapshot + gbar + gtilde
+    return float(M) + 2.0     # table + gbar + gtilde

@@ -1,0 +1,153 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+
+    T_compute    = FLOPs_per_device / 197e12        (bf16 MXU peak)
+    T_memory     = bytes_per_device / 819e9         (HBM bandwidth)
+    T_collective = collective_bytes_per_device / 50e9  (ICI per link)
+
+``compiled.cost_analysis()`` reports the PER-DEVICE partitioned module's
+flops/bytes (XLA analyses the post-SPMD module), so terms divide by the
+single-chip peak directly. Collective bytes are not in cost_analysis: we
+parse the compiled HLO text and sum the RESULT-shape bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+(result-shape convention ~ bytes landed per device per step; recorded as
+the convention in EXPERIMENTS.md).
+
+MODEL_FLOPS uses the 6·N·D rule (6·N_active·D for MoE) for training and
+2·N·D for single-token decode; the ratio MODEL_FLOPS / HLO_FLOPs measures
+useful compute (remat recompute, attention quadratic work and dispatch
+overhead all push it down).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result shapes: one or a tuple of `dtype[d0,d1,...]`
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(shapes))
+        out[kind] += total
+        counts[kind] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    mode: str                   # train / prefill / decode
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_global: float
+    useful_fraction: float      # MODEL_FLOPS / (HLO_FLOPs * chips)
+    peak_memory_bytes: Optional[float] = None
+    collectives: Optional[dict] = None
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg, shape, mode: str) -> float:
+    """6·N·D training / 2·N·D forward rule (N active params, D tokens)."""
+    n_active = cfg.active_param_count()
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1          # decode: one token per seq
+    return 2.0 * n_active * tokens
+
+
+def analyze(cfg, shape, mode: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, memory: Optional[dict] = None,
+            grads_per_step: int = 1) -> Roofline:
+    """Execution-weighted terms via the HLO cost model (hlo_cost.py);
+    ``cost`` (XLA's static cost_analysis) is recorded upstream for
+    reference but NOT used for the terms — it counts loop bodies once."""
+    from repro.roofline import hlo_cost
+    hc = hlo_cost.analyze_hlo(hlo_text)
+    flops = hc.flops
+    byts = hc.bytes_accessed
+    colls = {**{k: float(v) for k, v in hc.collective_breakdown.items()},
+             **{f"n_{k}": float(v)
+                for k, v in hc.collective_counts.items()}}
+    cbytes = hc.collective_bytes
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = cbytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, mode)
+    useful = mf / max(flops * chips, 1.0)
+    peak = None
+    if memory:
+        peak = float(memory.get("temp_size_in_bytes", 0)
+                     + memory.get("argument_size_in_bytes", 0))
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, mode=mode,
+        chips=chips, flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=cbytes, t_compute=t_c, t_memory=t_m,
+        t_collective=t_x, bottleneck=bottleneck, model_flops_global=mf,
+        useful_fraction=useful, peak_memory_bytes=peak, collectives=colls)
+
+
+def format_table(rows) -> str:
+    """Markdown table for EXPERIMENTS.md."""
+    hdr = ("| arch | shape | mesh | mode | T_comp (ms) | T_mem (ms) | "
+           "T_coll (ms) | bottleneck | useful | peak GiB/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        peak = (f"{r.peak_memory_bytes / 2**30:.2f}"
+                if r.peak_memory_bytes else "-")
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.mode} "
+            f"| {r.t_compute * 1e3:.2f} | {r.t_memory * 1e3:.2f} "
+            f"| {r.t_collective * 1e3:.3f} | {r.bottleneck} "
+            f"| {r.useful_fraction:.2f} | {peak} |")
+    return "\n".join(lines)

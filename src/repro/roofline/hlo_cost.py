@@ -1,0 +1,387 @@
+"""Execution-weighted HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop BODY ONCE — we
+verified this empirically (a scan of 10 matmuls reports the flops of one;
+see EXPERIMENTS.md §Dry-run). A scanned-layers transformer with gradient
+accumulation therefore under-reports flops/bytes by the product of trip
+counts (e.g. 80 layers x 16 microbatches = 1280x). This module parses the
+scheduled HLO text instead and weights every op by its execution count:
+
+  * while ops carry ``backend_config={"known_trip_count":{"n":...}}`` —
+    body multiplier x= n, condition x= n+1;
+  * fusion/call ops propagate the caller's multiplier into the called
+    computation (flops of dots INSIDE fusions count; HBM bytes of ops
+    inside fusion computations do NOT — they are register/VMEM resident);
+  * conditional branches are counted at the caller's multiplier (an upper
+    bound; the CentralVR epoch-boundary branch actually fires once per
+    comm_every steps — the dry-run records its collectives separately so
+    the report can amortize them);
+  * dot flops = 2 * prod(result dims) * prod(lhs contracting dims);
+  * HBM bytes = result + operand bytes of top-level (non-fused) compute
+    ops — the classic operand-read + result-write accounting;
+  * collective bytes = result bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (+ async -start
+    forms; -done skipped to avoid double counting).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "token": 0,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_NAME = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+# first lowercase-word-followed-by-( after the result type is the opcode
+# (result types contain no parens; /*index=N*/ comments contain no parens)
+_OPCODE = re.compile(r"([a-z][\w\-]*)\(")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TFT = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_B = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    result: str
+    opcode: str
+    rest: str           # operands + attrs (single line)
+    is_root: bool = False
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.result)
+
+    def operands(self) -> List[str]:
+        return _OPERAND.findall(self.rest.split(")")[0])
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # op name -> result
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_NAME.match(line)
+        if m:
+            rest = m.group(2)
+            mo = _OPCODE.search(rest)
+            if not mo:
+                continue
+            op = Op(m.group(1), rest[:mo.start()].strip(), mo.group(1),
+                    rest[mo.end():], is_root="ROOT" in line[:12])
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.result
+    return comps, entry
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    dot_flops_by_mult: Dict[float, float] = field(
+        default_factory=lambda: defaultdict(float))
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "collectives": dict(self.collective_breakdown),
+            "collective_counts": dict(self.collective_counts),
+        }
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    dims = _shape_dims(op.result)
+    if dims is None:
+        return 0.0
+    out = 1
+    for d in dims:
+        out *= d
+    mc = _LHS_C.search(op.rest)
+    contracting = 1
+    if mc:
+        idxs = [int(i) for i in mc.group(1).split(",") if i]
+        operands = _OPERAND.findall(op.rest)
+        if operands:
+            lhs_shape = _shape_dims(shapes.get(operands[0], "")) or []
+            for i in idxs:
+                if i < len(lhs_shape):
+                    contracting *= lhs_shape[i]
+    return 2.0 * out * contracting
+
+
+_BYTE_OPS = {
+    "fusion", "dot", "copy", "convolution", "dynamic-slice",
+    "dynamic-update-slice", "gather", "scatter", "sort", "reduce",
+    "transpose", "concatenate", "pad", "broadcast", "iota", "rng",
+    "select-and-scatter", "reduce-window", "custom-call", "slice",
+    "reverse", "reshape", "convert", "cholesky", "triangular-solve",
+    "tanh", "exponential", "add", "multiply",
+} | set(COLLECTIVE_KINDS) | {k + "-start" for k in COLLECTIVE_KINDS}
+
+
+def _fusion_operand_bytes(comp: Computation, called: Computation) -> dict:
+    """Per-parameter-index HBM charge for one fusion: a parameter consumed
+    ONLY through dynamic-slice / gather / slice ops inside the fusion is
+    charged the sliced size, not the full buffer (scan bodies slice their
+    stacked inputs; charging the stack would overcount by the trip count).
+    Returns {param_index: bytes}."""
+    charge: dict = {}
+    param_name = {}
+    for op in called.ops:
+        if op.opcode == "parameter":
+            mi = re.match(r"\s*(\d+)", op.rest)
+            if mi:
+                param_name[op.name] = int(mi.group(1))
+                charge[int(mi.group(1))] = 0
+    for op in called.ops:
+        for o in op.operands():
+            if o in param_name:
+                idx = param_name[o]
+                if op.opcode in ("dynamic-slice", "slice", "gather"):
+                    charge[idx] = charge.get(idx, 0) + op.result_bytes
+                elif op.opcode == "dynamic-update-slice":
+                    ops_ = op.operands()
+                    upd = (_shape_bytes(called.shapes.get(ops_[1], ""))
+                           if len(ops_) > 1 else op.result_bytes)
+                    charge[idx] = charge.get(idx, 0) + upd
+                elif op.opcode in ("get-tuple-element", "bitcast", "tuple"):
+                    pass
+                else:
+                    charge[idx] = None       # full access
+    return charge
+
+
+def _fusion_result_bytes(called: Computation) -> Optional[int]:
+    """If the fusion root is a dynamic-update-slice, only the update slice
+    is written (the buffer aliases in place)."""
+    for op in called.ops:
+        if op.is_root and op.opcode == "dynamic-update-slice":
+            ops_ = op.operands()
+            if len(ops_) > 1:
+                return _shape_bytes(called.shapes.get(ops_[1], ""))
+    return None
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = parse_hlo(text)
+
+    # computations reached via fusion `calls=` hold register-resident ops
+    fused: set = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                m = _CALLS.search(op.rest)
+                if m:
+                    fused.add(m.group(1))
+
+    cost = HloCost()
+    visited_stack = []
+
+    def walk(comp_name: str, mult: float):
+        comp = comps.get(comp_name)
+        if comp is None or mult <= 0:
+            return
+        if comp_name in visited_stack:       # defensive: no recursion
+            return
+        visited_stack.append(comp_name)
+        in_fused = comp_name in fused
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                f = _dot_flops(op, comp.shapes) * mult
+                cost.flops += f
+                cost.dot_flops_by_mult[mult] += f
+            kind = oc[:-6] if oc.endswith("-start") else oc
+            if kind in COLLECTIVE_KINDS and not oc.endswith("-done"):
+                b = op.result_bytes * mult
+                cost.collective_bytes += b
+                cost.collective_breakdown[kind] += b
+                cost.collective_counts[kind] += mult
+            if not in_fused and oc in _BYTE_OPS:
+                result_b = op.result_bytes
+                opnds = op.operands()
+                if oc == "fusion":
+                    m = _CALLS.search(op.rest)
+                    called = comps.get(m.group(1)) if m else None
+                    if called is not None:
+                        per_param = _fusion_operand_bytes(comp, called)
+                        operand_bytes = 0
+                        for idx, o in enumerate(opnds):
+                            full = _shape_bytes(comp.shapes.get(o, ""))
+                            c = per_param.get(idx, None)
+                            operand_bytes += full if c is None else min(c, full)
+                        rb = _fusion_result_bytes(called)
+                        if rb is not None:
+                            result_b = rb
+                    else:
+                        operand_bytes = sum(
+                            _shape_bytes(comp.shapes.get(o, ""))
+                            for o in opnds)
+                elif oc == "dynamic-slice":
+                    operand_bytes = result_b       # reads only the slice
+                elif oc == "dynamic-update-slice":
+                    upd = (_shape_bytes(comp.shapes.get(opnds[1], ""))
+                           if len(opnds) > 1 else result_b)
+                    result_b = upd                 # in-place slice write
+                    operand_bytes = upd
+                elif oc in ("broadcast", "iota", "slice", "gather"):
+                    operand_bytes = 0 if oc in ("broadcast", "iota") else result_b
+                else:
+                    operand_bytes = sum(
+                        _shape_bytes(comp.shapes.get(o, ""))
+                        for o in opnds)
+                cost.bytes_accessed += (result_b + operand_bytes) * mult
+            # recurse
+            if oc == "while":
+                n = 1.0
+                mt = _TRIP.search(op.rest)
+                if mt:
+                    n = float(mt.group(1))
+                mb = _BODY.search(op.rest)
+                mc = _COND.search(op.rest)
+                if mb:
+                    walk(mb.group(1), mult * n)
+                if mc:
+                    walk(mc.group(1), mult * (n + 1.0))
+            elif oc in ("fusion", "call", "map", "reduce", "sort",
+                        "reduce-window", "select-and-scatter", "scatter",
+                        "all-reduce", "all-reduce-start"):
+                m = _CALLS.search(op.rest) or re.search(
+                    r"to_apply=%?([\w.\-]+)", op.rest)
+                if m and m.group(1) in comps:
+                    walk(m.group(1), mult)
+            elif oc == "conditional":
+                names = _BRANCHES.search(op.rest)
+                if names:
+                    for nm in _OPERAND.findall(names.group(1)):
+                        walk(nm, mult)
+                else:
+                    for m in _TFT.finditer(op.rest):
+                        walk(m.group(1), mult)
+        visited_stack.pop()
+
+    walk(entry, 1.0)
+    return cost
+
+
+def attribute(text: str, top: int = 15):
+    """Perf-debugging view: the top collective and byte contributors with
+    (computation, opcode, result shape, mult, total). This is the 'profile'
+    of the dry-run workflow — no wall-clock exists on CPU, so the
+    execution-weighted HLO is what we optimize against."""
+    comps, entry = parse_hlo(text)
+    fused = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                m = _CALLS.search(op.rest)
+                if m:
+                    fused.add(m.group(1))
+    colls: list = []
+    bytes_rows: dict = {}
+    stack: list = []
+
+    def walk(cn, mult):
+        comp = comps.get(cn)
+        if comp is None or cn in stack:
+            return
+        stack.append(cn)
+        in_fused = cn in fused
+        for op in comp.ops:
+            oc = op.opcode
+            kind = oc[:-6] if oc.endswith("-start") else oc
+            if kind in COLLECTIVE_KINDS and not oc.endswith("-done"):
+                colls.append((op.result_bytes * mult, kind, op.result[:48],
+                              mult, cn[:48]))
+            if not in_fused and oc in _BYTE_OPS:
+                key = (cn[:48], oc)
+                bytes_rows[key] = bytes_rows.get(key, 0.0) + \
+                    op.result_bytes * mult
+            if oc == "while":
+                n = 1.0
+                mt = _TRIP.search(op.rest)
+                if mt:
+                    n = float(mt.group(1))
+                mb = _BODY.search(op.rest)
+                mc = _COND.search(op.rest)
+                if mb:
+                    walk(mb.group(1), mult * n)
+                if mc:
+                    walk(mc.group(1), mult * (n + 1.0))
+            elif oc in ("fusion", "call"):
+                m = _CALLS.search(op.rest)
+                if m and m.group(1) in comps:
+                    walk(m.group(1), mult)
+            elif oc == "conditional":
+                names = _BRANCHES.search(op.rest)
+                if names:
+                    for nm in _OPERAND.findall(names.group(1)):
+                        walk(nm, mult)
+                else:
+                    for m in _TFT.finditer(op.rest):
+                        walk(m.group(1), mult)
+        stack.pop()
+
+    walk(entry, 1.0)
+    colls.sort(reverse=True)
+    byte_top = sorted(bytes_rows.items(), key=lambda kv: -kv[1])[:top]
+    return colls[:top], byte_top

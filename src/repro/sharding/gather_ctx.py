@@ -1,0 +1,61 @@
+"""Explicit per-layer weight-gather context (manual ZeRO-3).
+
+With 2D-sharded weights (fsdp x tensor) and batch-sharded activations,
+GSPMD's strategy choice for the layer matmuls is free to defer partial
+sums into activation-sized all-reduces — measured at 800 MB x 2 x 1280
+executions (f32-promoted!) on qwen1.5-110b/train_4k, dwarfing the 50 MB
+bf16 weight gather the ZeRO pattern intends (EXPERIMENTS.md §Perf It.6).
+
+The fix is to make the gather EXPLICIT: when a block casts its weights to
+compute dtype, each 2D-sharded leaf is constrained to its FSDP-UNSHARDED
+spec. GSPMD then emits one bf16 all-gather over 'data' per weight per
+layer execution (inside the remat scope, so backward re-gathers rather
+than keeping the full weight resident), and every matmul sees a cleanly
+tensor-parallel weight.
+
+Context is process-global and set by the step factories before tracing
+(traced functions read it at trace time only).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: dict = {"mesh": None, "cfg": None, "sizes": None}
+
+
+def enable(mesh, cfg, sizes: dict) -> None:
+    _CTX.update(mesh=mesh, cfg=cfg, sizes=sizes)
+
+
+def disable() -> None:
+    _CTX.update(mesh=None, cfg=None, sizes=None)
+
+
+def active() -> bool:
+    return _CTX["mesh"] is not None
+
+
+def gather_spec(path_str: str, shape) -> Optional[P]:
+    """The use-time (FSDP-removed) spec for a block-relative param path,
+    or None if the leaf isn't FSDP-sharded (no constraint needed)."""
+    if not active():
+        return None
+    from repro.sharding import specs
+    cfg, sizes = _CTX["cfg"], _CTX["sizes"]
+    with_f = specs._param_rule(path_str, shape, cfg, "data", sizes)
+    no_f = specs._param_rule(path_str, shape, cfg, None, sizes)
+    if len(with_f) != len(shape) or with_f == no_f:
+        return None
+    no_f = specs._fix_divisibility(no_f, shape, sizes)
+    return P(*no_f)
+
+
+def constrain(path_str: str, w):
+    spec = gather_spec(path_str, w.shape)
+    if spec is None:
+        return w
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(_CTX["mesh"], spec))

@@ -1,0 +1,230 @@
+"""PartitionSpec rules for the zoo's parameter trees.
+
+Two parameter-placement modes, mirroring the paper-vs-beyond split:
+
+  * ``dp_replicated=True`` (paper-faithful CentralVR): every worker holds a
+    full model copy — params are replicated along the data/pod axes and
+    tensor-parallel along 'model'. This is the paper's memory model.
+  * ``dp_replicated=False`` (optimized): additionally FSDP-shard the params'
+    largest non-TP dim along 'data' (ZeRO-3); CentralVR workers then live on
+    the 'pod' axis (hierarchical CentralVR — sync FSDP inside a pod, the
+    paper's rare epoch-boundary exchange across pods).
+
+Rules are path-pattern based. Dims that do not divide the axis size are
+still sharded (GSPMD pads) EXCEPT tiny per-head vectors, which are
+replicated. The SSM/RG-LRU mixers keep their head-structured inner dims
+replicated over 'model' (heads don't align with a 16-way axis; these
+models are small) — recorded in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# rules: (substring, spec builder(leaf_ndim) -> tuple of axis names/None)
+def _param_rule(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                fsdp: Optional[str], axis_sizes: Optional[dict] = None):
+    """Returns the PartitionSpec dims for one unstacked param leaf.
+
+    Head-count-aware: tensor parallelism on attention uses the HEAD axis
+    only when num_heads divides the 'model' axis; otherwise attention TP is
+    DROPPED for that arch (replicate over 'model', FSDP over 'data').
+    Relocating 'model' onto the d_model (contracting) dim instead is a
+    measured anti-optimization: GSPMD defers the partial-sum reduction into
+    the attention chunk loop and all-reduces the SCORES every iteration
+    (~1e14 bytes for qwen2-7b prefill_32k — see EXPERIMENTS.md §Perf #1).
+    """
+    tp = "model"
+    tp_n = (axis_sizes or {}).get("model", 1)
+    heads_ok = cfg.padded_heads % tp_n == 0
+
+    def dims(*ds):
+        return tuple(ds)
+
+    if "embed/tok" in path:
+        return dims(tp, fsdp)
+    if "head/w" in path:
+        return dims(fsdp, tp)
+    if "frontend_proj" in path:
+        return dims(fsdp, tp)
+
+    # --- attention ---
+    if "mixer/wq" in path:
+        return dims(fsdp, tp if heads_ok else None, None)
+    if "mixer/wk" in path or "mixer/wv" in path:
+        # shard kv heads only if they cover the axis; else replicate
+        # (cheap: kv_dim is small) so the kv cache stays unpadded
+        return dims(fsdp, None, None)
+    if "mixer/wo" in path:
+        return dims(tp if heads_ok else None, None, fsdp)
+    if "mixer/bq" in path:
+        return dims(tp if heads_ok else None, None)
+    if "mixer/bk" in path or "mixer/bv" in path:
+        return dims(None, None)
+    if "q_norm" in path or "k_norm" in path:
+        return dims(None)
+
+    # --- MoE --- (cfg.is_moe guard is essential: a DENSE arch's stacked
+    # (L, d, ff) weight is also 3-D — without the guard it matched this
+    # rule and sharded the LAYER-SCAN dim over 'model', which made XLA
+    # hoist a full-stack weight all-gather out of the layer loop: 129 GB
+    # materialized for qwen1.5-110b decode. EXPERIMENTS.md §Perf It.7.)
+    if "ffn/router" in path:
+        return dims(None, tp)
+    if cfg.is_moe and ("ffn/wg" in path or "ffn/wu" in path
+                       or "ffn/wd" in path) and shape and len(shape) == 3:
+        return dims(tp, fsdp, None)      # expert-parallel
+    if "shared/wg" in path or "shared/wu" in path:
+        return dims(fsdp, tp)
+    if "shared/wd" in path:
+        return dims(tp, fsdp)
+    if "shared_gate" in path:
+        return dims(None, None)
+
+    # --- dense MLP ---
+    if "ffn/wg" in path or "ffn/wu" in path or "ffn/wi" in path:
+        return dims(fsdp, tp)
+    if "ffn/wd" in path or "ffn/wo" in path:
+        return dims(tp, fsdp)
+    if "ffn/bi" in path:
+        return dims(tp)
+    if "ffn/bo" in path:
+        return dims(None)
+
+    # --- SSM (mamba2): inner dims head-structured; TP not applied ---
+    if "mixer/in_proj" in path or "mixer/out_proj" in path:
+        return dims(fsdp, None)
+    if "mixer/conv_w" in path:
+        return dims(None, None)
+
+    # --- RG-LRU ---
+    if "mixer/wx_in" in path or "mixer/wy_in" in path:
+        return dims(fsdp, None)
+    if "mixer/out" in path:
+        return dims(None, fsdp)
+    if "mixer/wa" in path or "mixer/wi" in path:
+        return dims(None, None, None)
+
+    # norms, scalars, small vectors: replicated
+    return tuple(None for _ in shape)
+
+
+def _known_rule_len(path: str, cfg: ModelConfig) -> Optional[int]:
+    """ndim of the UNSTACKED param a rule path refers to (None if the path
+    matches no structural rule — then everything is replicated)."""
+    probe = _param_rule(path, (), cfg, None)
+    return len(probe) if probe else None
+
+
+def _axis_size(axis, sizes: dict) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axis, 1)
+
+
+def _fix_divisibility(spec, shape, sizes: dict):
+    """pjit in_shardings require exact divisibility: any axis that does not
+    divide its dim is DROPPED (replicated). Relocation to another dim was
+    tried and reverted — moving 'model' onto a contracting dim turns the
+    consumer matmul into a deferred partial-sum whose all-reduce lands
+    inside inner loops (EXPERIMENTS.md §Perf #1)."""
+    spec = list(spec)
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        if shape[i] % _axis_size(ax, sizes) != 0:
+            spec[i] = None
+    return tuple(spec)
+
+
+def tree_specs(tree, cfg: ModelConfig, *, fsdp: bool,
+               worker_axes: Tuple[str, ...] = (),
+               axis_sizes: Optional[dict] = None):
+    """PartitionSpec pytree for ANY state tree whose leaves are params or
+    param-shaped buffers (optimizer moments, VR tables/anchors/snapshots).
+
+    Works structurally: the substring rules give the spec of the TRAILING
+    param dims; any extra LEADING dims (worker-copy axis, scan-stack axis,
+    VR table axis) are padded — the first leading dim of a multi-copy
+    state gets the worker axes, the rest None. With ``axis_sizes`` the
+    specs are made pjit-exact (divisibility relocation/fallback).
+    """
+    fsdp_axis = "data" if fsdp else None
+    w = None
+    if worker_axes:
+        w = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        # find the structural rule by probing progressively shorter
+        # trailing shapes until the rule length fits
+        base = None
+        for n_lead in range(len(shape) + 1):
+            cand = _param_rule(ps, shape[n_lead:], cfg, fsdp_axis,
+                               axis_sizes)
+            if len(cand) == len(shape) - n_lead:
+                base = cand
+                n = n_lead
+                break
+        if base is None:                     # scalar / unknown: replicate
+            return P(*(None for _ in shape))
+        if axis_sizes:
+            base = _fix_divisibility(base, shape[n:], axis_sizes)
+        lead: list = [None] * n
+        if w is not None and n > 0:
+            lead[0] = w
+        return P(*lead, *base)
+
+    return jax.tree_util.tree_map_with_path(spec_for, tree)
+
+
+def param_specs(params, cfg: ModelConfig, *, fsdp: bool,
+                worker_axes: Tuple[str, ...] = ()):
+    return tree_specs(params, cfg, fsdp=fsdp, worker_axes=worker_axes)
+
+
+def cache_specs(cache, cfg: ModelConfig):
+    """KV/state caches: batch dim over 'data' (+'pod' via data in specs of
+    the batch), everything else replicated; scan-stacked axis leading."""
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        n_lead = 1 if "stack" in ps else 0
+        shape = leaf.shape[n_lead:]
+        return P(*([None] * n_lead), "data", *([None] * (len(shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def batch_specs(worker_axes: Tuple[str, ...], data_axes: Tuple[str, ...]):
+    """tokens: (W, A, mb, S) when worker axis present, else (A, mb, S)."""
+    w = (worker_axes if len(worker_axes) > 1 else worker_axes[0]) \
+        if worker_axes else None
+    d = (data_axes if len(data_axes) > 1 else data_axes[0]) \
+        if data_axes else None
+    if worker_axes:
+        return P(w, None, d, None)
+    return P(None, d, None)

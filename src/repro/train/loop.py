@@ -1,0 +1,79 @@
+"""Training loop: data pipeline + jitted step + metrics + checkpointing.
+
+Used by ``launch/train.py`` and the examples; runs on whatever mesh the
+caller provides (1-device CPU for the end-to-end examples, the production
+mesh on real hardware).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.config import ModelConfig, TrainConfig
+from repro.data import synthetic
+from repro.launch import mesh as meshlib
+from repro.train import step as tstep
+
+
+@dataclass
+class LoopResult:
+    losses: List[float] = field(default_factory=list)
+    steps: int = 0
+    wall_time: float = 0.0
+    final_eval_loss: Optional[float] = None
+
+
+def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, steps: int,
+                 mesh=None, vr_workers: str = "none",
+                 checkpoint_path: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 log_every: int = 10,
+                 log_fn: Callable[[str], None] = print) -> LoopResult:
+    mesh = mesh or meshlib.make_test_mesh()
+    train_step, meta = tstep.make_train_step(cfg, tcfg, mesh, vr_workers)
+    W = meta["workers"]
+    accum = max(tcfg.microbatch and
+                tcfg.global_batch // (W * tcfg.microbatch) or 1, 1)
+    mb = tcfg.microbatch or max(tcfg.global_batch // W, 1)
+
+    state = tstep.init_train_state(cfg, tcfg, jax.random.PRNGKey(tcfg.seed),
+                                   W)
+    jit_step = jax.jit(train_step)
+
+    def batch_for(s):
+        toks = synthetic.epoch_batch(cfg, tcfg.seed, s, workers=W,
+                                     accum=accum, microbatch=mb,
+                                     seq=tcfg.seq_len,
+                                     table_size=tcfg.vr_table_size)
+        if W == 1:
+            toks = toks[0]
+        return toks
+
+    result = LoopResult()
+    t0 = time.time()
+    for s in range(steps):
+        state, metrics = jit_step(state, batch_for(s))
+        loss = float(metrics["loss"])
+        result.losses.append(loss)
+        if log_every and (s % log_every == 0 or s == steps - 1):
+            log_fn(f"step {s:5d}  loss {loss:.4f}")
+        if checkpoint_path and checkpoint_every and \
+                (s + 1) % checkpoint_every == 0:
+            ckpt.save(checkpoint_path, state, step=s + 1)
+    result.steps = steps
+    result.wall_time = time.time() - t0
+
+    # held-out eval
+    from repro.models import model as modellib
+    ev = synthetic.eval_batch(cfg, tcfg.seed, batch=mb, seq=tcfg.seq_len)
+    params = (jax.tree_util.tree_map(lambda p: p[0], state.params)
+              if W > 1 else state.params)
+    result.final_eval_loss = float(modellib.loss_fn(
+        params, cfg, {"tokens": ev}, remat="none"))
+    if checkpoint_path:
+        ckpt.save(checkpoint_path, state, step=steps)
+    return result

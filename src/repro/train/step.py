@@ -1,0 +1,242 @@
+"""Train / serve step factories.
+
+The CentralVR worker model under SPMD (DESIGN.md §2): worker copies are a
+LEADING AXIS on every state leaf, sharded over the worker mesh axes, and
+the per-worker local step is vmapped — each device group computes its own
+worker's step, no cross-worker traffic. The paper's epoch-boundary
+server exchange is a mean over the worker axis (lowers to one all-reduce
+over the worker mesh axes), executed only when step % (M*K) == M*K-1 —
+this is THE communication-frequency lever the paper contributes, and it is
+directly visible in the dry-run HLO as a conditional collective.
+
+Modes (TrainConfig.vr / vr_workers):
+  vr="none", W=1       — classic sync data-parallel SGD/Adam: loss is the
+                         global-batch mean, GSPMD all-reduces gradients
+                         EVERY step (the baseline the paper beats).
+  vr=..., workers=data — paper-faithful CentralVR-Sync: full model copy
+                         per data-axis group (dp_replicated).
+  vr=..., workers=pod  — hierarchical (beyond-paper): FSDP inside a pod,
+                         CentralVR across pods; cross-pod traffic only at
+                         epoch boundaries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, TrainConfig
+from repro.launch import mesh as meshlib
+from repro.models import model
+from repro.optim import optimizers, vr_wrapper
+from repro.sharding import specs
+
+tmap = jax.tree_util.tree_map
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    vr_state: Any       # VRState or () when vr="none"
+    step: jax.Array
+
+
+def _loss(params, cfg, tcfg, tokens, fe, act_sharding=None):
+    batch = {"tokens": tokens}
+    if fe is not None:
+        batch["frontend_embeds"] = fe
+    return model.loss_fn(params, cfg, batch, remat=tcfg.remat,
+                         act_sharding=act_sharding)
+
+
+def _local_grads(params, cfg, tcfg, tokens, fe, act_sharding=None):
+    """tokens: (A, mb, S); gradient accumulated over A microbatches.
+
+    Gradients are taken against a COMPUTE-DTYPE (bf16) copy of the params,
+    cast ONCE outside the accumulation loop: every per-microbatch FSDP
+    weight all-gather then moves bf16 instead of the f32 masters, and the
+    backward cotangents (incl. the deferred partial-sum all-reduces GSPMD
+    emits for 2D-sharded weights) stay bf16 — measured ~2x collective cut
+    on qwen1.5-110b/train_4k (EXPERIMENTS.md §Perf It.6). The f32 masters
+    are touched only by the optimizer/VR update, once per step.
+    """
+    A = tokens.shape[0]
+    compute = jnp.dtype(cfg.dtype)
+    params_c = tmap(
+        lambda p: p.astype(compute)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+    lg = jax.value_and_grad(_loss)
+
+    def acc(carry, xs):
+        loss_acc, g_acc = carry
+        t, f = xs
+        loss, g = lg(params_c, cfg, tcfg, t, f, act_sharding)
+        g_acc = tmap(lambda a, b: a + b.astype(jnp.float32) / A, g_acc, g)
+        return (loss_acc + loss / A, g_acc), None
+
+    g0 = tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if fe is None:
+        def acc_nofe(carry, t):
+            return acc(carry, (t, None))
+        (loss, grads), _ = jax.lax.scan(acc_nofe, (jnp.zeros(()), g0), tokens)
+    else:
+        (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), g0),
+                                        (tokens, fe))
+    return loss, grads
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                    vr_workers: str = "none"):
+    """Returns (train_step(state, tokens, fe), meta dict)."""
+    W = meshlib.worker_count(mesh, vr_workers) if tcfg.vr != "none" else 1
+    M = tcfg.vr_table_size
+    K = tcfg.local_epoch
+    comm_every = M * K
+    opt = optimizers.make(tcfg.optimizer, tcfg.learning_rate,
+                          tcfg.weight_decay)
+    mode = tcfg.vr
+
+    # In FSDP mode, pin the residual stream to batch-over-'data' so the
+    # partitioner gathers per-layer WEIGHTS (ZeRO-3 semantics), not the
+    # activations, and enable the explicit per-layer weight-gather context
+    # (manual ZeRO; §Perf It.6). Only when the 'data' axis actually shards
+    # the batch (W==1, or pod-level workers with data free).
+    act_sharding = None
+    if (not tcfg.dp_replicated and "data" in mesh.axis_names
+            and mesh.devices.size > 1):
+        w_axes = (meshlib.worker_axes(mesh, vr_workers)
+                  if tcfg.vr != "none" else ())
+        if "data" not in w_axes:
+            act_sharding = NamedSharding(mesh, P("data", None, None))
+            from repro.sharding import gather_ctx
+            gather_ctx.enable(mesh, cfg, meshlib.mesh_axis_sizes(mesh))
+
+    def per_worker(params, vr_state, opt_state, tokens, fe):
+        loss, g = _local_grads(params, cfg, tcfg, tokens, fe, act_sharding)
+        if mode == "svrg":
+            _, g_snap = _local_grads(vr_state.snapshot, cfg, tcfg, tokens,
+                                     fe, act_sharding)
+            v, vr_state = vr_wrapper.correct(mode, vr_state, g, M,
+                                             g_snap=g_snap, params=params)
+        elif mode != "none":
+            v, vr_state = vr_wrapper.correct(mode, vr_state, g, M,
+                                             params=params)
+        else:
+            v = g
+        updates, opt_state = opt.update(v, opt_state, params)
+        params = optimizers.apply_updates(params, updates)
+        return params, vr_state, opt_state, loss
+
+    def train_step(state: TrainState, tokens, fe=None):
+        """tokens: (W, A, mb, S) when W>1 else (A, mb, S)."""
+        if W > 1:
+            params, vr_state, opt_state, loss = jax.vmap(
+                per_worker, in_axes=(0, 0, 0, 0, 0 if fe is not None else None)
+            )(state.params, state.vr_state, state.opt_state, tokens, fe)
+            loss = loss.mean()
+
+            def communicate(args):
+                params, vr_state = args
+                # Algorithm 2 lines 16-18: average x and gbar across the
+                # worker axis (one all-reduce over the worker mesh axes);
+                # tables/accumulators stay local
+                params = tmap(
+                    lambda p: jnp.broadcast_to(p.mean(0, keepdims=True),
+                                               p.shape).astype(p.dtype),
+                    params)
+                if mode != "none":
+                    gbar = tmap(
+                        lambda g: jnp.broadcast_to(g.mean(0, keepdims=True),
+                                                   g.shape),
+                        vr_state.gbar)
+                    vr_state = vr_state._replace(gbar=gbar)
+                return params, vr_state
+
+            boundary = (state.step + 1) % comm_every == 0
+            params, vr_state = jax.lax.cond(
+                boundary, communicate, lambda a: a, (params, vr_state))
+        else:
+            params, vr_state, opt_state, loss = per_worker(
+                state.params, state.vr_state, state.opt_state, tokens, fe)
+        return TrainState(params, opt_state, vr_state, state.step + 1), {
+            "loss": loss}
+
+    meta = {"workers": W, "comm_every": comm_every,
+            "grads_per_step": vr_wrapper.grads_per_step(mode),
+            "vr_storage_mult": vr_wrapper.storage_multiplier(mode, M)}
+    return train_step, meta
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key, W: int
+                     ) -> TrainState:
+    """Concrete init (small models / examples). Workers start identical."""
+    params = model.init_params(cfg, key)
+    opt = optimizers.make(tcfg.optimizer, tcfg.learning_rate,
+                          tcfg.weight_decay)
+    opt_state = opt.init(params)
+    vr_state = (vr_wrapper.init_vr(tcfg.vr, params, tcfg.vr_table_size)
+                if tcfg.vr != "none" else ())
+    state = TrainState(params, opt_state, vr_state, jnp.zeros((), jnp.int32))
+    if W > 1:
+        def rep(x):
+            return jnp.broadcast_to(x[None], (W,) + x.shape)
+        state = TrainState(tmap(rep, params), tmap(rep, opt_state),
+                           tmap(rep, vr_state) if vr_state != () else (),
+                           state.step)
+    return state
+
+
+def eval_shape_train_state(cfg: ModelConfig, tcfg: TrainConfig, W: int):
+    """Abstract TrainState (ShapeDtypeStructs, no allocation) — dry-run."""
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg, tcfg, W=W),
+        jax.random.PRNGKey(0))
+
+
+def state_shardings(state_shapes, cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                    vr_workers: str):
+    w_axes = (meshlib.worker_axes(mesh, vr_workers)
+              if tcfg.vr != "none" else ())
+    spec_tree = specs.tree_specs(state_shapes, cfg,
+                                 fsdp=not tcfg.dp_replicated,
+                                 worker_axes=w_axes,
+                                 axis_sizes=meshlib.mesh_axis_sizes(mesh))
+    return tmap(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def batch_sharding(mesh, tcfg: TrainConfig, vr_workers: str, *, with_fe=False):
+    w_axes = (meshlib.worker_axes(mesh, vr_workers)
+              if tcfg.vr != "none" else ())
+    data_axes = tuple(a for a in ("pod", "data")
+                      if a in mesh.axis_names and a not in w_axes)
+    tok = specs.batch_specs(w_axes, data_axes)
+    out = {"tokens": NamedSharding(mesh, tok)}
+    if with_fe:
+        out["fe"] = NamedSharding(mesh, P(*(tuple(tok) + (None,))))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, act_sharding=None):
+    def serve_step(params, token, cache, pos):
+        return model.decode_step(params, cfg, token, cache, pos)
+
+    def serve_prefill(params, tokens, fe=None):
+        """Returns LAST-position logits (B, vocab) — the generation
+        use-case. Materializing all (B, S, vocab) f32 logits costs 40
+        GiB/device at 32k x 152k vocab (§Perf It.4); scoring workloads
+        should stream positions instead."""
+        batch = {"tokens": tokens}
+        if fe is not None:
+            batch["frontend_embeds"] = fe
+        logits, _ = model.forward(params, cfg, batch, remat="none",
+                                  act_sharding=act_sharding)
+        return logits[:, -1]
+
+    return serve_step, serve_prefill

@@ -1,0 +1,117 @@
+"""Distributed-algorithm semantics (Algorithms 2-5) on simulated workers.
+
+Key exact invariant: the async delta algebra keeps the central iterate
+equal to the mean of the workers' latest contributions at every event —
+the paper's "replace the previous contribution" property.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ConvexConfig
+from repro.core import baselines, convex, distributed
+
+
+def _sharded(seed=0, p=4, n=120, d=12, kind="logistic"):
+    cfg = ConvexConfig(problem=kind, n=n, d=d, workers=p)
+    return distributed.make_distributed(jax.random.PRNGKey(seed), cfg)
+
+
+def test_sync_converges_to_global_optimum():
+    sp = _sharded(p=4)
+    merged = sp.merged()
+    xstar = convex.solve_exact(merged)
+    st, rels = distributed.run_sync(sp, eta=0.05, rounds=40,
+                                    key=jax.random.PRNGKey(1))
+    assert rels[-1] < 1e-8, rels[-5:]
+    np.testing.assert_allclose(np.asarray(st.x), np.asarray(xstar),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_async_delta_replacement_invariant():
+    """x_c == mean_s(x_old_s) after every event (exact algebra)."""
+    sp = _sharded(seed=2, p=3, n=60, d=6)
+    st = distributed.async_init(sp, 0.05, jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), 9)
+    for t in range(9):
+        st = distributed.async_event(sp, st, t % sp.p, 0.05, keys[t])
+        np.testing.assert_allclose(np.asarray(st.x_c),
+                                   np.asarray(st.x_old.mean(0)),
+                                   rtol=1e-10, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(st.gbar_c),
+                                   np.asarray(st.gbar_old.mean(0)),
+                                   rtol=1e-10, atol=1e-12)
+
+
+def test_async_converges_round_robin_and_heterogeneous():
+    sp = _sharded(seed=3, p=4)
+    _, rels = distributed.run_async(sp, eta=0.05, rounds=40,
+                                    key=jax.random.PRNGKey(2))
+    assert rels[-1] < 1e-7, rels[-5:]
+    # heterogeneous speeds: 4x spread — the delta form keeps it stable
+    _, rels_h = distributed.run_async(sp, eta=0.05, rounds=40,
+                                      key=jax.random.PRNGKey(2),
+                                      speeds=[1.0, 1.0, 2.0, 4.0])
+    assert rels_h[-1] < 1e-5, rels_h[-5:]
+
+
+def test_dsvrg_converges():
+    sp = _sharded(seed=4, p=4)
+    _, rels = distributed.run_dsvrg(sp, eta=0.05, rounds=25,
+                                    key=jax.random.PRNGKey(3))
+    assert rels[-1] < 1e-8, rels[-5:]
+
+
+@pytest.mark.parametrize("tau", [25, 120])
+def test_dsaga_stable_across_tau(tau):
+    """§5.2: stable for a range of communication periods."""
+    sp = _sharded(seed=5, p=4)
+    _, rels = distributed.run_dsaga(sp, eta=0.03, rounds=30,
+                                    key=jax.random.PRNGKey(4), tau=tau)
+    assert rels[-1] < 1e-2, rels[-5:]
+    assert np.isfinite(np.asarray(rels)).all()
+
+
+def test_dsaga_literal_scaling_is_worse():
+    """The printed alpha-on-gbar line lags the table mean; our consistent
+    default must converge at least as fast (documents the deviation)."""
+    sp = _sharded(seed=6, p=4)
+    _, r_default = distributed.run_dsaga(sp, eta=0.03, rounds=25,
+                                         key=jax.random.PRNGKey(5), tau=60)
+    _, r_literal = distributed.run_dsaga(sp, eta=0.03, rounds=25,
+                                         key=jax.random.PRNGKey(5), tau=60,
+                                         literal_scaling=True)
+    assert r_default[-1] <= r_literal[-1] * 1.5
+
+
+def test_vr_methods_beat_sgd_baselines_distributed():
+    """Fig. 2 qualitative claim: at equal local-gradient budget the VR
+    methods reach much lower gradient norm than dist-SGD/EASGD."""
+    sp = _sharded(seed=7, p=4)
+    rounds = 20
+    _, r_cvr = distributed.run_sync(sp, eta=0.05, rounds=rounds,
+                                    key=jax.random.PRNGKey(6))
+    best_base = np.inf
+    for eta in (0.1, 0.05):
+        _, r_sgd = baselines.run_dist_sgd(sp, eta=eta, rounds=rounds,
+                                          key=jax.random.PRNGKey(6))
+        _, r_ea = baselines.run_easgd(sp, eta=eta, rounds=rounds,
+                                      key=jax.random.PRNGKey(6))
+        best_base = min(best_base, float(r_sgd[-1]), float(r_ea[-1]))
+    assert float(r_cvr[-1]) < best_base * 1e-2
+
+
+def test_weak_scaling_epochs_to_tolerance():
+    """The linear-scaling claim, in its hardware-independent form: with
+    per-worker data fixed, the number of communication rounds to reach a
+    fixed tolerance does not grow with p (here: p=2 vs p=8)."""
+    def rounds_to(sp, eps, key):
+        _, rels = distributed.run_sync(sp, eta=0.05, rounds=30, key=key)
+        hit = np.nonzero(np.asarray(rels) < eps)[0]
+        return int(hit[0]) + 1 if hit.size else 10_000
+
+    eps = 1e-6
+    r2 = rounds_to(_sharded(seed=8, p=2, n=100, d=10), eps, jax.random.PRNGKey(7))
+    r8 = rounds_to(_sharded(seed=8, p=8, n=100, d=10), eps, jax.random.PRNGKey(7))
+    assert r8 <= r2 * 2, (r2, r8)

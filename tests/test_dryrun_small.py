@@ -1,0 +1,85 @@
+"""End-to-end dry-run machinery test on a SMALL virtual mesh (subprocess
+with 8 forced host devices): reduced archs x all four shape modes must
+lower + compile with the same code path as the production dry-run, and the
+roofline record must be complete.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json, dataclasses
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.config import get_arch, TrainConfig, InputShape
+    from repro.models import model as modellib
+    from repro.sharding import specs
+    from repro.train import step as tstep
+    from repro.roofline import analysis, hlo_cost
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = {}
+    for arch in ["qwen2-7b", "mamba2-130m", "qwen3-moe-30b-a3b",
+                 "recurrentgemma-2b"]:
+        cfg = get_arch(arch).reduced()
+        # --- train ---
+        tcfg = TrainConfig(seq_len=64, global_batch=8, optimizer="sgd",
+                           vr="centralvr", vr_table_size=2)
+        ts, meta = tstep.make_train_step(cfg, tcfg, mesh, "none")
+        st = tstep.eval_shape_train_state(cfg, tcfg, 1)
+        sh = tstep.state_shardings(st, cfg, tcfg, mesh, "none")
+        toks = jax.ShapeDtypeStruct((2, 4, 64), jnp.int32)
+        bsh = tstep.batch_sharding(mesh, tcfg, "none")
+        c = jax.jit(ts, in_shardings=(sh, bsh["tokens"]),
+                    out_shardings=(sh, None)).lower(st, toks).compile()
+        hc = hlo_cost.analyze_hlo(c.as_text())
+        rec = {"train_flops": hc.flops, "train_coll": hc.collective_bytes}
+        # --- decode ---
+        params = jax.eval_shape(
+            lambda: modellib.init_params(cfg, jax.random.PRNGKey(0)))
+        cache = jax.eval_shape(lambda: modellib.init_cache(cfg, 8, 64))
+        psh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            specs.tree_specs(params, cfg, fsdp=True, axis_sizes=sizes))
+        csh = jax.tree_util.tree_map(
+            lambda leaf: NamedSharding(
+                mesh, P(*( [None] * (leaf.ndim - 1) + [None]))),
+            cache)
+        step_fn, prefill_fn = tstep.make_serve_step(cfg)
+        tok = jax.ShapeDtypeStruct((8, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        c2 = jax.jit(step_fn).lower(params, tok, cache, pos).compile()
+        rec["decode_ok"] = True
+        rec["mem"] = c.memory_analysis().temp_size_in_bytes
+        out[arch] = rec
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def result():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_all_families_lower_and_compile(result):
+    assert set(result) == {"qwen2-7b", "mamba2-130m", "qwen3-moe-30b-a3b",
+                           "recurrentgemma-2b"}
+    for arch, rec in result.items():
+        assert rec["decode_ok"], arch
+        assert rec["train_flops"] > 0, arch
+
+
+def test_memory_analysis_present(result):
+    for arch, rec in result.items():
+        assert rec["mem"] > 0, arch

@@ -1,0 +1,221 @@
+"""Pallas kernel validation (interpret=True executes kernel bodies on CPU):
+shape/dtype sweeps + hypothesis, assert_allclose against the ref.py
+pure-jnp oracles.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rmsnorm import ops as rn_ops
+from repro.kernels.rmsnorm import ref as rn_ref
+from repro.kernels.vr_update import kernel as vr_kernel
+from repro.kernels.vr_update import ops as vr_ops
+from repro.kernels.vr_update import ref as vr_ref
+
+jtu = jax.tree_util
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 64, 2, 2, 16),     # MHA
+    (2, 64, 4, 2, 32),     # GQA group 2
+    (1, 128, 8, 1, 16),    # MQA
+    (1, 40, 4, 4, 16),     # ragged S (padding path)
+])
+def test_flash_attention_sweep(B, S, H, KV, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32).astype(dtype)
+    out = fa_ops.flash_attention(q, k, v, q_blk=32, kv_blk=32,
+                                 interpret=True)
+    ref = fa_ref.flash_attention_naive(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [8, 32])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 96, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 96, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 96, 2, 16), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, window=window, q_blk=32,
+                                 kv_blk=32, interpret=True)
+    ref = fa_ref.flash_attention_naive(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       qb=st.sampled_from([16, 32, 64]), kb=st.sampled_from([16, 32]))
+def test_flash_attention_block_invariance(seed, qb, kb):
+    """Property: output independent of block decomposition."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 16), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, q_blk=qb, kv_blk=kb,
+                                 interpret=True)
+    ref = fa_ref.flash_attention_naive(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 8, 64), (3, 128), (1, 1, 256),
+                                   (7, 33)])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape,
+                          jnp.float32).astype(dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), jnp.float32)
+    y = rn_ops.rmsnorm(x, s, interpret=True)
+    ref = rn_ref.rmsnorm_ref(x.reshape(-1, shape[-1]), s).reshape(shape)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 40), d=st.sampled_from([32, 64, 128]),
+       seed=st.integers(0, 100))
+def test_rmsnorm_property(rows, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d), jnp.float32)
+    s = jnp.ones((d,))
+    y = rn_ops.rmsnorm(x, s, interpret=True)
+    # unit-RMS property
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# vr_update
+# ---------------------------------------------------------------------------
+
+def _trees(seed, sizes=((100,), (7, 13), (3, 4, 5))):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    mk = lambda k: {"leaves": [jax.random.normal(jax.random.fold_in(k, i),
+                                                 s, jnp.float32)
+                               for i, s in enumerate(sizes)]}
+    return [mk(k) for k in ks]
+
+
+@pytest.mark.parametrize("saga", [False, True])
+@pytest.mark.parametrize("m", [1, 4, 16])
+def test_vr_update_matches_ref(saga, m):
+    x, g, gold, gbar, gtilde = _trees(0)
+    out = vr_ops.vr_update(x, g, gold, gbar, gtilde, eta=0.05, m=m,
+                           saga=saga, interpret=True)
+    for i in range(4):
+        got = jtu.tree_leaves(out[i])
+        exp = [vr_ref.vr_update_ref(*leaves, eta=0.05, m=m, saga=saga)[i]
+               for leaves in zip(*(jtu.tree_leaves(t)
+                                   for t in (x, g, gold, gbar, gtilde)))]
+        for a, b in zip(got, exp):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 3 * vr_kernel.TILE))
+def test_vr_update_any_length(seed, n):
+    """Property: padding path correct for arbitrary flat lengths."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x, g, gold, gbar, gtilde = (jax.random.normal(k, (n,), jnp.float32)
+                                for k in ks)
+    xo, tbl, gto, gbo = vr_ops.vr_update(
+        x, g, gold, gbar, gtilde, eta=0.1, m=4, interpret=True)
+    ex, etbl, egto, egbo = vr_ref.vr_update_ref(x, g, gold, gbar, gtilde,
+                                                eta=0.1, m=4)
+    kw = dict(rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(xo), np.asarray(ex), **kw)
+    np.testing.assert_allclose(np.asarray(tbl), np.asarray(etbl), **kw)
+    np.testing.assert_allclose(np.asarray(gto), np.asarray(egto), **kw)
+    np.testing.assert_allclose(np.asarray(gbo), np.asarray(egbo), **kw)
+
+
+def test_vr_update_semantics_vs_wrapper():
+    """The fused kernel implements exactly one vr_wrapper CentralVR step
+    (mid-epoch; the epoch-boundary anchor swap happens outside)."""
+    from repro.optim import vr_wrapper
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (50,),
+                                     jnp.float32)}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (50,), jnp.float32)}
+    M = 4
+    st_ = vr_wrapper.init_vr("centralvr", params, M)
+    # put something in table slot 0 and the anchor
+    table0 = {"w": jax.random.normal(jax.random.PRNGKey(2), (50,),
+                                     jnp.float32)}
+    st_ = st_._replace(
+        table={"w": st_.table["w"].at[0].set(table0["w"])},
+        gbar={"w": jax.random.normal(jax.random.PRNGKey(3), (50,),
+                                     jnp.float32)})
+    v, st2 = vr_wrapper.correct("centralvr", st_, g, M)
+    xo, tbl, gto, _ = vr_ops.vr_update(
+        params, g, table0, st_.gbar, st_.gtilde, eta=0.05, m=M,
+        interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(xo["w"]),
+        np.asarray(params["w"] - 0.05 * v["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(tbl["w"]),
+                               np.asarray(st2.table["w"][0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gto["w"]),
+                               np.asarray(st2.gtilde["w"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+from repro.kernels.ssd_scan import ops as ssd_ops  # noqa: E402
+from repro.models import ssm as ssm_mod  # noqa: E402
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("B,S,H,P,N", [(2, 32, 3, 8, 16), (1, 24, 2, 4, 8)])
+def test_ssd_scan_kernel_matches_naive(chunk, B, S, H, P, N):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32))
+    Bc = jax.random.normal(ks[2], (B, S, N), jnp.float32)
+    Cc = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    y = ssd_ops.ssd_scan(x, dt, A_log, Bc, Cc, chunk=chunk, interpret=True)
+    y_ref, _ = ssm_mod.ssd_naive(x, dt, A_log, Bc, Cc,
+                                 jnp.zeros((B, H, P, N)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000), s_len=st.integers(9, 40))
+def test_ssd_scan_kernel_ragged_lengths(seed, s_len):
+    """Property: padding path exact for arbitrary sequence lengths."""
+    B, H, P, N = 1, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (B, s_len, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s_len, H)))
+    A_log = jnp.zeros((H,))
+    Bc = jax.random.normal(ks[2], (B, s_len, N), jnp.float32)
+    Cc = jax.random.normal(ks[3], (B, s_len, N), jnp.float32)
+    y = ssd_ops.ssd_scan(x, dt, A_log, Bc, Cc, chunk=8, interpret=True)
+    y_ref, _ = ssm_mod.ssd_naive(x, dt, A_log, Bc, Cc,
+                                 jnp.zeros((B, H, P, N)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)

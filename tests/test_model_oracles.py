@@ -1,0 +1,217 @@
+"""Algorithmic oracles for the model substrate:
+
+  * chunked flash-style attention == naive attention (GQA, windows, softcap),
+  * chunked SSD scan == naive sequential recurrence,
+  * RG-LRU associative scan == step-by-step recurrence,
+  * MoE sort-dispatch == dense one-hot reference (no dropping).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ModelConfig
+from repro.models import attention, moe, rglru, ssm
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("window", [None, 7])
+def test_chunked_attention_matches_naive(H, KV, window):
+    key = jax.random.PRNGKey(0)
+    B, S, hd = 2, 32, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KV, hd), jnp.float32)
+    out_c = attention.chunked_attention(q, k, v, window=window,
+                                        q_chunk=8, kv_chunk=8)
+    out_n = attention.naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_n),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000),
+       chunks=st.sampled_from([(4, 4), (8, 16), (16, 8), (32, 32)]))
+def test_chunked_attention_chunk_size_invariance(seed, chunks):
+    """Output must not depend on the chunking (property test)."""
+    key = jax.random.PRNGKey(seed)
+    B, S, H, KV, hd = 1, 32, 2, 2, 8
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KV, hd), jnp.float32)
+    qc, kc = chunks
+    out = attention.chunked_attention(q, k, v, q_chunk=qc, kv_chunk=kc)
+    ref = attention.naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_attention_softcap():
+    key = jax.random.PRNGKey(3)
+    B, S, H, hd = 1, 16, 2, 8
+    q = jax.random.normal(key, (B, S, H, hd)) * 4.0
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd)) * 4.0
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    out_c = attention.chunked_attention(q, k, v, q_chunk=4, kv_chunk=4,
+                                        softcap=20.0)
+    out_n = attention.naive_attention(q, k, v, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_n),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_naive(chunk):
+    key = jax.random.PRNGKey(1)
+    B, S, H, P, N = 2, 32, 3, 4, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32))
+    Bc = jax.random.normal(ks[2], (B, S, N), jnp.float32)
+    Cc = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    y_chunk, h_chunk = ssm._ssd_chunked(x, dt, A_log, Bc, Cc, h0, chunk)
+    y_naive, h_naive = ssm.ssd_naive(x, dt, A_log, Bc, Cc, h0)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_naive),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_nonzero_initial_state():
+    """Decode continuation: chunked scan from h0 != 0 must equal naive."""
+    key = jax.random.PRNGKey(2)
+    B, S, H, P, N = 1, 16, 2, 4, 8
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jnp.zeros((H,))
+    Bc = jax.random.normal(ks[2], (B, S, N), jnp.float32)
+    Cc = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    h0 = jax.random.normal(ks[4], (B, H, P, N), jnp.float32)
+    y_c, hf_c = ssm._ssd_chunked(x, dt, A_log, Bc, Cc, h0, 4)
+    y_n, hf_n = ssm.ssd_naive(x, dt, A_log, Bc, Cc, h0)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_n),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf_c), np.asarray(hf_n),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def test_rglru_scan_matches_steps():
+    cfg = ModelConfig(name="t", family="hybrid", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
+                      vocab_size=64, rglru_heads=2,
+                      block_pattern=("rec", "local"), local_window=8)
+    p = rglru.init_rglru(cfg, jax.random.PRNGKey(0), jnp.float32)
+    B, S = 2, 20
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    h_scan, h_last = rglru.rglru_scan(p, x)
+    h = jnp.zeros((B, cfg.d_model))
+    outs = []
+    for t in range(S):
+        o, h = rglru.rglru_step(p, x[:, t:t + 1], h)
+        outs.append(o[:, 0])
+    h_steps = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h_steps),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_decay_bounded():
+    """|a_t| < 1 always: the recurrence is contractive (stability)."""
+    cfg = ModelConfig(name="t", family="hybrid", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=1, head_dim=8, d_ff=32,
+                      vocab_size=64, rglru_heads=2, block_pattern=("rec",))
+    p = rglru.init_rglru(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 16)) * 10.0
+    log_a, _ = rglru._gates(p, x)
+    assert np.all(np.asarray(log_a) < 0.0)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(E=4, K=2, shared=False):
+    return ModelConfig(name="t", family="moe", num_layers=2, d_model=16,
+                       num_heads=2, num_kv_heads=2, head_dim=8, d_ff=32,
+                       vocab_size=64, num_experts=E, num_experts_per_tok=K,
+                       moe_d_ff=8,
+                       shared_expert_d_ff=16 if shared else 0,
+                       shared_expert_gate=shared)
+
+
+def _moe_dense_reference(p, cfg, x):
+    """One-hot dense dispatch (no capacity limit)."""
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    topk_p, topk_e = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    topk_p = topk_p / topk_p.sum(-1, keepdims=True)
+    w = jnp.zeros((xt.shape[0], cfg.num_experts)).at[
+        jnp.arange(xt.shape[0])[:, None], topk_e].set(topk_p)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["wg"])) * jnp.einsum(
+        "td,edf->tef", xt, p["wu"])
+    y_all = jnp.einsum("tef,efd->ted", h, p["wd"])
+    y = jnp.einsum("ted,te->td", y_all, w)
+    if "shared" in p:
+        from repro.models import layers
+        sh = layers.apply_mlp(p["shared"], xt, "swiglu")
+        if "shared_gate" in p:
+            sh = sh * jax.nn.sigmoid(xt @ p["shared_gate"])
+        y = y + sh
+    return y.reshape(B, S, d)
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_moe_sort_dispatch_matches_dense_reference(shared):
+    cfg = _moe_cfg(shared=shared)
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, aux = moe.apply_moe(p, cfg, x, capacity_factor=float(cfg.num_experts))
+    y_ref = _moe_dense_reference(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-5)
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_overflow():
+    """With capacity 'too small', output != reference but stays finite and
+    the kept tokens' contributions are a subset (bounded norm)."""
+    cfg = _moe_cfg()
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    y_small, _ = moe.apply_moe(p, cfg, x, capacity_factor=0.25)
+    y_full, _ = moe.apply_moe(p, cfg, x, capacity_factor=4.0)
+    assert np.isfinite(np.asarray(y_small)).all()
+    n_small = float(jnp.linalg.norm(y_small))
+    n_full = float(jnp.linalg.norm(y_full))
+    assert n_small < n_full
+
+
+def test_moe_load_balance_loss_uniform_router_is_minimal():
+    """aux ~= coef for a perfectly uniform router (Switch normalization)."""
+    cfg = _moe_cfg()
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    p = dict(p, router=jnp.zeros_like(p["router"]))
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 64, cfg.d_model))
+    _, aux = moe.apply_moe(p, cfg, x)
+    assert abs(float(aux) - cfg.router_aux_coef) < 0.2 * cfg.router_aux_coef

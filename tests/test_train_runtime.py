@@ -1,0 +1,180 @@
+"""Training-runtime semantics on a single device:
+
+  * VR wrapper state algebra (table cycling, anchor refresh, SVRG snapshot),
+  * train_step with every vr mode makes progress and stays finite,
+  * gradient accumulation == large-batch gradient,
+  * checkpoint save/restore roundtrip,
+  * data pipeline determinism (the finite-sum contract).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.config import TrainConfig, get_arch
+from repro.data import synthetic
+from repro.launch import mesh as meshlib
+from repro.models import model
+from repro.optim import vr_wrapper
+from repro.train import step as tstep
+
+tmap = jax.tree_util.tree_map
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_arch("qwen2-7b").reduced()
+
+
+def test_vr_state_cycle_and_anchor_refresh():
+    params = {"w": jnp.zeros((3,), jnp.float32)}
+    M = 3
+    st = vr_wrapper.init_vr("centralvr", params, M)
+    gs = [{"w": jnp.full((3,), float(i + 1))} for i in range(M)]
+    # epoch 1: table fills; anchor stays zero until the epoch ends
+    for i in range(M):
+        v, st = vr_wrapper.correct("centralvr", st, gs[i], M)
+        if i < M - 1:
+            np.testing.assert_array_equal(np.asarray(st.gbar["w"]), 0.0)
+    # after the epoch: gbar = mean of fresh grads = (1+2+3)/3 = 2
+    np.testing.assert_allclose(np.asarray(st.gbar["w"]), 2.0)
+    assert int(st.idx) == 0
+    # epoch 2 corrections: v_i = g_i - table_i + gbar with table = g_i
+    v, st2 = vr_wrapper.correct("centralvr", st, gs[0], M)
+    np.testing.assert_allclose(np.asarray(v["w"]), 2.0)  # g - g + gbar
+
+
+def test_vr_correction_unbiased_over_epoch():
+    """Summed over one epoch, corrections == summed fresh gradients (the
+    LM-scale analogue of Eq. 7's telescoping)."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    M = 4
+    st = vr_wrapper.init_vr("centralvr", params, M)
+    # fill table (epoch 1)
+    gs1 = [{"w": jax.random.normal(jax.random.fold_in(key, i), (4,))}
+           for i in range(M)]
+    for g in gs1:
+        _, st = vr_wrapper.correct("centralvr", st, g, M)
+    gs2 = [{"w": jax.random.normal(jax.random.fold_in(key, 100 + i), (4,))}
+           for i in range(M)]
+    vsum = jnp.zeros((4,))
+    for g in gs2:
+        v, st = vr_wrapper.correct("centralvr", st, g, M)
+        vsum = vsum + v["w"]
+    expected = sum(g["w"] for g in gs2)  # corrections telescope:
+    # sum(g_i - old_i + gbar) = sum(g_i) - M*gbar + M*gbar
+    np.testing.assert_allclose(np.asarray(vsum), np.asarray(expected),
+                               rtol=1e-6)
+
+
+def test_svrg_snapshot_refresh():
+    params = {"w": jnp.ones((2,), jnp.float32)}
+    M = 2
+    st = vr_wrapper.init_vr("svrg", params, M)
+    g = {"w": jnp.ones((2,))}
+    v, st = vr_wrapper.correct("svrg", st, g, M, g_snap=g, params=params)
+    np.testing.assert_allclose(np.asarray(v["w"]), 0.0)  # g - g + 0
+    new_params = {"w": jnp.full((2,), 5.0, jnp.float32)}
+    v, st = vr_wrapper.correct("svrg", st, g, M, g_snap=g,
+                               params=new_params)
+    # epoch ended: snapshot <- new params
+    np.testing.assert_allclose(np.asarray(st.snapshot["w"]), 5.0)
+
+
+@pytest.mark.parametrize("vr", ["none", "centralvr", "svrg", "saga"])
+def test_train_step_modes_make_progress(cfg, vr):
+    tcfg = TrainConfig(optimizer="sgd", learning_rate=0.1, vr=vr,
+                       vr_table_size=4, local_epoch=1)
+    mesh = meshlib.make_test_mesh()
+    train_step, meta = tstep.make_train_step(cfg, tcfg, mesh, "none")
+    assert meta["grads_per_step"] == (2 if vr == "svrg" else 1)
+    state = tstep.init_train_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+    js = jax.jit(train_step)
+    losses = []
+    for s in range(8):
+        toks = synthetic.epoch_batch(cfg, 0, s, workers=1, accum=1,
+                                     microbatch=2, seq=32, table_size=4)[0]
+        state, m = js(state, toks)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], (vr, losses)
+
+
+def test_grad_accumulation_matches_big_batch(cfg):
+    """(A=4, mb=1) accumulated gradient == (A=1, mb=4) gradient."""
+    import dataclasses
+    cfg32 = dataclasses.replace(cfg, dtype="float32")
+    tcfg = TrainConfig()
+    params = model.init_params(cfg32, jax.random.PRNGKey(0))
+    toks = synthetic.microbatch_tokens(cfg32, 0, 0, 0, 4, 32)
+
+    _, g_acc = tstep._local_grads(params, cfg32, tcfg,
+                                  toks.reshape(4, 1, 32), None)
+    _, g_big = tstep._local_grads(params, cfg32, tcfg,
+                                  toks.reshape(1, 4, 32), None)
+    flat_a = jax.tree_util.tree_leaves(g_acc)
+    flat_b = jax.tree_util.tree_leaves(g_big)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_data_pipeline_finite_sum_contract(cfg):
+    """microbatch (w, i) is IDENTICAL across epochs; different (w, i) differ."""
+    a = synthetic.microbatch_tokens(cfg, 0, 1, 2, 2, 16)
+    b = synthetic.microbatch_tokens(cfg, 0, 1, 2, 2, 16)
+    c = synthetic.microbatch_tokens(cfg, 0, 1, 3, 2, 16)
+    d = synthetic.microbatch_tokens(cfg, 0, 2, 2, 2, 16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert not np.array_equal(np.asarray(a), np.asarray(d))
+    # step k uses index k mod M
+    e1 = synthetic.epoch_batch(cfg, 0, 1, workers=1, accum=1, microbatch=2,
+                               seq=16, table_size=4)
+    e2 = synthetic.epoch_batch(cfg, 0, 5, workers=1, accum=1, microbatch=2,
+                               seq=16, table_size=4)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+def test_checkpoint_roundtrip(cfg, tmp_path):
+    tcfg = TrainConfig(optimizer="adam", vr="centralvr", vr_table_size=2)
+    state = tstep.init_train_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt.save(path, state, step=7)
+    assert ckpt.latest_step(path) == 7
+    restored = ckpt.restore(path, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_centralvr_sane_vs_sgd_lm_scale(cfg):
+    """Sanity bound on the LM substrate: CentralVR's corrected updates stay
+    in the same convergence regime as plain SGD over a short run (within
+    2x) and strictly decrease. VR's ADVANTAGE appears near convergence —
+    that claim is validated faithfully on the paper's own convex problems
+    (tests/test_paper_invariants.py, benchmarks/fig1); early steep-descent
+    LM steps are not the paper's comparison regime."""
+    def run(vr):
+        tcfg = TrainConfig(optimizer="sgd", learning_rate=0.2, vr=vr,
+                           vr_table_size=4, local_epoch=1)
+        mesh = meshlib.make_test_mesh()
+        ts, _ = tstep.make_train_step(cfg, tcfg, mesh, "none")
+        state = tstep.init_train_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+        js = jax.jit(ts)
+        losses = []
+        for s in range(24):
+            toks = synthetic.epoch_batch(cfg, 0, s, workers=1, accum=1,
+                                         microbatch=2, seq=32, table_size=4)[0]
+            state, m = js(state, toks)
+            losses.append(float(m["loss"]))
+        return losses
+
+    cvr = run("centralvr")
+    sgd = run("none")
+    assert cvr[-1] < cvr[0]
+    assert np.mean(cvr[-4:]) <= np.mean(sgd[-4:]) * 2.0
