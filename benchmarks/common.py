@@ -22,6 +22,24 @@ def timed(fn: Callable, *args, repeat: int = 3, **kw):
     return times[len(times) // 2]
 
 
+def timed_cold_warm(fn: Callable, *args, repeat: int = 3, **kw):
+    """(cold_s, warm_s): wall time of the FIRST call (compile included for
+    jit-cached drivers) and the median of ``repeat`` subsequent calls.
+    Blocks on the returned pytree so async dispatch can't hide work."""
+    import jax
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args, **kw))
+    cold = time.perf_counter() - t0
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return cold, times[len(times) // 2]
+
+
 def emit(rows: List[Dict], name: str) -> None:
     """Print the required CSV (name,us_per_call,derived) and persist."""
     os.makedirs(RESULTS_DIR, exist_ok=True)

@@ -1,0 +1,106 @@
+"""Driver-runtime throughput: scan-based device-resident drivers vs the
+seed host-loop drivers (core/host_loop), establishing the repo's perf
+trajectory for the driver layer (DESIGN.md §3).
+
+For each worker count p we measure, on CPU:
+
+  * cold wall clock (first invocation — includes jit compilation; the
+    host-loop model re-traces its closures EVERY invocation, and for the
+    event-driven algorithms compiles p per-worker closures, so its cold
+    time grows with p);
+  * warm wall clock (subsequent invocations — the scan drivers hit the
+    module-level jit cache; the host loop compiles again);
+  * epochs/sec derived from warm wall clock.
+
+Writes ``BENCH_drivers.json`` at the repo root (the acceptance artifact:
+scan beats host loop on wall clock at p=8) plus the standard results CSV.
+
+    PYTHONPATH=src python -m benchmarks.driver_throughput [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit, timed_cold_warm
+from repro.config import ConvexConfig
+from repro.core import centralvr, convex, distributed, host_loop
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+WORKER_COUNTS = (1, 2, 4, 8)
+
+
+def _bench_pair(name, scan_fn, loop_fn, epochs, repeat):
+    scan_cold, scan_warm = timed_cold_warm(scan_fn, repeat=repeat)
+    loop_cold, loop_warm = timed_cold_warm(loop_fn, repeat=repeat)
+    return {
+        "name": name,
+        "us_per_call": scan_warm * 1e6,
+        "scan_cold_s": scan_cold,
+        "scan_warm_s": scan_warm,
+        "scan_compile_s": max(scan_cold - scan_warm, 0.0),
+        "loop_cold_s": loop_cold,
+        "loop_warm_s": loop_warm,
+        "scan_epochs_per_s": epochs / scan_warm,
+        "loop_epochs_per_s": epochs / loop_warm,
+        "speedup_warm": loop_warm / scan_warm,
+        "derived": (f"scan:cold={scan_cold:.3f}s,warm={scan_warm:.3f}s;"
+                    f"loop:cold={loop_cold:.3f}s,warm={loop_warm:.3f}s;"
+                    f"speedup={loop_warm / scan_warm:.1f}x"),
+    }
+
+
+def run(quick: bool = False):
+    n, d = (128, 16) if quick else (256, 64)
+    rounds = 4 if quick else 8
+    repeat = 2 if quick else 3
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    for p in WORKER_COUNTS:
+        if p == 1:
+            prob = convex.make_logistic_data(jax.random.PRNGKey(2), n, d)
+            eta = convex.auto_eta(prob, 0.3)
+            rows.append(_bench_pair(
+                "drivers/centralvr-p1",
+                lambda: centralvr.run(prob, eta=eta, epochs=rounds, key=key),
+                lambda: host_loop.run(prob, eta=eta, epochs=rounds, key=key),
+                rounds, repeat))
+            continue
+        cfg = ConvexConfig(problem="logistic", n=n, d=d, workers=p)
+        sp = distributed.make_distributed(jax.random.PRNGKey(2), cfg)
+        eta = convex.auto_eta(sp.merged(), 0.3)
+        rows.append(_bench_pair(
+            f"drivers/sync-p{p}",
+            lambda: distributed.run_sync(sp, eta=eta, rounds=rounds, key=key),
+            lambda: host_loop.run_sync(sp, eta=eta, rounds=rounds, key=key),
+            rounds, repeat))
+        rows.append(_bench_pair(
+            f"drivers/async-p{p}",
+            lambda: distributed.run_async(sp, eta=eta, rounds=rounds,
+                                          key=key),
+            lambda: host_loop.run_async(sp, eta=eta, rounds=rounds, key=key),
+            rounds, repeat))
+
+    p8 = [r for r in rows if r["name"].endswith("-p8")]
+    beats = all(r["speedup_warm"] > 1.0 for r in p8)
+    payload = {
+        "config": {"n_per_worker": n, "d": d, "rounds": rounds,
+                   "workers": list(WORKER_COUNTS), "quick": quick,
+                   "backend": jax.default_backend()},
+        "rows": rows,
+        "scan_beats_loop_at_p8": beats,
+    }
+    with open(os.path.join(ROOT, "BENCH_drivers.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    emit(rows, "driver_throughput")
+    print(f"scan_beats_loop_at_p8={'yes' if beats else 'no'}")
+    return payload
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

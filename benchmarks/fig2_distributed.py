@@ -51,8 +51,12 @@ def run(quick: bool = False):
         sp = _sharded(problem, 8, n, d)
         eta = convex.auto_eta(sp.merged(), 0.4)
         key = jax.random.PRNGKey(1)
+        # warm compile, then time the steady-state scan
+        jax.block_until_ready(
+            distributed.run_sync(sp, eta=eta, rounds=rounds, key=key))
         t0 = time.perf_counter()
         _, r_sync = distributed.run_sync(sp, eta=eta, rounds=rounds, key=key)
+        jax.block_until_ready(r_sync)
         t_sync = (time.perf_counter() - t0) / rounds
         _, r_async = distributed.run_async(sp, eta=eta, rounds=rounds,
                                            key=key)
@@ -95,9 +99,12 @@ def run(quick: bool = False):
             sp = _sharded(problem, p, n, d, seed=2)
             eta = convex.auto_eta(sp.merged(), 0.4)
             key = jax.random.PRNGKey(2)
+            jax.block_until_ready(distributed.run_sync(
+                sp, eta=eta, rounds=sc_rounds, key=key))
             t0 = time.perf_counter()
             _, rels = distributed.run_sync(sp, eta=eta, rounds=sc_rounds,
                                            key=key)
+            jax.block_until_ready(rels)
             wall = time.perf_counter() - t0
             if grad_us is None:
                 grad_us = wall / sc_rounds / n / p * 1e6 * p  # per local eval

@@ -27,9 +27,15 @@ def run(quick: bool = False):
             sp = distributed.make_distributed(jax.random.PRNGKey(3), cfg)
             key = jax.random.PRNGKey(4)
             eta = convex.auto_eta(sp.merged(), 0.4)
+            # warm compile, then time the steady-state scan (the driver
+            # returns un-fetched device arrays, so block to include
+            # execution in the measurement)
+            jax.block_until_ready(distributed.run_sync(
+                sp, eta=eta, rounds=rounds, key=key))
             t0 = time.perf_counter()
             _, r_sync = distributed.run_sync(sp, eta=eta, rounds=rounds,
                                              key=key)
+            jax.block_until_ready(r_sync)
             wall = time.perf_counter() - t0
             _, r_async = distributed.run_async(sp, eta=eta, rounds=rounds,
                                                key=key)

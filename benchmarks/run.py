@@ -15,12 +15,14 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI-speed)")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig2,fig3,table1,theory,roofline")
+                    help="comma list: fig1,fig2,fig3,table1,theory,tau,"
+                         "variance,drivers,roofline")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig1_single_worker, fig2_distributed, fig3_large,
-                            roofline_report, table1_accounting, tau_sweep,
-                            theory_rates, variance)
+    from benchmarks import (driver_throughput, fig1_single_worker,
+                            fig2_distributed, fig3_large, roofline_report,
+                            table1_accounting, tau_sweep, theory_rates,
+                            variance)
 
     suites = {
         "fig1": fig1_single_worker.run,
@@ -30,6 +32,7 @@ def main(argv=None) -> None:
         "theory": theory_rates.run,
         "tau": tau_sweep.run,
         "variance": variance.run,
+        "drivers": driver_throughput.run,
         "roofline": roofline_report.run,
     }
     only = [s for s in args.only.split(",") if s]

@@ -9,6 +9,8 @@ plateaus (noise floor), for CentralVR it decays with the suboptimality.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,18 +20,39 @@ from repro.config import ConvexConfig
 from repro.core import centralvr, convex
 
 
-def gradient_variances(prob, state, x):
-    """(var_sgd, var_cvr) at iterate x given the CentralVR table state."""
+def _variances_dev(prob, state, x):
+    """Device-resident (var_sgd, var_cvr) at iterate x given the table."""
     full = convex.full_grad(prob, x)
     s_fresh = convex.scalar_residual_all(prob, x)
     # per-index plain SGD gradient: s_i a_i + 2 lam x
     g_sgd = s_fresh[:, None] * prob.A + 2.0 * prob.lam * x
-    var_sgd = float(jnp.mean(jnp.sum((g_sgd - full) ** 2, axis=1)))
+    var_sgd = jnp.mean(jnp.sum((g_sgd - full) ** 2, axis=1))
     # per-index corrected gradient: (s_i - table_i) a_i + gbar + 2 lam x
     g_cvr = ((s_fresh - state.table)[:, None] * prob.A
              + state.gbar + 2.0 * prob.lam * x)
-    var_cvr = float(jnp.mean(jnp.sum((g_cvr - full) ** 2, axis=1)))
+    var_cvr = jnp.mean(jnp.sum((g_cvr - full) ** 2, axis=1))
     return var_sgd, var_cvr
+
+
+def gradient_variances(prob, state, x):
+    """(var_sgd, var_cvr) at iterate x given the CentralVR table state."""
+    var_sgd, var_cvr = _variances_dev(prob, state, x)
+    return float(var_sgd), float(var_cvr)
+
+
+@functools.partial(jax.jit, donate_argnames=("state",))
+def _trajectory_scan(prob, state, eta, keys):
+    """Measure (grad gap, var_sgd, var_cvr) at each epoch checkpoint, then
+    advance one CentralVR epoch — all inside one scan, one transfer out."""
+
+    def body(state, k):
+        v_sgd, v_cvr = _variances_dev(prob, state, state.x)
+        gap = jnp.linalg.norm(convex.full_grad(prob, state.x))
+        perm = jax.random.permutation(k, prob.n)
+        state, _ = centralvr.epoch(prob, state, eta, perm)
+        return state, (gap, v_sgd, v_cvr)
+
+    return jax.lax.scan(body, state, keys)
 
 
 def run(quick: bool = False):
@@ -41,14 +64,10 @@ def run(quick: bool = False):
     key = jax.random.PRNGKey(1)
     state = centralvr.init_state(prob, eta, key)
     rows = []
-    track = []
     ks = jax.random.split(jax.random.PRNGKey(2), epochs)
-    for m in range(epochs):
-        v_sgd, v_cvr = gradient_variances(prob, state, state.x)
-        gap = float(jnp.linalg.norm(convex.full_grad(prob, state.x)))
-        track.append((m, gap, v_sgd, v_cvr))
-        perm = jax.random.permutation(ks[m], prob.n)
-        state, _ = centralvr.epoch(prob, state, eta, perm)
+    _, (gaps, vs_sgd, vs_cvr) = _trajectory_scan(prob, state, eta, ks)
+    track = [(m, float(gaps[m]), float(vs_sgd[m]), float(vs_cvr[m]))
+             for m in range(epochs)]
 
     first, last = track[1], track[-1]
     ratio_first = first[2] / max(first[3], 1e-30)

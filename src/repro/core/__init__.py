@@ -5,6 +5,9 @@ Modules:
   centralvr    -- Algorithm 1 (single worker)
   distributed  -- Algorithms 2-5 (Sync/Async CentralVR, D-SVRG, D-SAGA)
   baselines    -- SGD/SVRG/SAGA (sequential) + dist-SGD/EASGD/PS-SVRG
+  runtime      -- device-resident scan driver machinery (DESIGN.md §3)
+  host_loop    -- seed-model host-driven reference drivers (pinning/bench)
   theory       -- Theorem 1 constants
 """
-from repro.core import baselines, centralvr, convex, distributed, theory  # noqa: F401
+from repro.core import (baselines, centralvr, convex, distributed,  # noqa: F401
+                        host_loop, runtime, theory)

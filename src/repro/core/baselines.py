@@ -6,13 +6,20 @@
 
 All run on the same :class:`ShardedProblem` substrate as the proposed
 methods so convergence-per-gradient-evaluation comparisons are exact.
+
+Every driver here is device-resident (DESIGN.md §3): one jitted
+``lax.scan`` over epochs/rounds, the relative-grad-norm metric computed
+inside the scan, decaying step-size schedules precomputed on the host and
+shipped as scan inputs, and the iterate state donated into the runner.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import convex
+from repro.core import convex, runtime
 from repro.core.convex import Problem
 from repro.core.distributed import ShardedProblem
 
@@ -21,14 +28,11 @@ from repro.core.distributed import ShardedProblem
 # Sequential SGD / SVRG / SAGA (single worker, for Fig. 1)
 # ---------------------------------------------------------------------------
 
-def run_sgd(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
-            decay: float = 0.0):
-    """Plain SGD, permutation sampling; eta_l = eta / (1 + decay*l)."""
-    x = jnp.zeros((prob.d,))
-    g0 = jnp.linalg.norm(convex.full_grad(prob, x))
-
-    @jax.jit
-    def one_epoch(x, k, eta_l):
+@functools.partial(jax.jit, donate_argnames=("x",))
+def _sgd_scan(prob: Problem, x, g0, keys, etas):
+    def one_epoch(x, xs):
+        runtime.TRACES["sgd_epoch"] += 1
+        k, eta_l = xs
         perm = jax.random.permutation(k, prob.n)
 
         def body(x, i):
@@ -37,25 +41,26 @@ def run_sgd(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
             return x - eta_l * g, None
 
         x, _ = jax.lax.scan(body, x, perm)
-        return x, jnp.linalg.norm(convex.full_grad(prob, x)) / g0
+        return x, convex.rel_grad_norm(prob, x, g0)
 
-    rels = []
-    for l, k in enumerate(jax.random.split(key, epochs)):
-        x, rel = one_epoch(x, k, eta / (1.0 + decay * l))
-        rels.append(float(rel))
-    return x, jnp.array(rels)
+    return jax.lax.scan(one_epoch, x, (keys, etas))
 
 
-def run_svrg(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
-             inner: int = 0):
-    """SVRG [17]: snapshot + full gradient every epoch; update (3).
-    Gradient evaluations per outer epoch: n (full grad) + 2*inner."""
-    inner = inner or prob.n
+def run_sgd(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+            decay: float = 0.0):
+    """Plain SGD, permutation sampling; eta_l = eta / (1 + decay*l)."""
     x = jnp.zeros((prob.d,))
-    g0 = jnp.linalg.norm(convex.full_grad(prob, x))
+    g0 = convex.grad_norm0(prob)
+    keys = jax.random.split(key, epochs)
+    etas = eta / (1.0 + decay * jnp.arange(epochs))
+    return _sgd_scan(prob, x, g0, keys, etas)
 
-    @jax.jit
+
+@functools.partial(jax.jit, static_argnames=("inner",),
+                   donate_argnames=("x",))
+def _svrg_scan(prob: Problem, x, eta, g0, keys, inner: int):
     def one_epoch(x, k):
+        runtime.TRACES["svrg_epoch"] += 1
         xbar = x
         gbar = convex.full_grad(prob, xbar)
         idx = jax.random.randint(k, (inner,), 0, prob.n)
@@ -67,26 +72,27 @@ def run_svrg(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
             return x - eta * g, None
 
         x, _ = jax.lax.scan(body, x, idx)
-        return x, jnp.linalg.norm(convex.full_grad(prob, x)) / g0
+        return x, convex.rel_grad_norm(prob, x, g0)
 
-    rels = []
-    for k in jax.random.split(key, epochs):
-        x, rel = one_epoch(x, k)
-        rels.append(float(rel))
-    # grad evals per epoch: n + 2*inner (3n at inner=n)
-    return x, jnp.array(rels)
+    return jax.lax.scan(one_epoch, x, keys)
 
 
-def run_saga(prob: Problem, *, eta: float, epochs: int, key: jax.Array):
-    """SAGA [12]: update (4), table mean refreshed every iteration.
-    1 gradient evaluation per iteration; table init at x0."""
+def run_svrg(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+             inner: int = 0):
+    """SVRG [17]: snapshot + full gradient every epoch; update (3).
+    Gradient evaluations per outer epoch: n (full grad) + 2*inner."""
+    inner = inner or prob.n
     x = jnp.zeros((prob.d,))
-    g0 = jnp.linalg.norm(convex.full_grad(prob, x))
-    table = convex.scalar_residual_all(prob, x)
-    gbar = convex.data_grad_from_scalars(prob, table)
+    g0 = convex.grad_norm0(prob)
+    keys = jax.random.split(key, epochs)
+    # grad evals per epoch: n + 2*inner (3n at inner=n)
+    return _svrg_scan(prob, x, eta, g0, keys, inner)
 
-    @jax.jit
+
+@functools.partial(jax.jit, donate_argnames=("carry",))
+def _saga_scan(prob: Problem, carry, eta, g0, keys):
     def one_epoch(carry, k):
+        runtime.TRACES["saga_epoch"] += 1
         x, table, gbar = carry
         idx = jax.random.randint(k, (prob.n,), 0, prob.n)
 
@@ -99,20 +105,56 @@ def run_saga(prob: Problem, *, eta: float, epochs: int, key: jax.Array):
             return (x - eta * v, table, gbar), None
 
         (x, table, gbar), _ = jax.lax.scan(body, (x, table, gbar), idx)
-        rel = jnp.linalg.norm(convex.full_grad(prob, x)) / g0
+        rel = convex.rel_grad_norm(prob, x, g0)
         return (x, table, gbar), rel
 
-    rels = []
-    carry = (x, table, gbar)
-    for k in jax.random.split(key, epochs):
-        carry, rel = one_epoch(carry, k)
-        rels.append(float(rel))
-    return carry[0], jnp.array(rels)
+    return jax.lax.scan(one_epoch, carry, keys)
+
+
+def run_saga(prob: Problem, *, eta: float, epochs: int, key: jax.Array):
+    """SAGA [12]: update (4), table mean refreshed every iteration.
+    1 gradient evaluation per iteration; table init at x0."""
+    x = jnp.zeros((prob.d,))
+    g0 = convex.grad_norm0(prob)
+    table = convex.scalar_residual_all(prob, x)
+    gbar = convex.data_grad_from_scalars(prob, table)
+    keys = jax.random.split(key, epochs)
+    (x, table, gbar), rels = _saga_scan(prob, (x, table, gbar), eta, g0,
+                                        keys)
+    return x, rels
 
 
 # ---------------------------------------------------------------------------
 # Distributed baselines
 # ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("tau",),
+                   donate_argnames=("x",))
+def _dist_sgd_scan(sp: ShardedProblem, x, g0, keys, etas, tau: int):
+    merged = sp.merged()
+
+    def round_(x, xs):
+        runtime.TRACES["dist_sgd_round"] += 1
+        k, eta_l = xs
+
+        def local(A, b, kk):
+            prob = Problem(A, b, sp.lam, sp.kind)
+            idx = jax.random.randint(kk, (tau,), 0, sp.ns)
+
+            def body(xl, i):
+                g = (convex.scalar_residual(prob, xl, i) * A[i]
+                     + 2.0 * sp.lam * xl)
+                return xl - eta_l * g, None
+
+            xl, _ = jax.lax.scan(body, x, idx)
+            return xl
+
+        xs_w = jax.vmap(local)(sp.A, sp.b, jax.random.split(k, sp.p))
+        x = xs_w.mean(0)
+        return x, convex.rel_grad_norm(merged, x, g0)
+
+    return jax.lax.scan(round_, x, (keys, etas))
+
 
 def run_dist_sgd(sp: ShardedProblem, *, eta: float, rounds: int,
                  key: jax.Array, tau: int = 0, decay: float = 0.0):
@@ -120,31 +162,53 @@ def run_dist_sgd(sp: ShardedProblem, *, eta: float, rounds: int,
     average — the 'one-shot-averaging per round' baseline."""
     tau = tau or sp.ns
     x = jnp.zeros((sp.d,))
+    g0 = convex.grad_norm0(sp.merged())
+    keys = jax.random.split(key, rounds)
+    etas = eta / (1.0 + decay * jnp.arange(rounds) * tau) ** 0.5
+    return _dist_sgd_scan(sp, x, g0, keys, etas, tau)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "steps_per_round"),
+                   donate_argnames=("xc", "xs"))
+def _easgd_scan(sp: ShardedProblem, xc, xs, alpha, g0, keys, etas,
+                tau: int, steps_per_round: int):
     merged = sp.merged()
-    g0 = jnp.linalg.norm(convex.full_grad(merged, x))
 
-    @jax.jit
-    def round_(x, k, eta_l):
-        def local(A, b, kk):
+    def round_(carry, ins):
+        runtime.TRACES["easgd_round"] += 1
+        xc, xs = carry
+        k, eta_l = ins
+
+        def local(A, b, xl, kk):
             prob = Problem(A, b, sp.lam, sp.kind)
-            idx = jax.random.randint(kk, (tau,), 0, sp.ns)
+            idx = jax.random.randint(kk, (steps_per_round * tau,), 0, sp.ns)
+            idx = idx.reshape(steps_per_round, tau)
 
-            def body(xl, i):
-                g = convex.scalar_residual(prob, xl, i) * A[i] + 2.0 * sp.lam * xl
-                return xl - eta_l * g, None
+            def comm_block(carry, idx_tau):
+                xl, xc_view = carry
 
-            xl, _ = jax.lax.scan(body, x, idx)
-            return xl
+                def body(x, i):
+                    g = (convex.scalar_residual(prob, x, i) * A[i]
+                         + 2.0 * sp.lam * x)
+                    return x - eta_l * g, None
 
-        xs = jax.vmap(local)(sp.A, sp.b, jax.random.split(k, sp.p))
-        x = xs.mean(0)
-        return x, jnp.linalg.norm(convex.full_grad(merged, x)) / g0
+                xl, _ = jax.lax.scan(body, xl, idx_tau)
+                diff = xl - xc_view
+                # symmetric elastic move; the center's share is applied
+                # after the vmap (sum of worker contributions)
+                return (xl - alpha * diff, xc_view + alpha * diff), diff
 
-    rels = []
-    for l, k in enumerate(jax.random.split(key, rounds)):
-        x, rel = round_(x, k, eta / (1.0 + decay * l * tau) ** 0.5)
-        rels.append(float(rel))
-    return x, jnp.array(rels)
+            (xl, _), diffs = jax.lax.scan(comm_block, (xl, xc), idx)
+            return xl, diffs.sum(0)
+
+        xs, diffs = jax.vmap(local)(sp.A, sp.b, xs,
+                                    jax.random.split(k, sp.p))
+        xc = xc + alpha * diffs.sum(0) / sp.p
+        rel = convex.rel_grad_norm(merged, xc, g0)
+        return (xc, xs), rel
+
+    (xc, xs), rels = jax.lax.scan(round_, (xc, xs), (keys, etas))
+    return xc, xs, rels
 
 
 def run_easgd(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
@@ -159,61 +223,22 @@ def run_easgd(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     alpha = min(0.9 / p, eta * rho * tau)   # stability-capped elastic rate
     xc = jnp.zeros((sp.d,))
     xs = jnp.zeros((p, sp.d))
-    merged = sp.merged()
-    g0 = jnp.linalg.norm(convex.full_grad(merged, xc))
     steps_per_round = max(sp.ns // tau, 1)
-
-    @jax.jit
-    def round_(xc, xs, k, eta_l):
-        def local(A, b, xl, kk):
-            prob = Problem(A, b, sp.lam, sp.kind)
-            idx = jax.random.randint(kk, (steps_per_round * tau,), 0, sp.ns)
-            idx = idx.reshape(steps_per_round, tau)
-
-            def comm_block(carry, idx_tau):
-                xl, xc_view = carry
-
-                def body(x, i):
-                    g = convex.scalar_residual(prob, x, i) * A[i] + 2.0 * sp.lam * x
-                    return x - eta_l * g, None
-
-                xl, _ = jax.lax.scan(body, xl, idx_tau)
-                diff = xl - xc_view
-                # symmetric elastic move; the center's share is applied
-                # after the vmap (sum of worker contributions)
-                return (xl - alpha * diff, xc_view + alpha * diff), diff
-
-            (xl, _), diffs = jax.lax.scan(comm_block, (xl, xc), idx)
-            return xl, diffs.sum(0)
-
-        xs, diffs = jax.vmap(local)(sp.A, sp.b, xs, jax.random.split(k, p))
-        xc = xc + alpha * diffs.sum(0) / p
-        rel = jnp.linalg.norm(convex.full_grad(merged, xc)) / g0
-        return xc, xs, rel
-
-    rels = []
-    for l, k in enumerate(jax.random.split(key, rounds)):
-        eta_l = eta / (1.0 + decay * l * sp.ns) ** 0.5
-        xc, xs, rel = round_(xc, xs, k, eta_l)
-        rels.append(float(rel))
-    return xc, jnp.array(rels)
+    g0 = convex.grad_norm0(sp.merged())
+    keys = jax.random.split(key, rounds)
+    etas = eta / (1.0 + decay * jnp.arange(rounds) * sp.ns) ** 0.5
+    xc, _, rels = _easgd_scan(sp, xc, xs, alpha, g0, keys, etas, tau,
+                              steps_per_round)
+    return xc, rels
 
 
-def run_ps_svrg(sp: ShardedProblem, *, eta: float, rounds: int,
-                key: jax.Array, epoch_mult: int = 2):
-    """Parameter-server SVRG [29]: every worker streams one corrected
-    gradient per step to the server (communication every iteration — the
-    high-bandwidth regime the paper contrasts against). Simulated with
-    synchronized arrivals (staleness 0, the method's best case); epoch
-    size 2n as recommended in [29]. Per round: one full gradient + 2
-    gradient evaluations per inner step per worker."""
+@functools.partial(jax.jit, static_argnames=("inner",),
+                   donate_argnames=("x",))
+def _ps_svrg_scan(sp: ShardedProblem, x, eta, g0, keys, inner: int):
     merged = sp.merged()
-    x = jnp.zeros((sp.d,))
-    g0 = jnp.linalg.norm(convex.full_grad(merged, x))
-    inner = epoch_mult * sp.ns
 
-    @jax.jit
     def round_(x, k):
+        runtime.TRACES["ps_svrg_round"] += 1
         xbar = x
         gbar = convex.full_grad(merged, xbar)
 
@@ -232,10 +257,21 @@ def run_ps_svrg(sp: ShardedProblem, *, eta: float, rounds: int,
             return x - eta * g, None
 
         x, _ = jax.lax.scan(body, x, jax.random.split(k, inner))
-        return x, jnp.linalg.norm(convex.full_grad(merged, x)) / g0
+        return x, convex.rel_grad_norm(merged, x, g0)
 
-    rels = []
-    for k in jax.random.split(key, rounds):
-        x, rel = round_(x, k)
-        rels.append(float(rel))
-    return x, jnp.array(rels)
+    return jax.lax.scan(round_, x, keys)
+
+
+def run_ps_svrg(sp: ShardedProblem, *, eta: float, rounds: int,
+                key: jax.Array, epoch_mult: int = 2):
+    """Parameter-server SVRG [29]: every worker streams one corrected
+    gradient per step to the server (communication every iteration — the
+    high-bandwidth regime the paper contrasts against). Simulated with
+    synchronized arrivals (staleness 0, the method's best case); epoch
+    size 2n as recommended in [29]. Per round: one full gradient + 2
+    gradient evaluations per inner step per worker."""
+    x = jnp.zeros((sp.d,))
+    g0 = convex.grad_norm0(sp.merged())
+    inner = epoch_mult * sp.ns
+    keys = jax.random.split(key, rounds)
+    return _ps_svrg_scan(sp, x, eta, g0, keys, inner)

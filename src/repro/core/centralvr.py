@@ -19,12 +19,13 @@ Both sampling modes of the paper are implemented:
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import convex
+from repro.core import convex, runtime
 from repro.core.convex import Problem
 
 
@@ -38,6 +39,7 @@ class VRState(NamedTuple):
 # Initialization (Algorithm 1, line 2: one epoch of plain SGD)
 # ---------------------------------------------------------------------------
 
+@jax.jit
 def init_state(prob: Problem, eta: float, key: jax.Array,
                x0: Optional[jax.Array] = None) -> VRState:
     x0 = jnp.zeros((prob.d,)) if x0 is None else x0
@@ -109,31 +111,39 @@ def epoch_uniform(prob: Problem, state: VRState, eta: float, key: jax.Array,
 # Driver
 # ---------------------------------------------------------------------------
 
-def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
-        sampling: str = "permutation", x0: Optional[jax.Array] = None):
-    """Full Algorithm 1. Returns (final state, per-epoch relative grad norms,
-    gradient-evaluation counts). 1 gradient evaluation per iteration
-    (Table 1 row 'CentralVR'), plus the n initialization evaluations.
-    """
-    k_init, k_run = jax.random.split(key)
-    state = init_state(prob, eta, k_init, x0=x0)
-    g0 = jnp.linalg.norm(convex.full_grad(prob, jnp.zeros((prob.d,))))
+@functools.partial(jax.jit, static_argnames=("sampling",),
+                   donate_argnames=("state",))
+def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str):
+    """The whole Algorithm-1 run as one executable: a scan over epochs with
+    the relative-grad-norm metric computed on device.  ``state`` is donated
+    so the (n,) table and (d,) iterate/gbar update in place."""
 
-    @jax.jit
     def one_epoch(state, k):
+        runtime.TRACES["centralvr_epoch"] += 1
         if sampling == "permutation":
             order = jax.random.permutation(k, prob.n)
             new_state, _ = epoch(prob, state, eta, order)
         else:
             new_state, _ = epoch_uniform(prob, state, eta, k)
-        rel = jnp.linalg.norm(convex.full_grad(prob, new_state.x)) / g0
+        rel = convex.rel_grad_norm(prob, new_state.x, g0)
         return new_state, rel
 
-    rels = []
-    grad_evals = [prob.n]  # init epoch
+    return jax.lax.scan(one_epoch, state, keys)
+
+
+def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+        sampling: str = "permutation", x0: Optional[jax.Array] = None):
+    """Full Algorithm 1. Returns (final state, per-epoch relative grad norms,
+    gradient-evaluation counts). 1 gradient evaluation per iteration
+    (Table 1 row 'CentralVR'), plus the n initialization evaluations.
+
+    Device-resident: the epoch loop is a single jitted ``lax.scan``; the
+    per-epoch metric trajectory comes back in one transfer (DESIGN.md §3).
+    """
+    k_init, k_run = jax.random.split(key)
+    state = init_state(prob, eta, k_init, x0=x0)
+    g0 = convex.grad_norm0(prob)
     keys = jax.random.split(k_run, epochs)
-    for m in range(epochs):
-        state, rel = one_epoch(state, keys[m])
-        rels.append(float(rel))
-        grad_evals.append(grad_evals[-1] + prob.n)
-    return state, jnp.array(rels), jnp.array(grad_evals[1:])
+    state, rels = _run_scan(prob, state, eta, g0, keys, sampling)
+    grad_evals = prob.n * jnp.arange(2, epochs + 2)
+    return state, rels, grad_evals

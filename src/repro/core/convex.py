@@ -181,3 +181,10 @@ def rel_grad_norm(prob: Problem, x: jax.Array, g0: jax.Array | None = None):
     if g0 is None:
         return g
     return g / g0
+
+
+def grad_norm0(prob: Problem) -> jax.Array:
+    """||grad f(0)|| — the normalizer of the paper's y-axis.  Stays on
+    device: the scan-based drivers divide by it inside the scan instead of
+    fetching it to the host (DESIGN.md §3)."""
+    return jnp.linalg.norm(full_grad(prob, jnp.zeros((prob.d,))))

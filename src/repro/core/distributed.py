@@ -23,12 +23,13 @@ to bias the average.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import convex
+from repro.core import convex, runtime
 from repro.core.convex import Problem
 
 
@@ -134,6 +135,7 @@ class SyncState(NamedTuple):
 # CentralVR-Sync (Algorithm 2)
 # ---------------------------------------------------------------------------
 
+@jax.jit
 def sync_init(sp: ShardedProblem, eta: float, key: jax.Array) -> SyncState:
     """Init with one plain-SGD epoch per worker, then average (line 2)."""
     keys = jax.random.split(key, sp.p)
@@ -159,23 +161,27 @@ def sync_round(sp: ShardedProblem, st: SyncState, eta: float, key: jax.Array
     return SyncState(x=xs.mean(0), tables=tables, gbar=accs.mean(0))
 
 
-def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array):
+@functools.partial(jax.jit, donate_argnames=("st",))
+def _sync_scan(sp: ShardedProblem, st: SyncState, eta, g0, keys):
     merged = sp.merged()
-    k_init, k_run = jax.random.split(key)
-    st = sync_init(sp, eta, k_init)
-    g0 = jnp.linalg.norm(convex.full_grad(merged, jnp.zeros((sp.d,))))
 
-    @jax.jit
     def step(st, k):
+        runtime.TRACES["sync_round"] += 1
         st = sync_round(sp, st, eta, k)
-        rel = jnp.linalg.norm(convex.full_grad(merged, st.x)) / g0
+        rel = convex.rel_grad_norm(merged, st.x, g0)
         return st, rel
 
-    rels = []
-    for k in jax.random.split(k_run, rounds):
-        st, rel = step(st, k)
-        rels.append(float(rel))
-    return st, jnp.array(rels)
+    return jax.lax.scan(step, st, keys)
+
+
+def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array):
+    """Algorithm 2 end to end: one jitted scan over communication rounds,
+    metric on device, state donated (DESIGN.md §3)."""
+    k_init, k_run = jax.random.split(key)
+    st = sync_init(sp, eta, k_init)
+    g0 = convex.grad_norm0(sp.merged())
+    keys = jax.random.split(k_run, rounds)
+    return _sync_scan(sp, st, eta, g0, keys)
 
 
 # ---------------------------------------------------------------------------
@@ -207,11 +213,16 @@ def async_init(sp: ShardedProblem, eta: float, key: jax.Array) -> AsyncState:
     )
 
 
-def async_event(sp: ShardedProblem, st: AsyncState, s: int, eta: float,
+def async_event(sp: ShardedProblem, st: AsyncState, s, eta: float,
                 key: jax.Array) -> AsyncState:
     """Worker s completes one local epoch computed from its stale fetch,
     sends (dx, dgbar); the central node applies x += dx/p (Alg 3 l.18-21);
-    the worker then fetches the fresh central state."""
+    the worker then fetches the fresh central state.
+
+    ``s`` may be a concrete int or a TRACED index: the stacked (p, ns)
+    tables are read with dynamic gathers (``sp.A[s]``) and written with
+    ``.at[s].set``, so one compiled executable serves every worker — the
+    event schedule becomes data, not code (DESIGN.md §3)."""
     p = sp.p
     alpha = 1.0 / p
     perm = jax.random.permutation(key, sp.ns)
@@ -232,59 +243,57 @@ def async_event(sp: ShardedProblem, st: AsyncState, s: int, eta: float,
     )
 
 
+@functools.partial(jax.jit, donate_argnames=("st",))
+def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys):
+    """The full event schedule in one executable: an outer scan over rounds
+    (emitting the metric every p events, as the host loop did) nests an
+    inner scan over each round's p events.  The worker index is TRACED —
+    exactly one trace/compile of ``async_event`` regardless of p."""
+    merged = sp.merged()
+
+    def one_round(st, xs):
+        sched_row, key_row = xs
+
+        def one_event(st, sk):
+            runtime.TRACES["async_event"] += 1
+            s, k = sk
+            return async_event(sp, st, s, eta, k), None
+
+        st, _ = jax.lax.scan(one_event, st, (sched_row, key_row))
+        rel = convex.rel_grad_norm(merged, st.x_c, g0)
+        return st, rel
+
+    return jax.lax.scan(one_round, st, (schedule, keys))
+
+
 def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
               speeds=None):
     """``rounds`` epochs per worker. ``speeds``: optional per-worker relative
     speeds; faster workers fire proportionally more events (heterogeneous
-    cluster simulation). Default: round-robin (staleness p-1)."""
-    merged = sp.merged()
+    cluster simulation). Default: round-robin (staleness p-1).
+
+    The speed-weighted schedule is precomputed on the host, shipped as a
+    (rounds, p) int32 array, and scanned on device in a single compile."""
     k_init, k_run = jax.random.split(key)
     st = async_init(sp, eta, k_init)
-    g0 = jnp.linalg.norm(convex.full_grad(merged, jnp.zeros((sp.d,))))
-
-    event_fns = [jax.jit(lambda st, k, s=s: async_event(sp, st, s, eta, k))
-                 for s in range(sp.p)]
-
-    # build the event schedule
-    import numpy as np
-    if speeds is None:
-        schedule = list(range(sp.p)) * rounds
-    else:
-        speeds = np.asarray(speeds, dtype=float)
-        t_next = 1.0 / speeds
-        schedule = []
-        for _ in range(rounds * sp.p):
-            s = int(np.argmin(t_next))
-            schedule.append(s)
-            t_next[s] += 1.0 / speeds[s]
-
-    rels = []
-    keys = jax.random.split(k_run, len(schedule))
-    for t, s in enumerate(schedule):
-        st = event_fns[s](st, keys[t])
-        if (t + 1) % sp.p == 0:
-            rel = jnp.linalg.norm(convex.full_grad(merged, st.x_c)) / g0
-            rels.append(float(rel))
-    return st, jnp.array(rels)
+    g0 = convex.grad_norm0(sp.merged())
+    schedule = runtime.event_schedule(sp.p, rounds, speeds)
+    keys = jax.random.split(k_run, schedule.size)
+    sched, keys = runtime.per_round(schedule, keys, sp.p)
+    return _async_scan(sp, st, eta, g0, jnp.asarray(sched), keys)
 
 
 # ---------------------------------------------------------------------------
 # Distributed SVRG (Algorithm 4)
 # ---------------------------------------------------------------------------
 
-def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              tau: int = 0):
-    """tau local steps from the shared snapshot (default tau = 2*ns, the
-    paper's recommendation from [17]); gbar = full gradient at the snapshot
-    (the synchronization step); then average x across workers.
-    2 gradient evaluations per iteration (Table 1)."""
+@functools.partial(jax.jit, static_argnames=("tau",),
+                   donate_argnames=("x",))
+def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int):
     merged = sp.merged()
-    tau = tau or 2 * sp.ns
-    x = jnp.zeros((sp.d,))
-    g0 = jnp.linalg.norm(convex.full_grad(merged, x))
 
-    @jax.jit
     def round_(x, k):
+        runtime.TRACES["dsvrg_round"] += 1
         xbar = x
         gbar = convex.full_grad(merged, xbar)   # sync step (line 5)
 
@@ -303,14 +312,24 @@ def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
 
         xs = jax.vmap(local)(sp.A, sp.b, jax.random.split(k, sp.p))
         x = xs.mean(0)
-        rel = jnp.linalg.norm(convex.full_grad(merged, x)) / g0
+        rel = convex.rel_grad_norm(merged, x, g0)
         return x, rel
 
-    rels = []
-    for k in jax.random.split(key, rounds):
-        x, rel = round_(x, k)
-        rels.append(float(rel))
-    return x, jnp.array(rels)
+    return jax.lax.scan(round_, x, keys)
+
+
+def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
+              tau: int = 0):
+    """tau local steps from the shared snapshot (default tau = 2*ns, the
+    paper's recommendation from [17]); gbar = full gradient at the snapshot
+    (the synchronization step); then average x across workers.
+    2 gradient evaluations per iteration (Table 1).  One jitted scan over
+    rounds (DESIGN.md §3)."""
+    tau = tau or 2 * sp.ns
+    x = jnp.zeros((sp.d,))
+    g0 = convex.grad_norm0(sp.merged())
+    keys = jax.random.split(key, rounds)
+    return _dsvrg_scan(sp, x, eta, g0, keys, tau)
 
 
 # ---------------------------------------------------------------------------
@@ -323,6 +342,79 @@ class DSagaState(NamedTuple):
     tables: jax.Array     # (p, ns) scalar residuals
     x_old: jax.Array      # (p, d)
     gbar_old: jax.Array   # (p, d) — literal mode: previous local final gbar
+
+
+def dsaga_event(sp: ShardedProblem, st: DSagaState, s, eta: float, tau: int,
+                key, literal_scaling: bool = False) -> DSagaState:
+    """Worker s: tau local SAGA steps from its fetched central state, then
+    the delta push (Alg 5 lines 12-20). Events interleave round-robin — the
+    async arrival order, one at a time (the paper's implementation is
+    'locked': one worker updates the server at a time, §6.2).  ``s`` may be
+    a traced index (dynamic gathers on the stacked tables), so one compiled
+    event function serves all p workers."""
+    n_global = sp.p * sp.ns
+    alpha = 1.0 / sp.p
+    alpha_g = alpha if literal_scaling else 1.0
+    A, b = sp.A[s], sp.b[s]
+    prob = Problem(A, b, sp.lam, sp.kind)
+    idx = jax.random.randint(key, (tau,), 0, sp.ns)
+
+    def body(carry, i):
+        x, table, gbar = carry
+        s_new = convex.scalar_residual(prob, x, i)
+        v = (s_new - table[i]) * A[i] + gbar + 2.0 * sp.lam * x
+        # line 9: global 1/n scaling of the running-mean update
+        gbar = gbar + (s_new - table[i]) * A[i] / n_global
+        table = table.at[i].set(s_new)
+        return (x - eta * v, table, gbar), None
+
+    (x, table, gbar), _ = jax.lax.scan(
+        body, (st.x_c, st.tables[s], st.gbar_c), idx)
+    dx = x - st.x_old[s]
+    if literal_scaling:
+        dg = gbar - st.gbar_old[s]       # printed line 13
+    else:
+        dg = gbar - st.gbar_c            # own contribution only
+    return DSagaState(
+        x_c=st.x_c + alpha * dx,
+        gbar_c=st.gbar_c + alpha_g * dg,
+        tables=st.tables.at[s].set(table),
+        x_old=st.x_old.at[s].set(x),
+        gbar_old=st.gbar_old.at[s].set(gbar),
+    )
+
+
+@jax.jit
+def dsaga_init(sp: ShardedProblem) -> DSagaState:
+    """Tables at x0 (Alg 5 lines 2-3), central gbar = global table mean."""
+    x0 = jnp.zeros((sp.d,))
+    s_all = jax.vmap(lambda A, b: convex.scalar_residual_all(
+        Problem(A, b, sp.lam, sp.kind), x0))(sp.A, sp.b)
+    gbar0 = jnp.einsum("psd,ps->d", sp.A, s_all) / (sp.p * sp.ns)
+    return DSagaState(x_c=x0, gbar_c=gbar0, tables=s_all,
+                      x_old=jnp.tile(x0, (sp.p, 1)),
+                      gbar_old=jnp.tile(gbar0, (sp.p, 1)))
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "literal_scaling"),
+                   donate_argnames=("st",))
+def _dsaga_scan(sp: ShardedProblem, st: DSagaState, eta, g0, schedule, keys,
+                tau: int, literal_scaling: bool):
+    merged = sp.merged()
+
+    def one_round(st, xs):
+        sched_row, key_row = xs
+
+        def one_event(st, sk):
+            runtime.TRACES["dsaga_event"] += 1
+            s, k = sk
+            return dsaga_event(sp, st, s, eta, tau, k, literal_scaling), None
+
+        st, _ = jax.lax.scan(one_event, st, (sched_row, key_row))
+        rel = convex.rel_grad_norm(merged, st.x_c, g0)
+        return st, rel
+
+    return jax.lax.scan(one_round, st, (schedule, keys))
 
 
 def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
@@ -338,9 +430,9 @@ def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     from the fetched central value), so with alpha=1 it echoes and
     diverges, and with alpha=1/p the server's gbar lags the true table
     mean by a factor ~p and convergence plateaus (we measured both; see
-    EXPERIMENTS.md). The §5.2 prose — "the previous contribution to the
-    average from that local worker is just replaced by the new
-    contribution ... gbar is built from the most recent gradient
+    EXPERIMENTS.md §D-SAGA delta semantics). The §5.2 prose — "the previous
+    contribution to the average from that local worker is just replaced by
+    the new contribution ... gbar is built from the most recent gradient
     computations at each index" — pins down the intended semantics:
     the delta must isolate the worker's OWN table-update contribution,
     i.e. dgbar = gbar_local_final - gbar_fetched (the sum of its 1/n-scaled
@@ -348,65 +440,14 @@ def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     disjoint across workers, so the sum keeps the server gbar exactly equal
     to the global table mean at every event). That is the default here;
     ``literal_scaling=True`` reproduces the printed lines for comparison.
+
+    Like CentralVR-Async, the whole event schedule runs as one jitted scan
+    with a traced worker index — one executable regardless of p.
     """
-    merged = sp.merged()
-    n_global = sp.p * sp.ns
-    x0 = jnp.zeros((sp.d,))
-    g0 = jnp.linalg.norm(convex.full_grad(merged, x0))
-
-    # init tables at x0 (Alg 5 line 2-3)
-    s_all = jax.vmap(lambda A, b: convex.scalar_residual_all(
-        Problem(A, b, sp.lam, sp.kind), x0))(sp.A, sp.b)
-    gbar0 = (jnp.einsum("psd,ps->d", sp.A, s_all) / n_global)
-    st = DSagaState(x_c=x0, gbar_c=gbar0, tables=s_all,
-                    x_old=jnp.tile(x0, (sp.p, 1)),
-                    gbar_old=jnp.tile(gbar0, (sp.p, 1)))
-
-    alpha = 1.0 / sp.p
-    alpha_g = alpha if literal_scaling else 1.0
-
-    def event(st: DSagaState, s: int, k) -> DSagaState:
-        """Worker s: tau local SAGA steps from its fetched central state,
-        then the delta push (Alg 5 lines 12-20). Events interleave
-        round-robin — the async arrival order, one at a time (the paper's
-        implementation is 'locked': one worker updates the server at a
-        time, §6.2)."""
-        A, b = sp.A[s], sp.b[s]
-        prob = Problem(A, b, sp.lam, sp.kind)
-        idx = jax.random.randint(k, (tau,), 0, sp.ns)
-
-        def body(carry, i):
-            x, table, gbar = carry
-            s_new = convex.scalar_residual(prob, x, i)
-            v = (s_new - table[i]) * A[i] + gbar + 2.0 * sp.lam * x
-            # line 9: global 1/n scaling of the running-mean update
-            gbar = gbar + (s_new - table[i]) * A[i] / n_global
-            table = table.at[i].set(s_new)
-            return (x - eta * v, table, gbar), None
-
-        (x, table, gbar), _ = jax.lax.scan(
-            body, (st.x_c, st.tables[s], st.gbar_c), idx)
-        dx = x - st.x_old[s]
-        if literal_scaling:
-            dg = gbar - st.gbar_old[s]       # printed line 13
-        else:
-            dg = gbar - st.gbar_c            # own contribution only
-        return DSagaState(
-            x_c=st.x_c + alpha * dx,
-            gbar_c=st.gbar_c + alpha_g * dg,
-            tables=st.tables.at[s].set(table),
-            x_old=st.x_old.at[s].set(x),
-            gbar_old=st.gbar_old.at[s].set(gbar),
-        )
-
-    event_fns = [jax.jit(lambda st, k, s=s: event(st, s, k))
-                 for s in range(sp.p)]
-    rels = []
-    n_events = rounds * sp.p
-    keys = jax.random.split(key, n_events)
-    for t in range(n_events):
-        st = event_fns[t % sp.p](st, keys[t])
-        if (t + 1) % sp.p == 0:
-            rel = jnp.linalg.norm(convex.full_grad(merged, st.x_c)) / g0
-            rels.append(float(rel))
-    return st, jnp.array(rels)
+    st = dsaga_init(sp)
+    g0 = convex.grad_norm0(sp.merged())
+    schedule = runtime.event_schedule(sp.p, rounds)
+    keys = jax.random.split(key, schedule.size)
+    sched, keys = runtime.per_round(schedule, keys, sp.p)
+    return _dsaga_scan(sp, st, eta, g0, jnp.asarray(sched), keys, tau,
+                       literal_scaling)

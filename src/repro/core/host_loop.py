@@ -1,0 +1,153 @@
+"""Host-driven reference drivers — the pre-runtime (seed) execution model.
+
+These reproduce the original driver layer exactly: a Python loop over
+rounds, one jitted closure per call (re-traced per driver invocation), a
+blocking ``float(rel)`` device->host transfer every round, and — for the
+event-driven algorithms — p separately jitted per-worker closures, so
+compile count grows linearly in p.
+
+They are kept for two reasons (DESIGN.md §3):
+
+  * ``tests/test_driver_runtime.py`` pins the scan-based drivers in
+    ``centralvr`` / ``distributed`` to these trajectories — the refactor
+    must be a pure execution-model change, not an algorithm change;
+  * ``benchmarks/driver_throughput.py`` measures the scan runtime against
+    this baseline (compile time and epochs/sec vs. worker count).
+
+Do not add algorithms here; new work goes in the scan runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import centralvr, convex, distributed, runtime
+from repro.core.convex import Problem
+from repro.core.distributed import ShardedProblem
+
+
+def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+        sampling: str = "permutation", x0=None):
+    """Seed-model Algorithm 1 driver (host loop, per-epoch sync)."""
+    k_init, k_run = jax.random.split(key)
+    state = centralvr.init_state(prob, eta, k_init, x0=x0)
+    g0 = jnp.linalg.norm(convex.full_grad(prob, jnp.zeros((prob.d,))))
+
+    @jax.jit
+    def one_epoch(state, k):
+        if sampling == "permutation":
+            order = jax.random.permutation(k, prob.n)
+            new_state, _ = centralvr.epoch(prob, state, eta, order)
+        else:
+            new_state, _ = centralvr.epoch_uniform(prob, state, eta, k)
+        rel = jnp.linalg.norm(convex.full_grad(prob, new_state.x)) / g0
+        return new_state, rel
+
+    rels = []
+    grad_evals = [prob.n]  # init epoch
+    keys = jax.random.split(k_run, epochs)
+    for m in range(epochs):
+        state, rel = one_epoch(state, keys[m])
+        rels.append(float(rel))
+        grad_evals.append(grad_evals[-1] + prob.n)
+    return state, jnp.array(rels), jnp.array(grad_evals[1:])
+
+
+def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array):
+    """Seed-model Algorithm 2 driver."""
+    merged = sp.merged()
+    k_init, k_run = jax.random.split(key)
+    st = distributed.sync_init(sp, eta, k_init)
+    g0 = jnp.linalg.norm(convex.full_grad(merged, jnp.zeros((sp.d,))))
+
+    @jax.jit
+    def step(st, k):
+        st = distributed.sync_round(sp, st, eta, k)
+        rel = jnp.linalg.norm(convex.full_grad(merged, st.x)) / g0
+        return st, rel
+
+    rels = []
+    for k in jax.random.split(k_run, rounds):
+        st, rel = step(st, k)
+        rels.append(float(rel))
+    return st, jnp.array(rels)
+
+
+def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
+              speeds=None):
+    """Seed-model Algorithm 3 driver: p per-worker jitted event closures."""
+    merged = sp.merged()
+    k_init, k_run = jax.random.split(key)
+    st = distributed.async_init(sp, eta, k_init)
+    g0 = jnp.linalg.norm(convex.full_grad(merged, jnp.zeros((sp.d,))))
+
+    event_fns = [jax.jit(lambda st, k, s=s: distributed.async_event(
+        sp, st, s, eta, k)) for s in range(sp.p)]
+
+    schedule = runtime.event_schedule(sp.p, rounds, speeds)
+    rels = []
+    keys = jax.random.split(k_run, len(schedule))
+    for t, s in enumerate(schedule):
+        st = event_fns[int(s)](st, keys[t])
+        if (t + 1) % sp.p == 0:
+            rel = jnp.linalg.norm(convex.full_grad(merged, st.x_c)) / g0
+            rels.append(float(rel))
+    return st, jnp.array(rels)
+
+
+def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
+              tau: int = 0):
+    """Seed-model Algorithm 4 driver."""
+    merged = sp.merged()
+    tau = tau or 2 * sp.ns
+    x = jnp.zeros((sp.d,))
+    g0 = jnp.linalg.norm(convex.full_grad(merged, x))
+
+    @jax.jit
+    def round_(x, k):
+        xbar = x
+        gbar = convex.full_grad(merged, xbar)
+
+        def local(A, b, kk):
+            prob = Problem(A, b, sp.lam, sp.kind)
+            idx = jax.random.randint(kk, (tau,), 0, sp.ns)
+
+            def body(xl, i):
+                g = (convex.scalar_residual(prob, xl, i) * A[i]
+                     - convex.scalar_residual(prob, xbar, i) * A[i]
+                     + gbar + 2.0 * sp.lam * (xl - xbar))
+                return xl - eta * g, None
+
+            xl, _ = jax.lax.scan(body, xbar, idx)
+            return xl
+
+        xs = jax.vmap(local)(sp.A, sp.b, jax.random.split(k, sp.p))
+        x = xs.mean(0)
+        rel = jnp.linalg.norm(convex.full_grad(merged, x)) / g0
+        return x, rel
+
+    rels = []
+    for k in jax.random.split(key, rounds):
+        x, rel = round_(x, k)
+        rels.append(float(rel))
+    return x, jnp.array(rels)
+
+
+def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
+              tau: int = 100, literal_scaling: bool = False):
+    """Seed-model Algorithm 5 driver: p per-worker jitted event closures."""
+    merged = sp.merged()
+    st = distributed.dsaga_init(sp)
+    g0 = jnp.linalg.norm(convex.full_grad(merged, jnp.zeros((sp.d,))))
+
+    event_fns = [jax.jit(lambda st, k, s=s: distributed.dsaga_event(
+        sp, st, s, eta, tau, k, literal_scaling)) for s in range(sp.p)]
+    rels = []
+    n_events = rounds * sp.p
+    keys = jax.random.split(key, n_events)
+    for t in range(n_events):
+        st = event_fns[t % sp.p](st, keys[t])
+        if (t + 1) % sp.p == 0:
+            rel = jnp.linalg.norm(convex.full_grad(merged, st.x_c)) / g0
+            rels.append(float(rel))
+    return st, jnp.array(rels)

@@ -1,0 +1,63 @@
+"""Device-resident driver runtime shared by every ``run_*`` driver.
+
+The seed drivers ran a Python loop on the host: one jitted round closure,
+one blocking ``float(rel)`` device->host transfer per round, and — for the
+event-driven algorithms (CentralVR-Async, D-SAGA) — p separately jitted
+per-worker closures, so compile time grew linearly in p, the very axis the
+paper scales.  This module holds the pieces that let each driver become ONE
+jitted ``lax.scan`` instead (DESIGN.md §3):
+
+  * the event schedule is precomputed on the host (speed-weighted for the
+    heterogeneous-cluster simulation) and shipped to the device as a
+    ``(rounds, p)`` int32 array; the event function takes a *traced*
+    worker index, so one executable serves every worker;
+  * the relative-grad-norm metric is computed inside the scan and the whole
+    trajectory comes back in a single transfer at the end of the run;
+  * the state pytree is donated into the scan runner
+    (``donate_argnames``), so param-, table-, and gbar-sized buffers are
+    updated in place instead of being copied each round;
+  * ``TRACES`` counts how many times each event/round body is traced —
+    Python code in a traced function runs once per compile and zero times
+    on a cache hit, so the counter is an exact retrace/compile probe
+    (pinned by ``tests/test_driver_runtime.py``: one trace of the async
+    event function regardless of p).
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+import numpy as np
+
+# Trace/compile probe: incremented from inside scan bodies at trace time.
+TRACES: Counter = Counter()
+
+
+def event_schedule(p: int, rounds: int, speeds=None) -> np.ndarray:
+    """The asynchronous arrival order as data: a ``(rounds * p,)`` int32
+    worker-index array.  ``speeds=None`` gives round-robin (effective
+    staleness p-1); otherwise faster workers fire proportionally more
+    events — the deterministic simulation of a heterogeneous cluster.
+    Precomputed on the host once; the device scans it in one compile.
+    """
+    if speeds is None:
+        return np.tile(np.arange(p, dtype=np.int32), rounds)
+    speeds = np.asarray(speeds, dtype=float)
+    if speeds.shape != (p,):
+        raise ValueError(f"speeds must have shape ({p},), got {speeds.shape}")
+    t_next = 1.0 / speeds
+    schedule = np.empty(rounds * p, dtype=np.int32)
+    for t in range(rounds * p):
+        s = int(np.argmin(t_next))
+        schedule[t] = s
+        t_next[s] += 1.0 / speeds[s]
+    return schedule
+
+
+def per_round(schedule: np.ndarray, keys, p: int):
+    """Reshape a flat event schedule + per-event keys into per-round rows
+    ``(rounds, p, ...)`` so an outer scan over rounds (emitting the metric)
+    can nest an inner scan over the round's p events."""
+    rounds = schedule.size // p
+    sched = schedule.reshape(rounds, p)
+    keys = keys.reshape((rounds, p) + keys.shape[1:])
+    return sched, keys

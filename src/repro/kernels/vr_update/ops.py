@@ -31,11 +31,19 @@ def _unflatten(flat, leaves, treedef, dtype=None):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-@functools.partial(jax.jit, static_argnames=("eta", "m", "saga", "interpret"))
+@functools.partial(jax.jit, static_argnames=("eta", "m", "saga", "interpret"),
+                   donate_argnums=(0, 1, 2, 3, 4))
 def vr_update(x_tree, g_tree, gold_tree, gbar_tree, gtilde_tree, *,
               eta: float, m: int, saga: bool = False,
               interpret: bool = False):
-    """Returns (x', table', gtilde', gbar') as pytrees like the inputs."""
+    """Returns (x', table', gtilde', gbar') as pytrees like the inputs.
+
+    All five param-sized input pytrees are DONATED: their buffers are
+    reused for the outputs instead of freshly allocated each training
+    step, so callers must not read the arguments after the call (the
+    training step consumes its previous VR state anyway), and the five
+    arguments must be distinct buffers — passing the same array twice
+    raises XLA's double-donation error."""
     x, x_leaves, treedef = _flatten(x_tree)
     g = _flatten(g_tree)[0]
     gold = _flatten(gold_tree)[0]

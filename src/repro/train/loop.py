@@ -55,15 +55,19 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, steps: int,
 
     result = LoopResult()
     t0 = time.time()
+    # keep per-step metrics on device: forcing float(loss) every step
+    # would block on a device->host transfer and serialize dispatch; only
+    # log points pay the sync, everything else is fetched once at the end
+    device_losses = []
     for s in range(steps):
         state, metrics = jit_step(state, batch_for(s))
-        loss = float(metrics["loss"])
-        result.losses.append(loss)
+        device_losses.append(metrics["loss"])
         if log_every and (s % log_every == 0 or s == steps - 1):
-            log_fn(f"step {s:5d}  loss {loss:.4f}")
+            log_fn(f"step {s:5d}  loss {float(metrics['loss']):.4f}")
         if checkpoint_path and checkpoint_every and \
                 (s + 1) % checkpoint_every == 0:
             ckpt.save(checkpoint_path, state, step=s + 1)
+    result.losses = [float(l) for l in jax.device_get(device_losses)]
     result.steps = steps
     result.wall_time = time.time() - t0
 

@@ -13,6 +13,9 @@ from repro.config import get_arch
 from repro.configs import ASSIGNED_ARCHS
 from repro.models import model
 
+# whole-module: subprocess compiles / many reduced-arch compiles — fast lane skips these (DESIGN.md §5)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def key():

@@ -18,6 +18,7 @@ def _sharded(seed=0, p=4, n=120, d=12, kind="logistic"):
     return distributed.make_distributed(jax.random.PRNGKey(seed), cfg)
 
 
+@pytest.mark.slow
 def test_sync_converges_to_global_optimum():
     sp = _sharded(p=4)
     merged = sp.merged()
@@ -29,6 +30,7 @@ def test_sync_converges_to_global_optimum():
                                rtol=1e-5, atol=1e-7)
 
 
+@pytest.mark.slow
 def test_async_delta_replacement_invariant():
     """x_c == mean_s(x_old_s) after every event (exact algebra)."""
     sp = _sharded(seed=2, p=3, n=60, d=6)
@@ -44,6 +46,7 @@ def test_async_delta_replacement_invariant():
                                    rtol=1e-10, atol=1e-12)
 
 
+@pytest.mark.slow
 def test_async_converges_round_robin_and_heterogeneous():
     sp = _sharded(seed=3, p=4)
     _, rels = distributed.run_async(sp, eta=0.05, rounds=40,
@@ -85,6 +88,7 @@ def test_dsaga_literal_scaling_is_worse():
     assert r_default[-1] <= r_literal[-1] * 1.5
 
 
+@pytest.mark.slow
 def test_vr_methods_beat_sgd_baselines_distributed():
     """Fig. 2 qualitative claim: at equal local-gradient budget the VR
     methods reach much lower gradient norm than dist-SGD/EASGD."""
@@ -102,6 +106,7 @@ def test_vr_methods_beat_sgd_baselines_distributed():
     assert float(r_cvr[-1]) < best_base * 1e-2
 
 
+@pytest.mark.slow
 def test_weak_scaling_epochs_to_tolerance():
     """The linear-scaling claim, in its hardware-independent form: with
     per-worker data fixed, the number of communication rounds to reach a

@@ -1,0 +1,160 @@
+"""Device-resident driver runtime pins (DESIGN.md §3).
+
+The scan-based drivers in ``core/centralvr`` and ``core/distributed`` must
+be a pure EXECUTION-MODEL change: identical per-round relative-grad-norm
+trajectories to the seed host-loop drivers (kept verbatim in
+``core/host_loop``), within float32 tolerance.  And the async/DSAGA event
+functions must trace/compile exactly once regardless of worker count —
+the seed model compiled p per-worker closures, the very scaling bug the
+runtime removes.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ConvexConfig
+from repro.core import centralvr, convex, distributed, host_loop, runtime
+
+# float32 tolerance: the trajectories go through identical arithmetic, but
+# XLA may fuse differently inside vs outside the round scan
+TOL = dict(rtol=3e-5, atol=1e-7)
+
+
+def _prob(kind, n=96, d=9):
+    key = jax.random.PRNGKey(0)
+    gen = (convex.make_logistic_data if kind == "logistic"
+           else convex.make_ridge_data)
+    return gen(key, n, d)
+
+
+def _sharded(kind, p=4, n=64, d=9, seed=0):
+    cfg = ConvexConfig(problem=kind, n=n, d=d, workers=p)
+    return distributed.make_distributed(jax.random.PRNGKey(seed), cfg)
+
+
+def _eta(obj):
+    prob = obj.merged() if hasattr(obj, "merged") else obj
+    return convex.auto_eta(prob, 0.3)
+
+
+@pytest.mark.parametrize("kind", ["logistic", "ridge"])
+@pytest.mark.parametrize("sampling", ["permutation", "uniform"])
+def test_run_matches_host_loop(kind, sampling):
+    prob = _prob(kind)
+    key = jax.random.PRNGKey(3)
+    eta = _eta(prob)
+    st_new, rels_new, ev_new = centralvr.run(
+        prob, eta=eta, epochs=6, key=key, sampling=sampling)
+    st_old, rels_old, ev_old = host_loop.run(
+        prob, eta=eta, epochs=6, key=key, sampling=sampling)
+    np.testing.assert_allclose(np.asarray(rels_new), np.asarray(rels_old),
+                               **TOL)
+    np.testing.assert_array_equal(np.asarray(ev_new), np.asarray(ev_old))
+    np.testing.assert_allclose(np.asarray(st_new.x), np.asarray(st_old.x),
+                               **TOL)
+
+
+@pytest.mark.parametrize("kind", ["logistic", "ridge"])
+def test_run_sync_matches_host_loop(kind):
+    sp = _sharded(kind)
+    key = jax.random.PRNGKey(4)
+    eta = _eta(sp)
+    st_new, rels_new = distributed.run_sync(sp, eta=eta, rounds=6, key=key)
+    st_old, rels_old = host_loop.run_sync(sp, eta=eta, rounds=6, key=key)
+    np.testing.assert_allclose(np.asarray(rels_new), np.asarray(rels_old),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(st_new.x), np.asarray(st_old.x),
+                               **TOL)
+
+
+@pytest.mark.parametrize("kind", ["logistic", "ridge"])
+@pytest.mark.parametrize("speeds", [None, (1.0, 1.0, 2.0, 4.0)])
+def test_run_async_matches_host_loop(kind, speeds):
+    sp = _sharded(kind)
+    key = jax.random.PRNGKey(5)
+    eta = _eta(sp)
+    st_new, rels_new = distributed.run_async(sp, eta=eta, rounds=6, key=key,
+                                             speeds=speeds)
+    st_old, rels_old = host_loop.run_async(sp, eta=eta, rounds=6, key=key,
+                                           speeds=speeds)
+    np.testing.assert_allclose(np.asarray(rels_new), np.asarray(rels_old),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(st_new.x_c),
+                               np.asarray(st_old.x_c), **TOL)
+
+
+@pytest.mark.parametrize("kind", ["logistic", "ridge"])
+def test_run_dsvrg_matches_host_loop(kind):
+    sp = _sharded(kind)
+    key = jax.random.PRNGKey(6)
+    eta = _eta(sp)
+    x_new, rels_new = distributed.run_dsvrg(sp, eta=eta, rounds=6, key=key)
+    x_old, rels_old = host_loop.run_dsvrg(sp, eta=eta, rounds=6, key=key)
+    np.testing.assert_allclose(np.asarray(rels_new), np.asarray(rels_old),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(x_new), np.asarray(x_old), **TOL)
+
+
+@pytest.mark.parametrize("kind", ["logistic", "ridge"])
+@pytest.mark.parametrize("literal_scaling", [False, True])
+def test_run_dsaga_matches_host_loop(kind, literal_scaling):
+    sp = _sharded(kind)
+    key = jax.random.PRNGKey(7)
+    eta = _eta(sp) / 2
+    st_new, rels_new = distributed.run_dsaga(
+        sp, eta=eta, rounds=6, key=key, tau=32,
+        literal_scaling=literal_scaling)
+    st_old, rels_old = host_loop.run_dsaga(
+        sp, eta=eta, rounds=6, key=key, tau=32,
+        literal_scaling=literal_scaling)
+    np.testing.assert_allclose(np.asarray(rels_new), np.asarray(rels_old),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(st_new.x_c),
+                               np.asarray(st_old.x_c), **TOL)
+
+
+@pytest.mark.parametrize("p", [2, 8])
+def test_async_event_traces_once_regardless_of_p(p):
+    """The seed model jit-compiled p per-worker event closures; the scan
+    runtime must trace its single traced-index event function exactly once
+    per compile, for any p.  (Python code inside a traced function runs
+    once per trace and zero times on a cache hit, so runtime.TRACES is an
+    exact probe.)"""
+    # distinctive shapes so no other test pre-populates the jit cache
+    sp = _sharded("logistic", p=p, n=44, d=7, seed=11)
+    eta = _eta(sp)
+    runtime.TRACES.clear()
+    _, rels = distributed.run_async(sp, eta=eta, rounds=3,
+                                    key=jax.random.PRNGKey(8))
+    assert runtime.TRACES["async_event"] == 1, dict(runtime.TRACES)
+    assert np.isfinite(np.asarray(rels)).all()
+    # identical shapes again: cache hit, zero retraces
+    runtime.TRACES.clear()
+    distributed.run_async(sp, eta=eta, rounds=3, key=jax.random.PRNGKey(9))
+    assert runtime.TRACES["async_event"] == 0, dict(runtime.TRACES)
+
+
+@pytest.mark.parametrize("p", [2, 8])
+def test_dsaga_event_traces_once_regardless_of_p(p):
+    sp = _sharded("ridge", p=p, n=44, d=7, seed=12)
+    eta = _eta(sp) / 2
+    runtime.TRACES.clear()
+    _, rels = distributed.run_dsaga(sp, eta=eta, rounds=3, tau=16,
+                                    key=jax.random.PRNGKey(10))
+    assert runtime.TRACES["dsaga_event"] == 1, dict(runtime.TRACES)
+    assert np.isfinite(np.asarray(rels)).all()
+
+
+def test_event_schedule_speed_weighted():
+    """Faster workers fire proportionally more events; every worker's
+    event count is within one of its speed share."""
+    p, rounds = 4, 6
+    speeds = (1.0, 1.0, 2.0, 4.0)
+    sched = runtime.event_schedule(p, rounds, speeds)
+    assert sched.shape == (p * rounds,)
+    counts = np.bincount(sched, minlength=p)
+    shares = np.asarray(speeds) / np.sum(speeds) * p * rounds
+    assert np.all(np.abs(counts - shares) <= 1.0), (counts, shares)
+    # round-robin default
+    rr = runtime.event_schedule(3, 2)
+    np.testing.assert_array_equal(rr, [0, 1, 2, 0, 1, 2])

@@ -10,6 +10,9 @@ import textwrap
 
 import pytest
 
+# whole-module: subprocess compiles / many reduced-arch compiles — fast lane skips these (DESIGN.md §5)
+pytestmark = pytest.mark.slow
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

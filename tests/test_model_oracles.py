@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# property tests skip (per-test) without the hypothesis dev extra;
+# plain tests in this module always run
+from hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.config import ModelConfig
 from repro.models import attention, moe, rglru, ssm
@@ -113,6 +116,7 @@ def test_ssd_nonzero_initial_state():
 # RG-LRU
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_rglru_scan_matches_steps():
     cfg = ModelConfig(name="t", family="hybrid", num_layers=2, d_model=32,
                       num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
@@ -181,6 +185,7 @@ def _moe_dense_reference(p, cfg, x):
     return y.reshape(B, S, d)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("shared", [False, True])
 def test_moe_sort_dispatch_matches_dense_reference(shared):
     cfg = _moe_cfg(shared=shared)
@@ -193,6 +198,7 @@ def test_moe_sort_dispatch_matches_dense_reference(shared):
     assert float(aux) > 0.0
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_overflow():
     """With capacity 'too small', output != reference but stays finite and
     the kept tokens' contributions are a subset (bounded norm)."""
@@ -207,6 +213,7 @@ def test_moe_capacity_drops_overflow():
     assert n_small < n_full
 
 
+@pytest.mark.slow
 def test_moe_load_balance_loss_uniform_router_is_minimal():
     """aux ~= coef for a perfectly uniform router (Switch normalization)."""
     cfg = _moe_cfg()

@@ -10,7 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# property tests skip (per-test) without the hypothesis dev extra;
+# plain tests in this module always run
+from hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.core import baselines, centralvr, convex
 
@@ -41,6 +44,7 @@ def test_corrected_gradient_unbiased(seed, kind):
         rtol=1e-10, atol=1e-12)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("kind", ["logistic", "ridge"])
 def test_eq7_telescoping(kind):
     """Eq. 7: x_{m+2}^0 = x_{m+1}^0 - eta * sum_j grad f_j(xtilde_{m+1}^j)
@@ -79,6 +83,7 @@ def test_accumulator_equals_table_mean():
         rtol=1e-9, atol=1e-11)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("kind", ["logistic", "ridge"])
 def test_constant_step_linear_convergence(kind):
     """VR property: constant step size, convergence to x* (machine-level),
@@ -95,6 +100,7 @@ def test_constant_step_linear_convergence(kind):
     assert np.median(rates) < 0.9
 
 
+@pytest.mark.slow
 def test_centralvr_beats_sgd_equal_gradient_budget():
     """Fig. 1 headline: at the same number of gradient evaluations,
     CentralVR reaches far lower gradient norm than tuned constant-step SGD."""

@@ -54,7 +54,12 @@ def test_xla_cost_analysis_counts_loops_once():
         return y
 
     compiled = jax.jit(f).lower(jnp.ones((64, 64), jnp.float32)).compile()
-    static_flops = compiled.cost_analysis()["flops"]
+    # cost_analysis() returned a one-element list of dicts in older jax
+    # and returns the dict directly in newer versions — accept both
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    static_flops = ca["flops"]
     assert static_flops < 2 * 64**3 * 2   # counts ~one body, not ten
 
 
@@ -69,6 +74,7 @@ def test_dot_flops_with_batch_dims():
     np.testing.assert_allclose(c.flops, 2 * 4 * 16 * 32 * 8, rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_collective_detection_in_sharded_module():
     import subprocess
     import sys

@@ -10,6 +10,7 @@ single-sample-path noise).
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import centralvr, convex, theory
 
@@ -30,6 +31,7 @@ def test_alpha_and_step_bound_consistency():
     assert theory.alpha(0.499 / L, mu, L) > 1.0
 
 
+@pytest.mark.slow
 def test_theorem1_lyapunov_contraction():
     prob = _well_conditioned_ridge()
     mu, L = convex.constants(prob)

@@ -67,8 +67,10 @@ def test_vr_correction_unbiased_over_epoch():
         vsum = vsum + v["w"]
     expected = sum(g["w"] for g in gs2)  # corrections telescope:
     # sum(g_i - old_i + gbar) = sum(g_i) - M*gbar + M*gbar
+    # float32 state + different summation orders: ~1e-5 relative is the
+    # achievable agreement (the identity is exact in real arithmetic)
     np.testing.assert_allclose(np.asarray(vsum), np.asarray(expected),
-                               rtol=1e-6)
+                               rtol=1e-4, atol=1e-7)
 
 
 def test_svrg_snapshot_refresh():
@@ -85,6 +87,7 @@ def test_svrg_snapshot_refresh():
     np.testing.assert_allclose(np.asarray(st.snapshot["w"]), 5.0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("vr", ["none", "centralvr", "svrg", "saga"])
 def test_train_step_modes_make_progress(cfg, vr):
     tcfg = TrainConfig(optimizer="sgd", learning_rate=0.1, vr=vr,
@@ -104,6 +107,7 @@ def test_train_step_modes_make_progress(cfg, vr):
     assert losses[-1] < losses[0], (vr, losses)
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_big_batch(cfg):
     """(A=4, mb=1) accumulated gradient == (A=1, mb=4) gradient."""
     import dataclasses
@@ -152,6 +156,7 @@ def test_checkpoint_roundtrip(cfg, tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_centralvr_sane_vs_sgd_lm_scale(cfg):
     """Sanity bound on the LM substrate: CentralVR's corrected updates stay
     in the same convergence regime as plain SGD over a short run (within
