@@ -1,0 +1,101 @@
+"""Scaling of the CentralVR-Sync driver per execution backend: the vmap
+single-device simulation vs the shard_map SPMD backend with one worker per
+(CPU-simulated) device (DESIGN.md §2).
+
+For each worker count p we measure cold (compile-inclusive) and warm wall
+clock of a fixed-round ``run_sync`` and derive warm epochs/sec.  Writes
+``BENCH_spmd.json`` at the repo root (the acceptance artifact: per-backend
+epochs/sec for p in {1, 2, 4}) plus the standard results CSV.
+
+Must start in a fresh process: it forces 4 simulated host devices through
+``spmd.force_host_devices`` before the first jax operation, so BOTH
+backends run under the same 4-device CPU platform (the honest comparison —
+on one real CPU the spmd backend pays real cross-device collective and
+dispatch overhead, which is the point of measuring it).
+
+    PYTHONPATH=src python -m benchmarks.spmd_scaling [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+WORKER_COUNTS = (1, 2, 4)
+BACKENDS = ("vmap", "spmd")
+
+
+def run(quick: bool = False):
+    from repro.core import spmd
+
+    spmd.force_host_devices(max(WORKER_COUNTS))
+    import jax
+
+    from benchmarks.common import emit, timed_cold_warm
+    from repro.config import ConvexConfig
+    from repro.core import convex, distributed
+
+    n, d = (128, 16) if quick else (256, 64)
+    rounds = 4 if quick else 8
+    repeat = 2 if quick else 3
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    for p in WORKER_COUNTS:
+        cfg = ConvexConfig(problem="logistic", n=n, d=d, workers=p)
+        sp = distributed.make_distributed(jax.random.PRNGKey(2), cfg)
+        eta = convex.auto_eta(sp.merged(), 0.3)
+        for backend in BACKENDS:
+            cold, warm = timed_cold_warm(
+                lambda: distributed.run_sync(sp, eta=eta, rounds=rounds,
+                                             key=key, backend=backend),
+                repeat=repeat)
+            rows.append({
+                "name": f"spmd_scaling/sync-{backend}-p{p}",
+                "backend": backend,
+                "p": p,
+                "us_per_call": warm * 1e6,
+                "cold_s": cold,
+                "warm_s": warm,
+                "compile_s": max(cold - warm, 0.0),
+                "epochs_per_s": rounds / warm,
+                "derived": f"cold={cold:.3f}s,warm={warm:.3f}s,"
+                           f"epochs/s={rounds / warm:.1f}",
+            })
+
+    payload = {
+        "config": {"n_per_worker": n, "d": d, "rounds": rounds,
+                   "workers": list(WORKER_COUNTS),
+                   "backends": list(BACKENDS), "quick": quick,
+                   "device_count": jax.device_count(),
+                   "backend_platform": jax.default_backend()},
+        "rows": rows,
+    }
+    with open(os.path.join(ROOT, "BENCH_spmd.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    emit(rows, "spmd_scaling")
+    return payload
+
+
+def run_isolated(quick: bool = False):
+    """Entry point for the ``benchmarks.run`` harness: launch a fresh
+    interpreter, because the forced host-device count must be set before
+    jax initializes and every other suite must keep the real single-device
+    view (see tests/conftest.py)."""
+    import subprocess
+    import sys
+
+    cmd = [sys.executable, "-m", "benchmarks.spmd_scaling"]
+    if quick:
+        cmd.append("--quick")
+    proc = subprocess.run(cmd, cwd=ROOT, capture_output=True, text=True,
+                          timeout=1800)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"spmd_scaling failed:\n{proc.stderr[-3000:]}")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -3,26 +3,41 @@
 rounds-to-tolerance linear-scaling readout.
 
     PYTHONPATH=src python examples/convex_distributed.py [--workers 8]
+
+``--backend spmd`` runs the synchronous drivers with one worker per
+simulated host device (DESIGN.md §2); the event-serial async/D-SAGA rows
+always use the vmap staleness simulator.
 """
 import argparse
 import sys
 
 sys.path.insert(0, "src")
 
-import jax
-import numpy as np
 
-from repro.config import ConvexConfig
-from repro.core import baselines, distributed
-
-
-def main():
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--n-per-worker", type=int, default=1000)
     ap.add_argument("--d", type=int, default=200)
     ap.add_argument("--rounds", type=int, default=12)
-    args = ap.parse_args()
+    ap.add_argument("--backend", choices=("vmap", "spmd"), default="vmap")
+    return ap.parse_args()
+
+
+def main():
+    args = parse_args()
+    if args.backend == "spmd":
+        # must precede the first jax operation (shared helper, DESIGN §2);
+        # the weak-scaling sweep below also runs p in (2, 4), so force at
+        # least 4 devices regardless of --workers
+        from repro.core import spmd
+        spmd.force_host_devices(max(args.workers, 4))
+
+    import jax
+    import numpy as np
+
+    from repro.config import ConvexConfig
+    from repro.core import baselines, distributed
 
     cfg = ConvexConfig(problem="logistic", n=args.n_per_worker, d=args.d,
                        workers=args.workers)
@@ -31,11 +46,13 @@ def main():
     from repro.core import convex
     eta = convex.auto_eta(sp.merged(), 0.4)
 
+    be = args.backend
     print(f"p={args.workers} workers, |Omega_s|={args.n_per_worker}, "
-          f"d={args.d}, {args.rounds} communication rounds\n")
+          f"d={args.d}, {args.rounds} communication rounds, "
+          f"backend={be}\n")
     runs = {
         "CentralVR-Sync": lambda: distributed.run_sync(
-            sp, eta=eta, rounds=args.rounds, key=key)[1],
+            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
         "CentralVR-Async": lambda: distributed.run_async(
             sp, eta=eta, rounds=args.rounds, key=key)[1],
         "CentralVR-Async (4x speed spread)": lambda: distributed.run_async(
@@ -43,14 +60,14 @@ def main():
             speeds=[1 + 3 * i / max(args.workers - 1, 1)
                     for i in range(args.workers)])[1],
         "Distributed-SVRG": lambda: distributed.run_dsvrg(
-            sp, eta=eta, rounds=args.rounds, key=key)[1],
+            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
         "Distributed-SAGA": lambda: distributed.run_dsaga(
             sp, eta=eta / 2, rounds=args.rounds, key=key,
             tau=args.n_per_worker // 2)[1],
         "EASGD": lambda: baselines.run_easgd(
-            sp, eta=eta, rounds=args.rounds, key=key)[1],
+            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
         "dist-SGD": lambda: baselines.run_dist_sgd(
-            sp, eta=eta, rounds=args.rounds, key=key)[1],
+            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
     }
     for name, fn in runs.items():
         rels = np.asarray(fn())
@@ -64,7 +81,7 @@ def main():
         sp_p = distributed.make_distributed(jax.random.PRNGKey(0), cfg_p)
         eta_p = convex.auto_eta(sp_p.merged(), 0.4)
         rels = np.asarray(distributed.run_sync(
-            sp_p, eta=eta_p, rounds=args.rounds, key=key)[1])
+            sp_p, eta=eta_p, rounds=args.rounds, key=key, backend=be)[1])
         hit = np.nonzero(rels < 1e-3)[0]
         r = int(hit[0]) + 1 if hit.size else f">{args.rounds}"
         print(f"  p={p:3d} (total data {p * args.n_per_worker}): {r} rounds")

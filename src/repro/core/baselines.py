@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import convex, runtime
 from repro.core.convex import Problem
-from repro.core.distributed import ShardedProblem
+from repro.core.distributed import ShardedProblem, check_backend
 
 
 # ---------------------------------------------------------------------------
@@ -157,9 +157,14 @@ def _dist_sgd_scan(sp: ShardedProblem, x, g0, keys, etas, tau: int):
 
 
 def run_dist_sgd(sp: ShardedProblem, *, eta: float, rounds: int,
-                 key: jax.Array, tau: int = 0, decay: float = 0.0):
+                 key: jax.Array, tau: int = 0, decay: float = 0.0,
+                 backend: str = "vmap", mesh=None):
     """Distributed SGD: tau local steps (default: one local epoch), then
     average — the 'one-shot-averaging per round' baseline."""
+    if check_backend(backend) == "spmd":
+        from repro.core import spmd
+        return spmd.run_dist_sgd(sp, eta=eta, rounds=rounds, key=key,
+                                 tau=tau, decay=decay, mesh=mesh)
     tau = tau or sp.ns
     x = jnp.zeros((sp.d,))
     g0 = convex.grad_norm0(sp.merged())
@@ -212,13 +217,18 @@ def _easgd_scan(sp: ShardedProblem, xc, xs, alpha, g0, keys, etas,
 
 
 def run_easgd(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              tau: int = 16, rho: float = 1.0, decay: float = 0.0):
+              tau: int = 16, rho: float = 1.0, decay: float = 0.0,
+              backend: str = "vmap", mesh=None):
     """EASGD [36]: workers do tau local SGD steps, then the elastic update
       x_s <- x_s - alpha*(x_s - xc),  xc <- xc + alpha*sum_s(x_s - xc)/p'
     with alpha = eta*rho (the paper's beta=p*alpha convention, symmetric
     moving-average form). Step size optionally decays as eta0/(1+gamma*k)^.5
     on a local clock, as in [36]/§6.2.
     """
+    if check_backend(backend) == "spmd":
+        from repro.core import spmd
+        return spmd.run_easgd(sp, eta=eta, rounds=rounds, key=key, tau=tau,
+                              rho=rho, decay=decay, mesh=mesh)
     p = sp.p
     alpha = min(0.9 / p, eta * rho * tau)   # stability-capped elastic rate
     xc = jnp.zeros((sp.d,))
@@ -263,13 +273,18 @@ def _ps_svrg_scan(sp: ShardedProblem, x, eta, g0, keys, inner: int):
 
 
 def run_ps_svrg(sp: ShardedProblem, *, eta: float, rounds: int,
-                key: jax.Array, epoch_mult: int = 2):
+                key: jax.Array, epoch_mult: int = 2,
+                backend: str = "vmap", mesh=None):
     """Parameter-server SVRG [29]: every worker streams one corrected
     gradient per step to the server (communication every iteration — the
     high-bandwidth regime the paper contrasts against). Simulated with
     synchronized arrivals (staleness 0, the method's best case); epoch
     size 2n as recommended in [29]. Per round: one full gradient + 2
     gradient evaluations per inner step per worker."""
+    if check_backend(backend) == "spmd":
+        from repro.core import spmd
+        return spmd.run_ps_svrg(sp, eta=eta, rounds=rounds, key=key,
+                                epoch_mult=epoch_mult, mesh=mesh)
     x = jnp.zeros((sp.d,))
     g0 = convex.grad_norm0(sp.merged())
     inner = epoch_mult * sp.ns

@@ -132,14 +132,24 @@ def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str):
 
 
 def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
-        sampling: str = "permutation", x0: Optional[jax.Array] = None):
+        sampling: str = "permutation", x0: Optional[jax.Array] = None,
+        backend: str = "vmap", mesh=None):
     """Full Algorithm 1. Returns (final state, per-epoch relative grad norms,
     gradient-evaluation counts). 1 gradient evaluation per iteration
     (Table 1 row 'CentralVR'), plus the n initialization evaluations.
 
     Device-resident: the epoch loop is a single jitted ``lax.scan``; the
     per-epoch metric trajectory comes back in one transfer (DESIGN.md §3).
+
+    ``backend``: Algorithm 1 is single-worker, so ``"spmd"`` simply places
+    the run on the mesh's first device — the parameter exists so launchers
+    can address every driver through one switch (DESIGN.md §2).
     """
+    from repro.core.distributed import check_backend
+    if check_backend(backend) == "spmd":
+        from repro.core import spmd
+        return spmd.run_centralvr(prob, eta=eta, epochs=epochs, key=key,
+                                  sampling=sampling, x0=x0, mesh=mesh)
     k_init, k_run = jax.random.split(key)
     state = init_state(prob, eta, k_init, x0=x0)
     g0 = convex.grad_norm0(prob)

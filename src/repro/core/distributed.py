@@ -69,6 +69,27 @@ jax.tree_util.register_pytree_node(
 )
 
 
+def check_backend(backend: str, *, spmd_ok: bool = True, algo: str = ""):
+    """Validate a driver ``backend=`` argument (DESIGN.md §2).
+
+    ``vmap`` is the stacked-axis single-device simulation and the default
+    everywhere; ``spmd`` is the one-worker-per-device shard_map backend in
+    ``core/spmd.py``.  The event-serial drivers (CentralVR-Async, D-SAGA)
+    process one worker's update at a time, so there is no worker-parallel
+    SPMD program for them — they pass ``spmd_ok=False`` and get a clear
+    error instead of a silent fallback."""
+    if backend not in ("vmap", "spmd"):
+        raise ValueError(
+            f"unknown backend {backend!r}: expected 'vmap' or 'spmd'")
+    if backend == "spmd" and not spmd_ok:
+        raise NotImplementedError(
+            f"{algo} is event-serial (one worker updates the central state "
+            "per event), so it has no worker-parallel SPMD execution; use "
+            "backend='vmap' — the deterministic staleness simulator "
+            "(DESIGN.md §2)")
+    return backend
+
+
 def shard_problem(prob: Problem, p: int) -> ShardedProblem:
     n = (prob.n // p) * p
     return ShardedProblem(prob.A[:n].reshape(p, -1, prob.d),
@@ -174,9 +195,17 @@ def _sync_scan(sp: ShardedProblem, st: SyncState, eta, g0, keys):
     return jax.lax.scan(step, st, keys)
 
 
-def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array):
+def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
+             backend: str = "vmap", mesh=None):
     """Algorithm 2 end to end: one jitted scan over communication rounds,
-    metric on device, state donated (DESIGN.md §3)."""
+    metric on device, state donated (DESIGN.md §3).
+
+    ``backend="spmd"`` runs the same rounds under ``shard_map`` with one
+    worker per device of ``mesh`` (default: a mesh over the first p
+    devices); the central average becomes a ``pmean`` (DESIGN.md §2)."""
+    if check_backend(backend) == "spmd":
+        from repro.core import spmd
+        return spmd.run_sync(sp, eta=eta, rounds=rounds, key=key, mesh=mesh)
     k_init, k_run = jax.random.split(key)
     st = sync_init(sp, eta, k_init)
     g0 = convex.grad_norm0(sp.merged())
@@ -267,13 +296,15 @@ def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys):
 
 
 def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              speeds=None):
+              speeds=None, backend: str = "vmap"):
     """``rounds`` epochs per worker. ``speeds``: optional per-worker relative
     speeds; faster workers fire proportionally more events (heterogeneous
     cluster simulation). Default: round-robin (staleness p-1).
 
     The speed-weighted schedule is precomputed on the host, shipped as a
-    (rounds, p) int32 array, and scanned on device in a single compile."""
+    (rounds, p) int32 array, and scanned on device in a single compile.
+    Event-serial, hence vmap-only: ``backend="spmd"`` raises."""
+    check_backend(backend, spmd_ok=False, algo="CentralVR-Async")
     k_init, k_run = jax.random.split(key)
     st = async_init(sp, eta, k_init)
     g0 = convex.grad_norm0(sp.merged())
@@ -319,12 +350,17 @@ def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int):
 
 
 def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              tau: int = 0):
+              tau: int = 0, backend: str = "vmap", mesh=None):
     """tau local steps from the shared snapshot (default tau = 2*ns, the
     paper's recommendation from [17]); gbar = full gradient at the snapshot
     (the synchronization step); then average x across workers.
     2 gradient evaluations per iteration (Table 1).  One jitted scan over
-    rounds (DESIGN.md §3)."""
+    rounds (DESIGN.md §3); ``backend="spmd"`` places one worker per mesh
+    device and the averages/sync gradient become collectives."""
+    if check_backend(backend) == "spmd":
+        from repro.core import spmd
+        return spmd.run_dsvrg(sp, eta=eta, rounds=rounds, key=key, tau=tau,
+                              mesh=mesh)
     tau = tau or 2 * sp.ns
     x = jnp.zeros((sp.d,))
     g0 = convex.grad_norm0(sp.merged())
@@ -418,7 +454,8 @@ def _dsaga_scan(sp: ShardedProblem, st: DSagaState, eta, g0, schedule, keys,
 
 
 def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              tau: int = 100, literal_scaling: bool = False):
+              tau: int = 100, literal_scaling: bool = False,
+              backend: str = "vmap"):
     """Algorithm 5. Each worker runs tau SAGA steps with its local table;
     the running mean gbar is updated with the GLOBAL 1/n scaling (§5.2);
     deltas (dx, dgbar) are pushed with server coefficient alpha.
@@ -443,7 +480,9 @@ def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
 
     Like CentralVR-Async, the whole event schedule runs as one jitted scan
     with a traced worker index — one executable regardless of p.
+    Event-serial, hence vmap-only: ``backend="spmd"`` raises.
     """
+    check_backend(backend, spmd_ok=False, algo="D-SAGA")
     st = dsaga_init(sp)
     g0 = convex.grad_norm0(sp.merged())
     schedule = runtime.event_schedule(sp.p, rounds)

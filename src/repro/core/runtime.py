@@ -38,9 +38,46 @@ def event_schedule(p: int, rounds: int, speeds=None) -> np.ndarray:
     staleness p-1); otherwise faster workers fire proportionally more
     events — the deterministic simulation of a heterogeneous cluster.
     Precomputed on the host once; the device scans it in one compile.
+
+    Vectorized as a sorted merge of per-worker arrival streams: worker s's
+    k-th event lands at cumsum_k(1/speeds[s]), and the greedy
+    pick-the-earliest loop is exactly the (time, worker)-lexicographic
+    merge of those streams.  ``np.cumsum`` accumulates sequentially, the
+    same float additions as the seed loop's ``t_next[s] += 1/speeds[s]``,
+    so ties — and therefore the output — are byte-identical to
+    ``_event_schedule_loop`` (pinned by ``tests/test_driver_runtime.py``)
+    while dropping the O(rounds·p) host loop per driver call.
     """
     if speeds is None:
         return np.tile(np.arange(p, dtype=np.int32), rounds)
+    speeds = np.asarray(speeds, dtype=float)
+    if speeds.shape != (p,):
+        raise ValueError(f"speeds must have shape ({p},), got {speeds.shape}")
+    total = rounds * p
+    # Cap each worker's candidate stream: the time of the last popped
+    # event is at most tau = (total + p)/sum(speeds) (every worker j has
+    # at least floor(tau*speed_j) arrivals before tau, and those already
+    # sum to >= total), so no worker can win more than
+    # ceil(tau*speed_max) slots.  +4 slack absorbs float accumulation
+    # drift.  This keeps the merge O(total) memory for near-uniform
+    # speeds instead of O(total*p); only a worker fast enough to win most
+    # slots pushes the cap back toward `total`.
+    cap = int(np.ceil((total + p) * speeds.max() / speeds.sum())) + 4
+    m = min(total, cap)
+    # (p, m) arrival times: row s is the times worker s could fire
+    step = np.broadcast_to((1.0 / speeds)[:, None], (p, m))
+    arrivals = np.cumsum(step, axis=1)
+    workers = np.broadcast_to(
+        np.arange(p, dtype=np.int32)[:, None], (p, m))
+    # primary key: arrival time; tie-break: lowest worker index (argmin's
+    # first-minimum rule in the seed loop)
+    order = np.lexsort((workers.ravel(), arrivals.ravel()))
+    return np.ascontiguousarray(workers.ravel()[order[:total]])
+
+
+def _event_schedule_loop(p: int, rounds: int, speeds) -> np.ndarray:
+    """Seed implementation of the speed-weighted schedule, kept verbatim as
+    the byte-identical reference for the vectorized merge above."""
     speeds = np.asarray(speeds, dtype=float)
     if speeds.shape != (p,):
         raise ValueError(f"speeds must have shape ({p},), got {speeds.shape}")

@@ -1,0 +1,457 @@
+"""SPMD multi-device execution backend for the convex driver runtime.
+
+The default backend simulates the p workers with a stacked leading axis
+under ``jax.vmap`` — numerically identical to p processes, but every shard
+lives on ONE device.  This module is the second backend (DESIGN.md §2):
+the same local-epoch primitives run under ``jax.shard_map`` over a real
+``jax.sharding.Mesh`` with one worker per device, so each worker's
+``(ns, d)`` shard, VR table, and gradient accumulator are resident on its
+own device and the paper's central server becomes collective communication
+(``jax.lax.pmean`` over the worker axis) instead of a ``mean(axis=0)``.
+
+On this container the mesh is CPU-simulated: ``force_host_devices(n)``
+(shared by ``launch/mesh.py`` and the tests) forces the host platform to
+present n devices via XLA_FLAGS — it must run before the jax backend
+initializes, but after ``import jax`` is fine (device state is lazy).
+
+Sampling is data, not code (the async event schedule's rule, DESIGN.md §3,
+extended to RNG): every permutation/index draw is precomputed on the host
+with EXACTLY the key splits the vmap drivers perform, then shipped to the
+mesh sharded along the worker axis.  This is deliberate — on this jax
+version, XLA's multi-device CPU partitioner miscompiles in-shard
+``jax.random.permutation``/``randint`` in larger programs (every device
+silently receives device 0's draw; the spmd/vmap disagreement that exposed
+it is pinned by ``tests/test_spmd_backend.py``), and shipping the draws
+also guarantees both backends consume identical randomness by
+construction, so the only numerical divergence left is collective
+reduction order.  (``check_rep=False`` on every runner for a related
+reason: this jax version's replication checker rejects scan carries that
+enter unreplicated and leave pmean-replicated, which is the shape of
+every round loop here; correctness is pinned by the vmap-agreement tests
+instead.)
+
+Backend contract (pinned by ``tests/test_spmd_backend.py``):
+
+  * trajectories agree with the vmap backend within float32 tolerance;
+  * worker state is genuinely placed: each shard of the ``(p, ns)`` tables
+    maps to a distinct device;
+  * the event-serial drivers (CentralVR-Async, D-SAGA) have no
+    worker-parallel program — one worker updates the central state at a
+    time — and their ``backend="spmd"`` raises ``NotImplementedError``
+    from ``distributed.py`` rather than silently falling back.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import convex
+from repro.core.convex import Problem
+
+WORKER_AXIS = "workers"
+
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+# ---------------------------------------------------------------------------
+# Host-device simulation + mesh construction
+# ---------------------------------------------------------------------------
+
+def force_host_devices(n: int) -> None:
+    """Make the CPU host platform present ``n`` devices (XLA_FLAGS).
+
+    Safe to call after ``import jax`` but only before the backend
+    initializes (first ``jax.devices()`` / first op); afterwards it is a
+    no-op if enough devices already exist and an error otherwise.  Both
+    ``launch/mesh.py`` and the spmd tests go through here so the flag is
+    spelled in exactly one place.
+    """
+    from jax._src import xla_bridge
+
+    if xla_bridge.backends_are_initialized():
+        if jax.device_count() >= n:
+            return
+        raise RuntimeError(
+            f"jax already initialized with {jax.device_count()} device(s); "
+            f"force_host_devices({n}) must run before the first jax "
+            "operation (importing jax is fine — touching devices is not)")
+    flags = os.environ.get("XLA_FLAGS", "")
+    existing = re.search(rf"{_COUNT_FLAG}=(\d+)", flags)
+    if existing:
+        # at-least-n semantics, same as the post-init branch: never lower
+        # a count someone already forced (e.g. a user-exported XLA_FLAGS)
+        if int(existing.group(1)) < n:
+            flags = re.sub(rf"{_COUNT_FLAG}=\d+", f"{_COUNT_FLAG}={n}",
+                           flags)
+    else:
+        flags = (flags + f" {_COUNT_FLAG}={n}").strip()
+    os.environ["XLA_FLAGS"] = flags
+
+
+def worker_mesh(p: int) -> Mesh:
+    """A 1-D mesh of p devices, one CentralVR worker per device."""
+    devs = jax.devices()
+    if len(devs) < p:
+        raise RuntimeError(
+            f"spmd backend needs {p} devices, found {len(devs)}; on CPU "
+            f"call repro.core.spmd.force_host_devices({p}) before the "
+            f"first jax operation (or set "
+            f'XLA_FLAGS="{_COUNT_FLAG}={p}")')
+    return Mesh(np.asarray(devs[:p]), (WORKER_AXIS,))
+
+
+def _check_mesh(mesh: Optional[Mesh], p: int) -> Mesh:
+    mesh = mesh if mesh is not None else worker_mesh(p)
+    if mesh.devices.size != p:
+        raise ValueError(
+            f"mesh has {mesh.devices.size} devices but the problem has "
+            f"{p} workers; the spmd backend places exactly one worker "
+            "per mesh device")
+    return mesh
+
+
+def _put(mesh: Mesh, sharded_tree, replicated_tree, worker_dim=0):
+    """Place worker-stacked leaves sharded along ``worker_dim`` and
+    everything else replicated, so the jitted runners see consistent input
+    shardings (mixing mesh-sharded and single-device-committed args is an
+    error)."""
+    spec = P(*([None] * worker_dim + [WORKER_AXIS]))
+    shard = NamedSharding(mesh, spec)
+    repl = NamedSharding(mesh, P())
+    return (jax.device_put(sharded_tree, shard),
+            jax.device_put(replicated_tree, repl))
+
+
+# ---------------------------------------------------------------------------
+# Host-side RNG precompute — bit-identical to the vmap drivers' draws
+# ---------------------------------------------------------------------------
+
+def _round_perms(keys: jax.Array, p: int, ns: int) -> jax.Array:
+    """(rounds, p, ns) permutations: per round, split the round key into p
+    and draw each worker's epoch permutation — exactly ``sync_round``."""
+    return jax.vmap(lambda k: jax.vmap(
+        lambda kk: jax.random.permutation(kk, ns))(jax.random.split(k, p))
+    )(keys)
+
+
+def _round_indices(keys: jax.Array, p: int, ns: int, tau: int) -> jax.Array:
+    """(rounds, p, tau) uniform index draws — exactly the vmapped
+    ``jax.random.randint(kk, (tau,), 0, ns)`` of the local-loop drivers."""
+    return jax.vmap(lambda k: jax.vmap(
+        lambda kk: jax.random.randint(kk, (tau,), 0, ns))(
+        jax.random.split(k, p)))(keys)
+
+
+# ---------------------------------------------------------------------------
+# In-shard metric helpers
+# ---------------------------------------------------------------------------
+
+def _rel_grad_norm(local: Problem, x: jax.Array, g0: jax.Array) -> jax.Array:
+    """The paper's y-axis on the GLOBAL objective, from inside a shard:
+    per-shard data-term means are equal-weighted (every worker holds ns
+    samples), so their pmean is the merged problem's data gradient."""
+    s = convex.scalar_residual_all(local, x)
+    data = jax.lax.pmean(convex.data_grad_from_scalars(local, s), WORKER_AXIS)
+    return jnp.linalg.norm(data + 2.0 * local.lam * x) / g0
+
+
+def _full_grad(local: Problem, x: jax.Array) -> jax.Array:
+    """Global full gradient via collective: pmean of per-shard full
+    gradients (the replicated 2·lam·x term averages to itself)."""
+    return jax.lax.pmean(convex.full_grad(local, x), WORKER_AXIS)
+
+
+# ---------------------------------------------------------------------------
+# CentralVR-Sync (Algorithm 2) under shard_map
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sync_runner(mesh: Mesh, kind: str):
+    """One compiled executable per (mesh, problem kind): init epoch + the
+    whole round scan inside a single jitted shard_map.  Cached so warm
+    calls skip shard_map re-construction and hit the jit cache."""
+    from repro.core.distributed import _local_centralvr_epoch, _local_sgd_epoch
+
+    def body(A, b, lam, eta, g0, perm0, perms):
+        A, b, perm0 = A[0], b[0], perm0[0]    # this worker's shard
+        local = Problem(A, b, lam, kind)
+
+        # --- init: one plain-SGD epoch per worker, then average (line 2)
+        x0 = jnp.zeros((A.shape[1],), dtype=A.dtype)
+        x_w, table, acc = _local_sgd_epoch(A, b, lam, kind, x0, eta, perm0)
+        x = jax.lax.pmean(x_w, WORKER_AXIS)
+        gbar = jax.lax.pmean(acc, WORKER_AXIS)
+
+        # --- communication rounds (lines 4-18): local epoch, then the
+        # central average of (x, gbar) as a collective pmean
+        def one_round(carry, perm):
+            x, table, gbar = carry
+            x_w, table, acc = _local_centralvr_epoch(
+                A, b, lam, kind, x, table, gbar, eta, perm[0])
+            x = jax.lax.pmean(x_w, WORKER_AXIS)
+            gbar = jax.lax.pmean(acc, WORKER_AXIS)
+            rel = _rel_grad_norm(local, x, g0)
+            return (x, table, gbar), rel
+
+        (x, table, gbar), rels = jax.lax.scan(one_round, (x, table, gbar),
+                                              perms)
+        return x, table[None], gbar, rels
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P(), P(), P(),
+                  P(WORKER_AXIS), P(None, WORKER_AXIS)),
+        out_specs=(P(), P(WORKER_AXIS), P(), P()), check_rep=False))
+
+
+def run_sync(sp, *, eta: float, rounds: int, key: jax.Array,
+             mesh: Optional[Mesh] = None):
+    """Algorithm 2 with one worker per device (DESIGN.md §2, spmd backend).
+    Same RNG draws as the vmap driver (precomputed on host), so the
+    trajectories agree within reduction-order float noise."""
+    from repro.core.distributed import SyncState
+
+    mesh = _check_mesh(mesh, sp.p)
+    k_init, k_run = jax.random.split(key)
+    g0 = convex.grad_norm0(sp.merged())
+    perm0 = jax.vmap(lambda kk: jax.random.permutation(kk, sp.ns))(
+        jax.random.split(k_init, sp.p))
+    perms = _round_perms(jax.random.split(k_run, rounds), sp.p, sp.ns)
+    (A, b, perm0), (lam, eta, g0) = _put(
+        mesh, (sp.A, sp.b, perm0), (sp.lam, jnp.asarray(eta), g0))
+    (perms,), () = _put(mesh, (perms,), (), worker_dim=1)
+    x, tables, gbar, rels = _sync_runner(mesh, sp.kind)(
+        A, b, lam, eta, g0, perm0, perms)
+    return SyncState(x=x, tables=tables, gbar=gbar), rels
+
+
+# ---------------------------------------------------------------------------
+# Distributed SVRG (Algorithm 4) under shard_map
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _dsvrg_runner(mesh: Mesh, kind: str):
+    def body(A, b, lam, eta, g0, idx):
+        A, b = A[0], b[0]
+        local = Problem(A, b, lam, kind)
+        x0 = jnp.zeros((A.shape[1],), dtype=A.dtype)
+
+        def round_(x, idx_r):
+            xbar = x
+            gbar = _full_grad(local, xbar)   # sync step (line 5)
+
+            def step(xl, i):
+                g = (convex.scalar_residual(local, xl, i) * A[i]
+                     - convex.scalar_residual(local, xbar, i) * A[i]
+                     + gbar + 2.0 * lam * (xl - xbar))
+                return xl - eta * g, None
+
+            xl, _ = jax.lax.scan(step, xbar, idx_r[0])
+            x = jax.lax.pmean(xl, WORKER_AXIS)
+            rel = _rel_grad_norm(local, x, g0)
+            return x, rel
+
+        return jax.lax.scan(round_, x0, idx)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P(), P(), P(),
+                  P(None, WORKER_AXIS)),
+        out_specs=(P(), P()), check_rep=False))
+
+
+def run_dsvrg(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 0,
+              mesh: Optional[Mesh] = None):
+    tau = tau or 2 * sp.ns
+    mesh = _check_mesh(mesh, sp.p)
+    g0 = convex.grad_norm0(sp.merged())
+    idx = _round_indices(jax.random.split(key, rounds), sp.p, sp.ns, tau)
+    (A, b), (lam, eta, g0) = _put(
+        mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
+    (idx,), () = _put(mesh, (idx,), (), worker_dim=1)
+    return _dsvrg_runner(mesh, sp.kind)(A, b, lam, eta, g0, idx)
+
+
+# ---------------------------------------------------------------------------
+# Minibatch baselines under shard_map
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _dist_sgd_runner(mesh: Mesh, kind: str):
+    def body(A, b, lam, g0, idx, etas):
+        A, b = A[0], b[0]
+        local = Problem(A, b, lam, kind)
+        x0 = jnp.zeros((A.shape[1],), dtype=A.dtype)
+
+        def round_(x, ins):
+            idx_r, eta_l = ins
+
+            def step(xl, i):
+                g = (convex.scalar_residual(local, xl, i) * A[i]
+                     + 2.0 * lam * xl)
+                return xl - eta_l * g, None
+
+            xl, _ = jax.lax.scan(step, x, idx_r[0])
+            x_new = jax.lax.pmean(xl, WORKER_AXIS)
+            return x_new, _rel_grad_norm(local, x_new, g0)
+
+        return jax.lax.scan(round_, x0, (idx, etas))
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P(), P(),
+                  P(None, WORKER_AXIS), P()),
+        out_specs=(P(), P()), check_rep=False))
+
+
+def run_dist_sgd(sp, *, eta: float, rounds: int, key: jax.Array,
+                 tau: int = 0, decay: float = 0.0,
+                 mesh: Optional[Mesh] = None):
+    tau = tau or sp.ns
+    mesh = _check_mesh(mesh, sp.p)
+    g0 = convex.grad_norm0(sp.merged())
+    idx = _round_indices(jax.random.split(key, rounds), sp.p, sp.ns, tau)
+    etas = eta / (1.0 + decay * jnp.arange(rounds) * tau) ** 0.5
+    (A, b), (lam, g0, etas) = _put(
+        mesh, (sp.A, sp.b), (sp.lam, g0, etas))
+    (idx,), () = _put(mesh, (idx,), (), worker_dim=1)
+    return _dist_sgd_runner(mesh, sp.kind)(A, b, lam, g0, idx, etas)
+
+
+@functools.lru_cache(maxsize=None)
+def _easgd_runner(mesh: Mesh, kind: str):
+    def body(A, b, lam, alpha, g0, idx, etas):
+        A, b = A[0], b[0]
+        local = Problem(A, b, lam, kind)
+        d = A.shape[1]
+        xc0 = jnp.zeros((d,), dtype=A.dtype)
+        xl0 = jnp.zeros((d,), dtype=A.dtype)
+
+        def round_(carry, ins):
+            xc, xl = carry
+            idx_r, eta_l = ins
+
+            def comm_block(carry, idx_tau):
+                xl, xc_view = carry
+
+                def step(x, i):
+                    g = (convex.scalar_residual(local, x, i) * A[i]
+                         + 2.0 * lam * x)
+                    return x - eta_l * g, None
+
+                xl, _ = jax.lax.scan(step, xl, idx_tau)
+                diff = xl - xc_view
+                return (xl - alpha * diff, xc_view + alpha * diff), diff
+
+            (xl, _), diffs = jax.lax.scan(comm_block, (xl, xc), idx_r[0])
+            # center update: sum of worker contributions / p == pmean
+            xc = xc + alpha * jax.lax.pmean(diffs.sum(0), WORKER_AXIS)
+            rel = _rel_grad_norm(local, xc, g0)
+            return (xc, xl), rel
+
+        (xc, xl), rels = jax.lax.scan(round_, (xc0, xl0), (idx, etas))
+        return xc, xl[None], rels
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P(), P(), P(),
+                  P(None, WORKER_AXIS), P()),
+        out_specs=(P(), P(WORKER_AXIS), P()), check_rep=False))
+
+
+def run_easgd(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 16,
+              rho: float = 1.0, decay: float = 0.0,
+              mesh: Optional[Mesh] = None):
+    mesh = _check_mesh(mesh, sp.p)
+    alpha = min(0.9 / sp.p, eta * rho * tau)
+    steps_per_round = max(sp.ns // tau, 1)
+    g0 = convex.grad_norm0(sp.merged())
+    idx = _round_indices(jax.random.split(key, rounds), sp.p, sp.ns,
+                         steps_per_round * tau)
+    idx = idx.reshape(rounds, sp.p, steps_per_round, tau)
+    etas = eta / (1.0 + decay * jnp.arange(rounds) * sp.ns) ** 0.5
+    (A, b), (lam, alpha, g0, etas) = _put(
+        mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(alpha), g0, etas))
+    (idx,), () = _put(mesh, (idx,), (), worker_dim=1)
+    xc, _, rels = _easgd_runner(mesh, sp.kind)(A, b, lam, alpha, g0, idx,
+                                               etas)
+    return xc, rels
+
+
+@functools.lru_cache(maxsize=None)
+def _ps_svrg_runner(mesh: Mesh, kind: str):
+    def body(A, b, lam, eta, g0, idx):
+        A, b = A[0], b[0]
+        local = Problem(A, b, lam, kind)
+        x0 = jnp.zeros((A.shape[1],), dtype=A.dtype)
+
+        def round_(x, idx_r):
+            xbar = x
+            gbar = _full_grad(local, xbar)
+
+            def step(x, ii):
+                # this worker's index of the server step's (p,) draw
+                i = ii[0]
+                g_w = ((convex.scalar_residual(local, x, i)
+                        - convex.scalar_residual(local, xbar, i)) * A[i]
+                       + gbar + 2.0 * lam * (x - xbar))
+                g = jax.lax.pmean(g_w, WORKER_AXIS)
+                return x - eta * g, None
+
+            x, _ = jax.lax.scan(step, x, idx_r)
+            return x, _rel_grad_norm(local, x, g0)
+
+        return jax.lax.scan(round_, x0, idx)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P(), P(), P(),
+                  P(None, None, WORKER_AXIS)),
+        out_specs=(P(), P()), check_rep=False))
+
+
+def run_ps_svrg(sp, *, eta: float, rounds: int, key: jax.Array,
+                epoch_mult: int = 2, mesh: Optional[Mesh] = None):
+    mesh = _check_mesh(mesh, sp.p)
+    g0 = convex.grad_norm0(sp.merged())
+    inner = epoch_mult * sp.ns
+    # (rounds, inner, p): per server step, one index per worker — exactly
+    # the vmap driver's randint(ks, (p,)) stream
+    idx = jax.vmap(lambda k: jax.vmap(
+        lambda ks: jax.random.randint(ks, (sp.p,), 0, sp.ns))(
+        jax.random.split(k, inner)))(jax.random.split(key, rounds))
+    (A, b), (lam, eta, g0) = _put(
+        mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
+    (idx,), () = _put(mesh, (idx,), (), worker_dim=2)
+    return _ps_svrg_runner(mesh, sp.kind)(A, b, lam, eta, g0, idx)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 (single worker) on a mesh device
+# ---------------------------------------------------------------------------
+
+def run_centralvr(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+                  sampling: str = "permutation", x0=None,
+                  mesh: Optional[Mesh] = None):
+    """Algorithm 1 has no worker axis to shard — ``backend="spmd"`` means
+    "execute on the mesh": the problem is placed on the mesh's first
+    device and the standard device-resident scan runs there, so a launcher
+    can address one API regardless of backend."""
+    from repro.core import centralvr
+
+    mesh = mesh if mesh is not None else worker_mesh(1)
+    dev = mesh.devices.ravel()[0]
+    prob = jax.device_put(prob, dev)
+    key = jax.device_put(key, dev)
+    if x0 is not None:
+        x0 = jax.device_put(x0, dev)
+    return centralvr.run(prob, eta=eta, epochs=epochs, key=key,
+                         sampling=sampling, x0=x0)

@@ -23,6 +23,19 @@ def make_mesh(cfg: MeshConfig):
     return jax.make_mesh(cfg.shape, cfg.axis_names)
 
 
+def make_worker_mesh(p: int, *, simulate_host_devices: bool = False):
+    """One CentralVR worker per device, for the convex spmd backend
+    (``core/spmd.py``, DESIGN.md §2).  ``simulate_host_devices=True``
+    forces the CPU host platform to present p devices through the shared
+    ``spmd.force_host_devices`` helper — call it before the first jax
+    operation (the helper errors once the backend is initialized)."""
+    from repro.core import spmd
+
+    if simulate_host_devices:
+        spmd.force_host_devices(p)
+    return spmd.worker_mesh(p)
+
+
 def make_test_mesh(devices: Optional[int] = None,
                    model_axis: int = 2):
     """Small mesh over whatever devices exist (tests force 8 host devices

@@ -145,6 +145,26 @@ def test_dsaga_event_traces_once_regardless_of_p(p):
     assert np.isfinite(np.asarray(rels)).all()
 
 
+def test_event_schedule_matches_seed_loop():
+    """The vectorized sorted-merge schedule must be BYTE-identical to the
+    seed argmin loop (kept as runtime._event_schedule_loop), including
+    float-tie ordering — cumsum accumulates the same additions the loop
+    performed, and ties break by lowest worker index in both."""
+    cases = [(3, 5, [1.0, 2.0, 3.0]),           # the pinned satellite case
+             (3, 1, [1.0, 1.0, 1.0]),           # all-tied: pure tie-break
+             (4, 7, (1.0, 1.0, 2.0, 4.0)),
+             (5, 11, [0.3, 1.7, 2.2, 0.9, 5.0])]
+    rng = np.random.default_rng(7)
+    cases += [(p, int(rng.integers(1, 9)),
+               rng.uniform(0.2, 8.0, p).tolist()) for p in (2, 6, 9)]
+    for p, rounds, speeds in cases:
+        got = runtime.event_schedule(p, rounds, speeds)
+        want = runtime._event_schedule_loop(p, rounds, speeds)
+        assert got.dtype == want.dtype == np.int32
+        np.testing.assert_array_equal(got, want, err_msg=str((p, rounds,
+                                                              speeds)))
+
+
 def test_event_schedule_speed_weighted():
     """Faster workers fire proportionally more events; every worker's
     event count is within one of its speed share."""
