@@ -16,13 +16,13 @@ def main(argv=None) -> None:
                     help="reduced sizes (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig2,fig3,table1,theory,tau,"
-                         "variance,drivers,spmd,roofline")
+                         "variance,drivers,spmd,train,roofline")
     args = ap.parse_args(argv)
 
     from benchmarks import (driver_throughput, fig1_single_worker,
                             fig2_distributed, fig3_large, roofline_report,
                             spmd_scaling, table1_accounting, tau_sweep,
-                            theory_rates, variance)
+                            theory_rates, train_throughput, variance)
 
     suites = {
         "fig1": fig1_single_worker.run,
@@ -33,8 +33,9 @@ def main(argv=None) -> None:
         "tau": tau_sweep.run,
         "variance": variance.run,
         "drivers": driver_throughput.run,
-        # subprocess: forces its own multi-device host platform
+        # subprocess suites: force their own multi-device host platform
         "spmd": spmd_scaling.run_isolated,
+        "train": train_throughput.run_isolated,
         "roofline": roofline_report.run,
     }
     only = [s for s in args.only.split(",") if s]

@@ -43,7 +43,9 @@ def main():
     args = ap.parse_args()
 
     cfg = model_cfg(args.full)
-    steps = args.steps or (300 if args.full else 200)
+    # the epoch-scan loop drives whole communication epochs (M*K = 8
+    # steps each), so the step budget is rounded up to epoch granularity
+    steps = args.steps or (304 if args.full else 200)
     tcfg = TrainConfig(
         seq_len=256 if args.full else 128,
         global_batch=8, microbatch=2,
@@ -53,8 +55,8 @@ def main():
     print(f"model: {cfg.name}  params={n_params / 1e6:.1f}M  "
           f"steps={steps}  vr={tcfg.vr} (M={tcfg.vr_table_size})")
     res = loop.run_training(
-        cfg, tcfg, steps=steps, log_every=10,
-        checkpoint_path=args.checkpoint, checkpoint_every=100)
+        cfg, tcfg, steps=steps, log_every=2,
+        checkpoint_path=args.checkpoint, checkpoint_every=12)
     print(f"\ndone in {res.wall_time:.0f}s — "
           f"train loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}; "
           f"held-out eval loss {res.final_eval_loss:.3f}; "

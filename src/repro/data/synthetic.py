@@ -48,15 +48,39 @@ def epoch_batch(cfg: ModelConfig, seed: int, step: int, *, workers: int,
                 accum: int, microbatch: int, seq: int, table_size: int):
     """Tokens for one train step: (W, A, mb, S). The microbatch INDEX
     cycles modulo table_size — step k uses component function
-    i = k mod M on every worker (permutation = sequential cycling)."""
+    i = k mod M on every worker (permutation = sequential cycling).
+
+    Vectorized over (worker, accum) and callable INSIDE jit with a traced
+    ``step`` (the fold_in key chain is stateless), so the epoch-scan
+    runtime generates batches on device instead of feeding them from the
+    host per step. The vmapped fold_in draws are bit-identical to the old
+    per-(w, a) host loop."""
     idx = step % table_size
-    ws = []
-    for w in range(workers):
-        accs = [microbatch_tokens(cfg, seed, w, idx * accum + a,
-                                  microbatch, seq)
-                for a in range(accum)]
-        ws.append(jnp.stack(accs))
-    return jnp.stack(ws)     # (W, A, mb, S)
+
+    def one(w, a):
+        return microbatch_tokens(cfg, seed, w, idx * accum + a,
+                                 microbatch, seq)
+
+    w_ids = jnp.arange(workers, dtype=jnp.int32)
+    a_ids = jnp.arange(accum, dtype=jnp.int32)
+    return jax.vmap(lambda w: jax.vmap(lambda a: one(w, a))(a_ids))(w_ids)
+
+
+def epoch_tokens(cfg: ModelConfig, seed: int, *, workers: int, steps: int,
+                 accum: int, microbatch: int, seq: int, table_size: int):
+    """All tokens of one communication epoch: (W, steps, A, mb, S).
+
+    Because the stream is a finite sum (index = step mod table_size), the
+    block for steps [0, M*K) is REUSED verbatim by every later epoch —
+    the spmd LM backend precomputes it once on the host and ships it
+    sharded along the worker axis (in-shard ``jax.random`` is off-limits
+    under the multi-device CPU partitioner, DESIGN.md §2)."""
+    per_step = jax.vmap(
+        lambda s: epoch_batch(cfg, seed, s, workers=workers, accum=accum,
+                              microbatch=microbatch, seq=seq,
+                              table_size=table_size)
+    )(jnp.arange(steps, dtype=jnp.int32))
+    return jnp.swapaxes(per_step, 0, 1)
 
 
 def frontend_embeds(cfg: ModelConfig, seed: int, batch: int,

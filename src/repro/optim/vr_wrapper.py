@@ -52,23 +52,34 @@ def init_vr(mode: str, params, M: int) -> Optional[VRState]:
                  else jnp.zeros(p.shape, jnp.float32), params)
     if mode == "svrg":
         table = ()
-        snapshot = tmap(lambda p: p.astype(p.dtype), params)
+        # p + 0 forces a fresh buffer: a same-dtype astype can alias the
+        # param, and aliased leaves break donation (donate-twice error in
+        # the epoch-scan runtime, which donates the whole TrainState)
+        snapshot = tmap(lambda p: p + 0, params)
     else:
         table = tmap(lambda z: jnp.zeros((M,) + z.shape, z.dtype), zeros)
         snapshot = ()
-    return VRState(table=table, gbar=zeros, gtilde=zeros,
+    return VRState(table=table, gbar=zeros,
+                   gtilde=tmap(jnp.zeros_like, zeros),
                    snapshot=snapshot, idx=jnp.zeros((), jnp.int32))
 
 
 def correct(mode: str, state: VRState, g, M: int, *, g_snap=None,
-            params=None):
+            params=None, idx=None):
     """One VR step (mode is STATIC). Returns (corrected_grads, new_state).
 
     g: fresh minibatch gradient at current params.
     g_snap: gradient of the SAME minibatch at the snapshot (svrg only).
     params: current params (svrg snapshot refresh at epoch end).
+    idx: optional SCALAR override of state.idx. Workers step in lockstep,
+        so the microbatch index is step % M on every worker — but under
+        vmap the per-worker state.idx is a BATCHED predicate, and a
+        batched lax.switch executes all M table branches and selects
+        (M× full-table traffic per step). Callers that know the scalar
+        step (the train step / epoch scan) pass it here so the switch
+        stays unbatched and touches one slot.
     """
-    i = state.idx
+    i = state.idx if idx is None else idx
     at_epoch_end = i == (M - 1)
 
     if mode == "svrg":

@@ -1,0 +1,110 @@
+"""Host-driven per-step reference loop — the pre-runtime execution model
+(mirroring ``core/host_loop.py`` for the convex drivers, DESIGN.md §3).
+
+One jitted step dispatched per iteration from a Python loop, with every
+batch built on the host and fed across the host->device boundary. Kept
+for two reasons:
+
+  * ``tests/test_train_scan.py`` pins the epoch-scan runtime
+    (``step.make_epoch_runner`` / ``loop.run_training``) to these
+    trajectories — the runtime rebuild must be a pure execution-model
+    change, not an algorithm change;
+  * ``benchmarks/train_throughput.py`` measures the epoch scan against
+    this baseline (steps/sec vs worker count, ``BENCH_train.json``).
+
+Do not grow features here; new work goes in the epoch-scan runtime.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.config import ModelConfig, TrainConfig
+from repro.data import synthetic
+from repro.launch import mesh as meshlib
+from repro.train import step as tstep
+from repro.train.loop import LoopResult
+
+
+def _epoch_batch_host(cfg, seed, step, *, workers, accum, microbatch, seq,
+                      table_size):
+    """Seed batch builder kept verbatim: one ``microbatch_tokens``
+    dispatch per (worker, accum) pair, stacked pairwise — per-step host
+    work that GROWS with the worker count, which is exactly what the
+    epoch scan's on-device generation eliminates. Byte-identical tokens
+    to the vectorized ``synthetic.epoch_batch`` (same fold_in chains)."""
+    idx = step % table_size
+    ws = []
+    for w in range(workers):
+        accs = [synthetic.microbatch_tokens(cfg, seed, w, idx * accum + a,
+                                            microbatch, seq)
+                for a in range(accum)]
+        ws.append(jnp.stack(accs))
+    return jnp.stack(ws)     # (W, A, mb, S)
+
+
+def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, steps: int,
+                 mesh=None, vr_workers: str = "none",
+                 workers: Optional[int] = None,
+                 checkpoint_path: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 log_every: int = 10,
+                 log_fn: Callable[[str], None] = print) -> LoopResult:
+    """Per-step reference training loop (seed execution model).
+
+    ``workers`` simulates W stacked worker copies under vmap on the
+    provided mesh (defaults to the mesh-derived count). ``steps`` is an
+    arbitrary step count — the epoch-scan loop drives whole epochs only.
+    """
+    mesh = mesh or meshlib.make_test_mesh()
+    train_step, meta = tstep.make_train_step(cfg, tcfg, mesh, vr_workers,
+                                             workers=workers)
+    W = meta["workers"]
+    accum, mb = tstep.batch_geometry(tcfg, W)
+
+    state = tstep.init_train_state(cfg, tcfg, jax.random.PRNGKey(tcfg.seed),
+                                   W)
+    jit_step = jax.jit(train_step)
+
+    def batch_for(s):
+        toks = _epoch_batch_host(cfg, tcfg.seed, s, workers=W,
+                                 accum=accum, microbatch=mb,
+                                 seq=tcfg.seq_len,
+                                 table_size=tcfg.vr_table_size)
+        if W == 1:
+            toks = toks[0]
+        return toks
+
+    result = LoopResult()
+    t0 = time.time()
+    # keep per-step metrics on device: forcing float(loss) every step
+    # would block on a device->host transfer and serialize dispatch; only
+    # log points pay the sync, everything else is fetched once at the end
+    device_losses = []
+    for s in range(steps):
+        state, metrics = jit_step(state, batch_for(s))
+        device_losses.append(metrics["loss"])
+        if log_every and (s % log_every == 0 or s == steps - 1):
+            log_fn(f"step {s:5d}  loss {float(metrics['loss']):.4f}")
+        if checkpoint_path and checkpoint_every and \
+                (s + 1) % checkpoint_every == 0:
+            ckpt.save(checkpoint_path, state, step=s + 1)
+    result.losses = [float(l) for l in jax.device_get(device_losses)]
+    result.steps = steps
+    result.wall_time = time.time() - t0
+    result.state = state
+
+    # held-out eval on the worker-AVERAGED params: mid-epoch the workers
+    # have diverged, worker 0 alone is not the algorithm's iterate
+    from repro.models import model as modellib
+    ev = synthetic.eval_batch(cfg, tcfg.seed, batch=mb, seq=tcfg.seq_len)
+    params = tstep.eval_params(state.params, W)
+    result.final_eval_loss = float(modellib.loss_fn(
+        params, cfg, {"tokens": ev}, remat="none"))
+    if checkpoint_path:
+        ckpt.save(checkpoint_path, state, step=steps)
+    return result

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig, TrainConfig
+from repro.data import synthetic
 from repro.launch import mesh as meshlib
 from repro.models import model
 from repro.optim import optimizers, vr_wrapper
@@ -42,6 +43,50 @@ class TrainState(NamedTuple):
     opt_state: Any
     vr_state: Any       # VRState or () when vr="none"
     step: jax.Array
+
+
+# LM worker mesh axis for the spmd epoch runtime — same axis name as the
+# convex backend (core/spmd.py WORKER_AXIS / launch.mesh.make_worker_mesh)
+LM_WORKER_AXIS = "workers"
+
+
+def batch_geometry(tcfg: TrainConfig, W: int):
+    """(accum, microbatch) for W workers. The seed code silently truncated
+    a non-dividing accumulation factor to 1 (dropping most of the global
+    batch); an uneven split is a config error and raises instead."""
+    if tcfg.microbatch:
+        denom = W * tcfg.microbatch
+        if tcfg.global_batch % denom:
+            raise ValueError(
+                f"global_batch={tcfg.global_batch} is not divisible by "
+                f"workers*microbatch = {W}*{tcfg.microbatch} = {denom}; "
+                "every worker must process the same number of whole "
+                "microbatches per step")
+        return tcfg.global_batch // denom, tcfg.microbatch
+    if tcfg.global_batch % W:
+        raise ValueError(
+            f"global_batch={tcfg.global_batch} is not divisible by "
+            f"workers={W}")
+    return 1, max(tcfg.global_batch // W, 1)
+
+
+def worker_average(tree):
+    """Algorithm 2 lines 16-18: the central server average over the
+    leading worker axis, broadcast back to every worker copy (lowers to
+    one all-reduce over the worker mesh axes under GSPMD)."""
+    return tmap(
+        lambda p: jnp.broadcast_to(p.mean(0, keepdims=True),
+                                   p.shape).astype(p.dtype), tree)
+
+
+def eval_params(params, W: int):
+    """Params for held-out eval: between exchanges the W worker copies
+    have DIVERGED, so worker 0 is not the algorithm's iterate — the
+    central average is (fetched to host so eval runs on the default
+    device regardless of backend placement)."""
+    if W <= 1:
+        return params
+    return jax.device_get(tmap(lambda p: p.mean(0).astype(p.dtype), params))
 
 
 def _loss(params, cfg, tcfg, tokens, fe, act_sharding=None):
@@ -88,15 +133,50 @@ def _local_grads(params, cfg, tcfg, tokens, fe, act_sharding=None):
     return loss, grads
 
 
+def _make_per_worker(cfg: ModelConfig, tcfg: TrainConfig, act_sharding=None):
+    """One worker's local step (grads -> VR correction -> optimizer),
+    shared by the per-step train_step, the vmap epoch scan, and the spmd
+    epoch runner — the execution models differ, the math must not."""
+    M = tcfg.vr_table_size
+    mode = tcfg.vr
+    opt = optimizers.make(tcfg.optimizer, tcfg.learning_rate,
+                          tcfg.weight_decay)
+
+    def per_worker(params, vr_state, opt_state, tokens, fe, idx=None):
+        # idx: scalar step % M, kept OUT of the vmapped axes so the VR
+        # table switch stays unbatched (see vr_wrapper.correct)
+        loss, g = _local_grads(params, cfg, tcfg, tokens, fe, act_sharding)
+        if mode == "svrg":
+            _, g_snap = _local_grads(vr_state.snapshot, cfg, tcfg, tokens,
+                                     fe, act_sharding)
+            v, vr_state = vr_wrapper.correct(mode, vr_state, g, M,
+                                             g_snap=g_snap, params=params,
+                                             idx=idx)
+        elif mode != "none":
+            v, vr_state = vr_wrapper.correct(mode, vr_state, g, M,
+                                             params=params, idx=idx)
+        else:
+            v = g
+        updates, opt_state = opt.update(v, opt_state, params)
+        params = optimizers.apply_updates(params, updates)
+        return params, vr_state, opt_state, loss
+
+    return per_worker
+
+
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
-                    vr_workers: str = "none"):
-    """Returns (train_step(state, tokens, fe), meta dict)."""
-    W = meshlib.worker_count(mesh, vr_workers) if tcfg.vr != "none" else 1
+                    vr_workers: str = "none", *,
+                    workers: Optional[int] = None):
+    """Returns (train_step(state, tokens, fe), meta dict).
+
+    ``workers`` overrides the mesh-derived worker count: W stacked worker
+    copies simulated under vmap on whatever devices the mesh has (the
+    single-device reference configuration of the epoch-scan runtime)."""
+    W = workers or (meshlib.worker_count(mesh, vr_workers)
+                    if tcfg.vr != "none" else 1)
     M = tcfg.vr_table_size
     K = tcfg.local_epoch
     comm_every = M * K
-    opt = optimizers.make(tcfg.optimizer, tcfg.learning_rate,
-                          tcfg.weight_decay)
     mode = tcfg.vr
 
     # In FSDP mode, pin the residual stream to batch-over-'data' so the
@@ -105,8 +185,11 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
     # (manual ZeRO; §Perf It.6). Only when the 'data' axis actually shards
     # the batch (W==1, or pod-level workers with data free).
     act_sharding = None
-    if (not tcfg.dp_replicated and "data" in mesh.axis_names
-            and mesh.devices.size > 1):
+    # (never with an explicit ``workers`` simulation: stacked worker
+    # copies are replicated by construction, and gather_ctx.enable is
+    # process-global — engaging it here would leak into other runtimes)
+    if (workers is None and not tcfg.dp_replicated
+            and "data" in mesh.axis_names and mesh.devices.size > 1):
         w_axes = (meshlib.worker_axes(mesh, vr_workers)
                   if tcfg.vr != "none" else ())
         if "data" not in w_axes:
@@ -114,45 +197,26 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
             from repro.sharding import gather_ctx
             gather_ctx.enable(mesh, cfg, meshlib.mesh_axis_sizes(mesh))
 
-    def per_worker(params, vr_state, opt_state, tokens, fe):
-        loss, g = _local_grads(params, cfg, tcfg, tokens, fe, act_sharding)
-        if mode == "svrg":
-            _, g_snap = _local_grads(vr_state.snapshot, cfg, tcfg, tokens,
-                                     fe, act_sharding)
-            v, vr_state = vr_wrapper.correct(mode, vr_state, g, M,
-                                             g_snap=g_snap, params=params)
-        elif mode != "none":
-            v, vr_state = vr_wrapper.correct(mode, vr_state, g, M,
-                                             params=params)
-        else:
-            v = g
-        updates, opt_state = opt.update(v, opt_state, params)
-        params = optimizers.apply_updates(params, updates)
-        return params, vr_state, opt_state, loss
+    per_worker = _make_per_worker(cfg, tcfg, act_sharding)
 
     def train_step(state: TrainState, tokens, fe=None):
         """tokens: (W, A, mb, S) when W>1 else (A, mb, S)."""
+        idx = state.step % M
         if W > 1:
             params, vr_state, opt_state, loss = jax.vmap(
-                per_worker, in_axes=(0, 0, 0, 0, 0 if fe is not None else None)
-            )(state.params, state.vr_state, state.opt_state, tokens, fe)
+                per_worker,
+                in_axes=(0, 0, 0, 0, 0 if fe is not None else None, None)
+            )(state.params, state.vr_state, state.opt_state, tokens, fe, idx)
             loss = loss.mean()
 
             def communicate(args):
                 params, vr_state = args
-                # Algorithm 2 lines 16-18: average x and gbar across the
-                # worker axis (one all-reduce over the worker mesh axes);
+                # average x and gbar across the worker axis;
                 # tables/accumulators stay local
-                params = tmap(
-                    lambda p: jnp.broadcast_to(p.mean(0, keepdims=True),
-                                               p.shape).astype(p.dtype),
-                    params)
+                params = worker_average(params)
                 if mode != "none":
-                    gbar = tmap(
-                        lambda g: jnp.broadcast_to(g.mean(0, keepdims=True),
-                                                   g.shape),
-                        vr_state.gbar)
-                    vr_state = vr_state._replace(gbar=gbar)
+                    vr_state = vr_state._replace(
+                        gbar=worker_average(vr_state.gbar))
                 return params, vr_state
 
             boundary = (state.step + 1) % comm_every == 0
@@ -160,7 +224,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
                 boundary, communicate, lambda a: a, (params, vr_state))
         else:
             params, vr_state, opt_state, loss = per_worker(
-                state.params, state.vr_state, state.opt_state, tokens, fe)
+                state.params, state.vr_state, state.opt_state, tokens, fe,
+                idx)
         return TrainState(params, opt_state, vr_state, state.step + 1), {
             "loss": loss}
 
@@ -168,6 +233,173 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
             "grads_per_step": vr_wrapper.grads_per_step(mode),
             "vr_storage_mult": vr_wrapper.storage_multiplier(mode, M)}
     return train_step, meta
+
+
+# ---------------------------------------------------------------------------
+# Epoch-scan runtime (DESIGN.md §3, "LM epoch scan")
+# ---------------------------------------------------------------------------
+
+def make_epoch_runner(cfg: ModelConfig, tcfg: TrainConfig, W: int, *,
+                      backend: str = "vmap", mesh=None):
+    """One whole communication epoch (M*K steps) as a single jitted
+    ``lax.scan`` with donated TrainState: ``run_epoch(state) -> (state,
+    (M*K,) losses)``, with the Algorithm-2 worker average applied at the
+    scan's epoch boundary. ``state.step`` must be a multiple of M*K
+    (``train/loop.py`` drives whole epochs, so it always is).
+
+      * ``backend="vmap"`` — W stacked worker copies on one device;
+        batches are generated ON DEVICE inside the scan body (the
+        fold_in-keyed pipeline traces with the scan's step counter), so
+        nothing crosses the host boundary during an epoch.
+      * ``backend="spmd"`` — ``shard_map`` over a 1-D worker mesh
+        (``launch.mesh.make_worker_mesh``), one worker per device; the
+        epoch boundary is a ``lax.pmean`` collective. The epoch's token
+        block is host-precomputed ONCE (it is step-independent: the
+        finite sum replays indices 0..M-1 every epoch) and shipped
+        sharded along the worker axis — the §2 partitioner workaround:
+        in-shard ``jax.random`` miscompiles on this jax version.
+
+    Returns (run_epoch, meta); meta carries the worker mesh for spmd so
+    callers can place the state (``place_train_state``).
+    """
+    if backend not in ("vmap", "spmd"):
+        raise ValueError(f"unknown backend {backend!r}: "
+                         "expected 'vmap' or 'spmd'")
+    E = tcfg.vr_table_size * tcfg.local_epoch
+    accum, mb = batch_geometry(tcfg, W)
+    meta = {"workers": W, "comm_every": E, "accum": accum,
+            "microbatch": mb, "backend": backend,
+            "grads_per_step": vr_wrapper.grads_per_step(tcfg.vr),
+            "vr_storage_mult": vr_wrapper.storage_multiplier(
+                tcfg.vr, tcfg.vr_table_size)}
+
+    if backend == "vmap":
+        return _epoch_runner_vmap(cfg, tcfg, W), meta
+
+    if mesh is None:
+        from repro.core import spmd
+        mesh = spmd.worker_mesh(W)
+    if mesh.devices.size != W:
+        raise ValueError(
+            f"worker mesh has {mesh.devices.size} devices but W={W}; the "
+            "spmd epoch runtime places exactly one worker per device")
+    meta["mesh"] = mesh
+    if W == 1:
+        # one worker has no axis to shard — like the convex backend
+        # (core/spmd.py run_centralvr), "spmd" then means "execute on the
+        # mesh device" so launchers address one API regardless of backend
+        return _epoch_runner_vmap(cfg, tcfg, W), meta
+    tokens = synthetic.epoch_tokens(
+        cfg, tcfg.seed, workers=W, steps=E, accum=accum, microbatch=mb,
+        seq=tcfg.seq_len, table_size=tcfg.vr_table_size)
+    tokens = jax.device_put(
+        tokens, NamedSharding(mesh, P(LM_WORKER_AXIS)))
+    runner = _epoch_runner_spmd(cfg, tcfg, mesh)
+
+    def run_epoch(state: TrainState):
+        params, vr, opt, step, losses = runner(
+            state.params, state.vr_state, state.opt_state, state.step,
+            tokens)
+        return TrainState(params, opt, vr, step), losses
+
+    return run_epoch, meta
+
+
+@functools.lru_cache(maxsize=None)
+def _epoch_runner_vmap(cfg: ModelConfig, tcfg: TrainConfig, W: int):
+    """One jitted runner per (cfg, tcfg, W) — repeated run_training calls
+    on the same config reuse the compiled epoch executable."""
+    per_worker = _make_per_worker(cfg, tcfg)
+    E = tcfg.vr_table_size * tcfg.local_epoch
+    accum, mb = batch_geometry(tcfg, W)
+
+    def run_epoch(state: TrainState):
+        def body(carry, s):
+            params, vr, opt = carry
+            idx = s % tcfg.vr_table_size
+            toks = synthetic.epoch_batch(
+                cfg, tcfg.seed, s, workers=W, accum=accum, microbatch=mb,
+                seq=tcfg.seq_len, table_size=tcfg.vr_table_size)
+            if W > 1:
+                params, vr, opt, loss = jax.vmap(
+                    per_worker, in_axes=(0, 0, 0, 0, None, None))(
+                    params, vr, opt, toks, None, idx)
+                loss = loss.mean()
+            else:
+                params, vr, opt, loss = per_worker(params, vr, opt,
+                                                   toks[0], None, idx)
+            return (params, vr, opt), loss
+
+        steps = state.step + jnp.arange(E, dtype=jnp.int32)
+        (params, vr, opt), losses = jax.lax.scan(
+            body, (state.params, state.vr_state, state.opt_state), steps)
+        if W > 1:
+            params = worker_average(params)
+            if tcfg.vr != "none":
+                vr = vr._replace(gbar=worker_average(vr.gbar))
+        return TrainState(params, opt, vr, state.step + E), losses
+
+    return jax.jit(run_epoch, donate_argnums=0)
+
+
+@functools.lru_cache(maxsize=None)
+def _epoch_runner_spmd(cfg: ModelConfig, tcfg: TrainConfig, mesh):
+    """One compiled executable per (cfg, tcfg, mesh): the whole epoch scan
+    inside a single jitted shard_map, worker state donated.
+    ``check_rep=False`` for the same reason as the convex runners
+    (core/spmd.py): the replication checker rejects carries that enter
+    unreplicated and leave pmean-replicated."""
+    from jax.experimental.shard_map import shard_map
+
+    per_worker = _make_per_worker(cfg, tcfg)
+    E = tcfg.vr_table_size * tcfg.local_epoch
+    mode = tcfg.vr
+    ax = LM_WORKER_AXIS
+
+    def body(params, vr, opt, step, tokens):
+        # worker-stacked leaves arrive as this worker's (1, ...) shard
+        take0 = functools.partial(tmap, lambda x: x[0])
+        p, v, o = take0(params), take0(vr), take0(opt)
+
+        def one(carry, xs):
+            s, toks = xs
+            p, v, o = carry
+            p, v, o, loss = per_worker(p, v, o, toks, None,
+                                       s % tcfg.vr_table_size)
+            return (p, v, o), loss
+
+        steps = step + jnp.arange(E, dtype=jnp.int32)
+        (p, v, o), losses = jax.lax.scan(one, (p, v, o),
+                                         (steps, tokens[0]))
+        # epoch boundary: the central average as a collective
+        pm = functools.partial(tmap, lambda x: jax.lax.pmean(x, ax))
+        p = pm(p)
+        if mode != "none":
+            v = v._replace(gbar=pm(v.gbar))
+        losses = jax.lax.pmean(losses, ax)
+        lead = functools.partial(tmap, lambda x: x[None])
+        return lead(p), lead(v), lead(o), step + E, losses
+
+    ws, rep = P(ax), P()
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(ws, ws, ws, rep, ws),
+        out_specs=(ws, ws, ws, rep, rep), check_rep=False),
+        donate_argnums=(0, 1, 2))
+
+
+def place_train_state(state: TrainState, mesh) -> TrainState:
+    """Shard every worker-stacked leaf along the worker mesh axis (one
+    worker per device) and replicate the step counter. A 1-device mesh
+    (W=1: no worker axis in the state) commits everything to that
+    device instead."""
+    if mesh.devices.size == 1:
+        return jax.device_put(state, mesh.devices.ravel()[0])
+    ws = NamedSharding(mesh, P(LM_WORKER_AXIS))
+    rep = NamedSharding(mesh, P())
+    put = lambda t: tmap(lambda x: jax.device_put(x, ws), t)
+    return TrainState(put(state.params), put(state.opt_state),
+                      put(state.vr_state), jax.device_put(state.step, rep))
 
 
 def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key, W: int

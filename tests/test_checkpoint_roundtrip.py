@@ -48,6 +48,39 @@ def test_centralvr_roundtrip_continues_trajectory(tmp_path):
     np.testing.assert_allclose(rels_joined, np.asarray(rels_full), **TOL)
 
 
+def test_lm_epoch_scan_resume_continues_trajectory(tmp_path):
+    """LM analogue of the CentralVR round-trip: save at an epoch-scan
+    boundary from ``train/loop.py``, restore with ``resume=True``, and
+    the continued per-step loss trajectory must match an uninterrupted
+    run (the data pipeline is stateless fold_in, the VR table/anchor and
+    optimizer state ride the checkpoint)."""
+    from repro.config import ModelConfig, TrainConfig
+    from repro.train import loop
+
+    cfg = ModelConfig(name="tiny-resume", family="dense", num_layers=2,
+                      d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32",
+                      param_dtype="float32")
+    tcfg = TrainConfig(seq_len=16, global_batch=4, microbatch=2,
+                       optimizer="adam", learning_rate=1e-3,
+                       vr="centralvr", vr_table_size=2, local_epoch=1)
+
+    full = loop.run_training(cfg, tcfg, epochs=4, workers=2, log_every=0)
+    path = str(tmp_path / "lm.npz")
+    first = loop.run_training(cfg, tcfg, epochs=2, workers=2,
+                              checkpoint_path=path, checkpoint_every=2,
+                              log_every=0)
+    assert checkpoint.latest_step(path) == 2 * 2   # epoch boundary
+    resumed = loop.run_training(cfg, tcfg, epochs=4, workers=2,
+                                checkpoint_path=path, resume=True,
+                                log_every=0)
+    assert len(resumed.losses) == len(full.losses) - len(first.losses)
+    np.testing.assert_allclose(first.losses + resumed.losses, full.losses,
+                               **TOL)
+    np.testing.assert_allclose(resumed.final_eval_loss,
+                               full.final_eval_loss, **TOL)
+
+
 def test_sync_state_roundtrip(tmp_path):
     """Distributed driver state (stacked per-worker tables) survives the
     flat-npz round-trip with structure and values intact."""

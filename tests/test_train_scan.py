@@ -1,0 +1,243 @@
+"""LM epoch-scan runtime pins (DESIGN.md §3 "LM epoch scan",
+``train/step.make_epoch_runner`` + ``train/loop.py``).
+
+Fast, in-process (single device, vmap backend, float32 tiny arch):
+
+  * epoch-scan trajectories == the retained per-step host-loop reference
+    (``train/host_loop.py``) within float32 tolerance, W in {1, 2} x
+    vr in {none, centralvr, svrg};
+  * the silent batch-accounting fallback is gone: indivisible
+    global_batch raises ValueError;
+  * held-out eval uses the worker-AVERAGED params, not worker 0's
+    (pinned with a W>1 run stopped mid-epoch, workers diverged).
+
+Slow, in a SUBPROCESS with 4 forced host devices (the main pytest
+process must keep the real single-device view — see conftest): the spmd
+backend must match vmap within float32 tolerance for W in {2, 4} with
+each worker's state shard resident on its own device.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# identical arithmetic, identical (stateless fold_in) data on both paths;
+# only op fusion / collective reduction order may differ
+TOL = dict(rtol=3e-5, atol=1e-6)
+
+
+def tiny_cfg():
+    from repro.config import ModelConfig
+
+    return ModelConfig(name="tiny-scan", family="dense", num_layers=2,
+                       d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+                       vocab_size=128, dtype="float32",
+                       param_dtype="float32")
+
+
+def tiny_tcfg(W, vr="centralvr", **kw):
+    from repro.config import TrainConfig
+
+    kw.setdefault("optimizer", "sgd")
+    kw.setdefault("learning_rate", 0.1)
+    return TrainConfig(seq_len=16, global_batch=2 * W, microbatch=2,
+                       vr=vr, vr_table_size=2, local_epoch=1, **kw)
+
+
+@pytest.mark.parametrize("W", [1, 2])
+@pytest.mark.parametrize("vr", ["none", "centralvr", "svrg"])
+def test_epoch_scan_matches_host_loop(W, vr):
+    from repro.train import host_loop, loop
+
+    cfg, tcfg = tiny_cfg(), tiny_tcfg(W, vr)
+    E = tcfg.vr_table_size * tcfg.local_epoch
+    ref = host_loop.run_training(cfg, tcfg, steps=2 * E, workers=W,
+                                 log_every=0)
+    scan = loop.run_training(cfg, tcfg, epochs=2, workers=W, log_every=0)
+    assert scan.steps == ref.steps == 2 * E
+    np.testing.assert_allclose(scan.losses, ref.losses, **TOL)
+    np.testing.assert_allclose(scan.final_eval_loss, ref.final_eval_loss,
+                               **TOL)
+
+
+def test_epoch_scan_rejects_partial_epochs():
+    from repro.train import loop
+
+    with pytest.raises(ValueError, match="multiple of the communication"):
+        loop.run_training(tiny_cfg(), tiny_tcfg(1), steps=3, log_every=0)
+
+
+def test_unknown_backend_rejected():
+    from repro.train import step as tstep
+
+    with pytest.raises(ValueError, match="unknown backend"):
+        tstep.make_epoch_runner(tiny_cfg(), tiny_tcfg(1), 1,
+                                backend="pmap")
+
+
+def test_indivisible_batch_raises():
+    """The seed loop silently truncated accum to 1 when global_batch did
+    not divide by W*microbatch; now it is a config error."""
+    from repro.config import TrainConfig
+    from repro.train import step as tstep
+
+    bad = TrainConfig(seq_len=16, global_batch=6, microbatch=2)
+    with pytest.raises(ValueError, match="not divisible"):
+        tstep.batch_geometry(bad, 2)        # 6 % (2*2) != 0
+    with pytest.raises(ValueError, match="not divisible"):
+        tstep.batch_geometry(TrainConfig(global_batch=5, microbatch=0), 2)
+    assert tstep.batch_geometry(TrainConfig(global_batch=8, microbatch=2),
+                                2) == (2, 2)
+
+
+def test_eval_uses_worker_average_not_worker0():
+    """Stop a W=2 run mid-epoch (1 step into an M*K=2 epoch): the worker
+    copies have diverged, and the reported eval loss must be computed at
+    the central average, not worker 0's copy."""
+    import jax
+
+    from repro.data import synthetic
+    from repro.models import model as modellib
+    from repro.train import host_loop
+
+    cfg, tcfg = tiny_cfg(), tiny_tcfg(2)
+    res = host_loop.run_training(cfg, tcfg, steps=1, workers=2, log_every=0)
+    p = res.state.params
+    leaves = jax.tree_util.tree_leaves(p)
+    spread = max(float(np.abs(np.asarray(l[0] - l[1])).max())
+                 for l in leaves)
+    assert spread > 0.0, "workers did not diverge mid-epoch"
+
+    ev = synthetic.eval_batch(cfg, tcfg.seed, batch=2, seq=tcfg.seq_len)
+
+    def eval_at(params):
+        return float(modellib.loss_fn(params, cfg, {"tokens": ev},
+                                      remat="none"))
+
+    avg = jax.tree_util.tree_map(lambda l: (l[0] + l[1]) / 2.0, p)
+    w0 = jax.tree_util.tree_map(lambda l: l[0], p)
+    np.testing.assert_allclose(res.final_eval_loss, eval_at(avg), **TOL)
+    assert abs(res.final_eval_loss - eval_at(w0)) > 1e-7
+
+
+def test_resume_past_requested_epochs_rejected(tmp_path):
+    """Resuming from a checkpoint at/past the requested epoch count must
+    raise, not run zero epochs and relabel the checkpoint with an
+    earlier step."""
+    from repro.train import loop
+
+    cfg, tcfg = tiny_cfg(), tiny_tcfg(1)
+    path = str(tmp_path / "ck.npz")
+    loop.run_training(cfg, tcfg, epochs=1, workers=1, checkpoint_path=path,
+                      log_every=0)
+    with pytest.raises(ValueError, match="nothing left"):
+        loop.run_training(cfg, tcfg, epochs=1, workers=1,
+                          checkpoint_path=path, resume=True, log_every=0)
+
+
+def test_losses_device_resident_until_fetch():
+    """The scan loop returns one (M*K,) loss array per epoch; the flat
+    trajectory must cover every step exactly once."""
+    from repro.train import loop
+
+    cfg, tcfg = tiny_cfg(), tiny_tcfg(1)
+    res = loop.run_training(cfg, tcfg, epochs=3, workers=1, log_every=0)
+    assert len(res.losses) == 3 * tcfg.vr_table_size * tcfg.local_epoch
+    assert res.epochs == 3
+    assert all(np.isfinite(res.losses))
+
+
+# ---------------------------------------------------------------------------
+# SPMD backend (subprocess with forced host devices)
+# ---------------------------------------------------------------------------
+
+SCRIPT = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, "src")
+    from repro.core import spmd
+    spmd.force_host_devices(4)      # before the first jax operation
+    import json
+    import jax
+    import numpy as np
+    from repro.config import ModelConfig, TrainConfig
+    from repro.train import loop
+
+    cfg = ModelConfig(name="tiny-scan", family="dense", num_layers=2,
+                      d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32",
+                      param_dtype="float32")
+    out = {"device_count": jax.device_count(), "runs": []}
+    for W in (2, 4):
+        for vr in ("none", "centralvr"):
+            tcfg = TrainConfig(seq_len=16, global_batch=2 * W,
+                               microbatch=2, optimizer="sgd",
+                               learning_rate=0.1, vr=vr, vr_table_size=2,
+                               local_epoch=1)
+            rv = loop.run_training(cfg, tcfg, epochs=2, workers=W,
+                                   backend="vmap", log_every=0)
+            rs = loop.run_training(cfg, tcfg, epochs=2, workers=W,
+                                   backend="spmd", log_every=0)
+            leaf = jax.tree_util.tree_leaves(rs.state.params)[0]
+            devs = sorted({str(s.device)
+                           for s in leaf.addressable_shards})
+            out["runs"].append({
+                "W": W, "vr": vr,
+                "dloss": float(np.abs(np.array(rv.losses)
+                                      - np.array(rs.losses)).max()),
+                "deval": abs(rv.final_eval_loss - rs.final_eval_loss),
+                "shard_devices": devs,
+            })
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def spmd_results():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], cwd=ROOT,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("W", [2, 4])
+@pytest.mark.parametrize("vr", ["none", "centralvr"])
+def test_spmd_backend_matches_vmap(spmd_results, W, vr):
+    row = [r for r in spmd_results["runs"]
+           if r["W"] == W and r["vr"] == vr][0]
+    assert row["dloss"] < 3e-5, row
+    assert row["deval"] < 3e-5, row
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("W", [2, 4])
+def test_spmd_worker_state_on_distinct_devices(spmd_results, W):
+    for row in [r for r in spmd_results["runs"] if r["W"] == W]:
+        assert len(row["shard_devices"]) == W, row
+
+
+def test_bench_artifact_structure():
+    """BENCH_train.json (written by benchmarks/train_throughput.py)
+    reports warm steps/sec per execution path per worker count, and the
+    epoch scan clears 3x the host loop at W=4 — the acceptance artifact."""
+    path = os.path.join(ROOT, "BENCH_train.json")
+    assert os.path.exists(path), "run: python -m benchmarks.train_throughput"
+    with open(path) as f:
+        payload = json.load(f)
+    rows = payload["rows"]
+    for p in ("host", "host-steady", "scan-vmap", "scan-spmd"):
+        for W in (1, 2, 4):
+            match = [r for r in rows
+                     if r["path"] == p and r["workers"] == W]
+            assert match, (p, W)
+            assert match[0]["steps_per_s"] > 0, match[0]
+    assert payload["scan_3x_host_at_w4"], \
+        [r["derived"] for r in rows if r["workers"] == 4]
