@@ -1,0 +1,54 @@
+"""CI regression guard over the benchmark artifacts (DESIGN.md §7).
+
+Reads ``BENCH_drivers.json`` (written by ``benchmarks/driver_throughput.py``
+— the ``--quick`` harness run regenerates it) and fails if any driver's
+warm scan-runtime speedup over the seed host loop drops below the floor:
+the device-resident scan runtime losing to the host loop it replaced is a
+performance regression, whatever absolute wall clock the runner has.
+
+    python benchmarks/check_regression.py [--path BENCH_drivers.json]
+                                          [--floor 1.0]
+
+Exit status 1 on regression — the benchmark-smoke CI job gates on it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="BENCH_drivers.json",
+                    help="driver-throughput artifact to check")
+    ap.add_argument("--floor", type=float, default=1.0,
+                    help="minimum acceptable warm scan-vs-host-loop "
+                         "speedup")
+    args = ap.parse_args(argv)
+
+    with open(args.path) as f:
+        rows = json.load(f)["rows"]
+    if not rows:
+        print(f"{args.path} has no rows", file=sys.stderr)
+        return 1
+
+    bad = []
+    for r in rows:
+        speedup = r["speedup_warm"]
+        status = "ok" if speedup >= args.floor else "REGRESSION"
+        print(f"{r['name']}: scan vs host loop {speedup:.1f}x warm "
+              f"[{status}]")
+        if speedup < args.floor:
+            bad.append(r["name"])
+    if bad:
+        print(f"speedup below {args.floor:.2f}x floor for: "
+              f"{', '.join(bad)}", file=sys.stderr)
+        return 1
+    print(f"all {len(rows)} drivers at or above the {args.floor:.2f}x "
+          "floor")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

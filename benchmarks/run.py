@@ -2,12 +2,20 @@
 report. Prints ``name,us_per_call,derived`` CSV per row.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
+    PYTHONPATH=src python benchmarks/run.py [--quick]   # same, script form
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+# script form: `python benchmarks/run.py` puts benchmarks/ (not the repo
+# root) on sys.path, so the `from benchmarks import ...` below needs the
+# root added — the CI benchmark-smoke job invokes this spelling
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
 
 
 def main(argv=None) -> None:

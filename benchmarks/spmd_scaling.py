@@ -1,11 +1,13 @@
-"""Scaling of the CentralVR-Sync driver per execution backend: the vmap
+"""Scaling of the CentralVR drivers per execution backend: the vmap
 single-device simulation vs the shard_map SPMD backend with one worker per
 (CPU-simulated) device (DESIGN.md §2).
 
 For each worker count p we measure cold (compile-inclusive) and warm wall
-clock of a fixed-round ``run_sync`` and derive warm epochs/sec.  Writes
-``BENCH_spmd.json`` at the repo root (the acceptance artifact: per-backend
-epochs/sec for p in {1, 2, 4}) plus the standard results CSV.
+clock of a fixed-round ``run_sync`` (algo "sync") AND of ``run_async``
+(algo "async" — the spmd side executes the event schedule as concurrency
+waves), deriving warm epochs/sec.  Writes ``BENCH_spmd.json`` at the repo
+root (the acceptance artifact: per-algo per-backend epochs/sec for
+p in {1, 2, 4}) plus the standard results CSV.
 
 Must start in a fresh process: it forces 4 simulated host devices through
 ``spmd.force_host_devices`` before the first jax operation, so BOTH
@@ -42,32 +44,40 @@ def run(quick: bool = False):
     key = jax.random.PRNGKey(0)
     rows = []
 
+    algos = {
+        "sync": lambda sp, eta, backend: distributed.run_sync(
+            sp, eta=eta, rounds=rounds, key=key, backend=backend),
+        # spmd side: the wave-parallel staleness construction
+        "async": lambda sp, eta, backend: distributed.run_async(
+            sp, eta=eta, rounds=rounds, key=key, backend=backend),
+    }
     for p in WORKER_COUNTS:
         cfg = ConvexConfig(problem="logistic", n=n, d=d, workers=p)
         sp = distributed.make_distributed(jax.random.PRNGKey(2), cfg)
         eta = convex.auto_eta(sp.merged(), 0.3)
-        for backend in BACKENDS:
-            cold, warm = timed_cold_warm(
-                lambda: distributed.run_sync(sp, eta=eta, rounds=rounds,
-                                             key=key, backend=backend),
-                repeat=repeat)
-            rows.append({
-                "name": f"spmd_scaling/sync-{backend}-p{p}",
-                "backend": backend,
-                "p": p,
-                "us_per_call": warm * 1e6,
-                "cold_s": cold,
-                "warm_s": warm,
-                "compile_s": max(cold - warm, 0.0),
-                "epochs_per_s": rounds / warm,
-                "derived": f"cold={cold:.3f}s,warm={warm:.3f}s,"
-                           f"epochs/s={rounds / warm:.1f}",
-            })
+        for algo, fn in algos.items():
+            for backend in BACKENDS:
+                cold, warm = timed_cold_warm(
+                    lambda: fn(sp, eta, backend), repeat=repeat)
+                rows.append({
+                    "name": f"spmd_scaling/{algo}-{backend}-p{p}",
+                    "algo": algo,
+                    "backend": backend,
+                    "p": p,
+                    "us_per_call": warm * 1e6,
+                    "cold_s": cold,
+                    "warm_s": warm,
+                    "compile_s": max(cold - warm, 0.0),
+                    "epochs_per_s": rounds / warm,
+                    "derived": f"cold={cold:.3f}s,warm={warm:.3f}s,"
+                               f"epochs/s={rounds / warm:.1f}",
+                })
 
     payload = {
         "config": {"n_per_worker": n, "d": d, "rounds": rounds,
                    "workers": list(WORKER_COUNTS),
-                   "backends": list(BACKENDS), "quick": quick,
+                   "algos": list(algos), "backends": list(BACKENDS),
+                   "quick": quick,
                    "device_count": jax.device_count(),
                    "backend_platform": jax.default_backend()},
         "rows": rows,

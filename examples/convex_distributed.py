@@ -4,9 +4,10 @@ rounds-to-tolerance linear-scaling readout.
 
     PYTHONPATH=src python examples/convex_distributed.py [--workers 8]
 
-``--backend spmd`` runs the synchronous drivers with one worker per
-simulated host device (DESIGN.md §2); the event-serial async/D-SAGA rows
-always use the vmap staleness simulator.
+``--backend spmd`` runs every driver with one worker per simulated host
+device (DESIGN.md §2) — the async rows execute their event schedule as
+concurrency waves (D-SAGA under the stale-fetch discipline the waves
+require).
 """
 import argparse
 import sys
@@ -54,15 +55,16 @@ def main():
         "CentralVR-Sync": lambda: distributed.run_sync(
             sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
         "CentralVR-Async": lambda: distributed.run_async(
-            sp, eta=eta, rounds=args.rounds, key=key)[1],
+            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
         "CentralVR-Async (4x speed spread)": lambda: distributed.run_async(
-            sp, eta=eta, rounds=args.rounds, key=key,
+            sp, eta=eta, rounds=args.rounds, key=key, backend=be,
             speeds=[1 + 3 * i / max(args.workers - 1, 1)
                     for i in range(args.workers)])[1],
         "Distributed-SVRG": lambda: distributed.run_dsvrg(
             sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
+        # spmd implies the stale-fetch discipline (DESIGN.md §2)
         "Distributed-SAGA": lambda: distributed.run_dsaga(
-            sp, eta=eta / 2, rounds=args.rounds, key=key,
+            sp, eta=eta / 2, rounds=args.rounds, key=key, backend=be,
             tau=args.n_per_worker // 2)[1],
         "EASGD": lambda: baselines.run_easgd(
             sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],

@@ -20,6 +20,14 @@ effective staleness p-1 events, the natural value for a round-robin
 server. The *delta* form of the central update (x += dx/p) is kept exactly
 as in Algorithm 3; the paper argues this is what makes fast workers unable
 to bias the average.
+
+Because every event depends only on the central state its worker fetched
+at its OWN previous event, the schedule also admits a device-parallel
+execution: ``backend="spmd"`` partitions it into concurrency waves
+(``runtime.wave_partition``) and runs each wave under ``shard_map`` with
+one worker per device, the delta pushes applied at the wave boundary in
+event order — same algebra, same trajectories to float32 tolerance
+(``core/spmd.py``, DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -74,19 +82,22 @@ def check_backend(backend: str, *, spmd_ok: bool = True, algo: str = ""):
 
     ``vmap`` is the stacked-axis single-device simulation and the default
     everywhere; ``spmd`` is the one-worker-per-device shard_map backend in
-    ``core/spmd.py``.  The event-serial drivers (CentralVR-Async, D-SAGA)
-    process one worker's update at a time, so there is no worker-parallel
-    SPMD program for them — they pass ``spmd_ok=False`` and get a clear
-    error instead of a silent fallback."""
+    ``core/spmd.py``.  Every driver has an SPMD program now — the async
+    drivers run their event schedule as concurrency waves
+    (``runtime.wave_partition``) — EXCEPT instant-fetch D-SAGA, whose
+    events form a serial dependency chain (each event reads the central
+    state as updated by the previous one): that mode passes
+    ``spmd_ok=False`` and gets a clear error instead of a silent
+    fallback."""
     if backend not in ("vmap", "spmd"):
         raise ValueError(
             f"unknown backend {backend!r}: expected 'vmap' or 'spmd'")
     if backend == "spmd" and not spmd_ok:
         raise NotImplementedError(
-            f"{algo} is event-serial (one worker updates the central state "
-            "per event), so it has no worker-parallel SPMD execution; use "
-            "backend='vmap' — the deterministic staleness simulator "
-            "(DESIGN.md §2)")
+            f"{algo} is event-serial (every event reads the central state "
+            "written by the previous event), so it has no worker-parallel "
+            "SPMD execution; use backend='vmap', or fetch='stale' for the "
+            "wave-parallel staleness construction (DESIGN.md §2)")
     return backend
 
 
@@ -296,15 +307,27 @@ def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys):
 
 
 def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              speeds=None, backend: str = "vmap"):
+              speeds=None, backend: str = "vmap", mesh=None):
     """``rounds`` epochs per worker. ``speeds``: optional per-worker relative
     speeds; faster workers fire proportionally more events (heterogeneous
     cluster simulation). Default: round-robin (staleness p-1).
 
     The speed-weighted schedule is precomputed on the host, shipped as a
     (rounds, p) int32 array, and scanned on device in a single compile.
-    Event-serial, hence vmap-only: ``backend="spmd"`` raises."""
-    check_backend(backend, spmd_ok=False, algo="CentralVR-Async")
+
+    ``backend="spmd"`` executes the SAME schedule as rounds of concurrent
+    events: each worker's epoch starts from the central state it fetched
+    at its previous event — a per-worker stale snapshot already carried by
+    the delta algebra — so all events of a concurrency wave
+    (``runtime.wave_partition``) run in parallel under ``shard_map``, one
+    worker per device of ``mesh``, and the ``x += dx/p`` delta pushes are
+    applied at the wave boundary in the schedule's event order
+    (DESIGN.md §2).  Trajectories match this event-serial path within
+    float32 tolerance (pinned by ``tests/test_spmd_backend.py``)."""
+    if check_backend(backend) == "spmd":
+        from repro.core import spmd
+        return spmd.run_async(sp, eta=eta, rounds=rounds, key=key,
+                              speeds=speeds, mesh=mesh)
     k_init, k_run = jax.random.split(key)
     st = async_init(sp, eta, k_init)
     g0 = convex.grad_norm0(sp.merged())
@@ -380,6 +403,26 @@ class DSagaState(NamedTuple):
     gbar_old: jax.Array   # (p, d) — literal mode: previous local final gbar
 
 
+def _local_saga_steps(A, b, lam, kind, x, table, gbar, eta, n_global, idx):
+    """tau local SAGA steps on one worker's shard (Alg 5 lines 5-11): VR
+    step from the scalar table, running-mean gbar update with the GLOBAL
+    1/n scaling (line 9, §5.2).  The single spelling shared by both fetch
+    disciplines and the spmd wave runner — the vmap-vs-spmd agreement
+    pins rely on these being the same arithmetic."""
+    prob = Problem(A, b, lam, kind)
+
+    def body(carry, i):
+        x, table, gbar = carry
+        s_new = convex.scalar_residual(prob, x, i)
+        v = (s_new - table[i]) * A[i] + gbar + 2.0 * lam * x
+        gbar = gbar + (s_new - table[i]) * A[i] / n_global
+        table = table.at[i].set(s_new)
+        return (x - eta * v, table, gbar), None
+
+    (x, table, gbar), _ = jax.lax.scan(body, (x, table, gbar), idx)
+    return x, table, gbar
+
+
 def dsaga_event(sp: ShardedProblem, st: DSagaState, s, eta: float, tau: int,
                 key, literal_scaling: bool = False) -> DSagaState:
     """Worker s: tau local SAGA steps from its fetched central state, then
@@ -388,24 +431,12 @@ def dsaga_event(sp: ShardedProblem, st: DSagaState, s, eta: float, tau: int,
     'locked': one worker updates the server at a time, §6.2).  ``s`` may be
     a traced index (dynamic gathers on the stacked tables), so one compiled
     event function serves all p workers."""
-    n_global = sp.p * sp.ns
     alpha = 1.0 / sp.p
     alpha_g = alpha if literal_scaling else 1.0
-    A, b = sp.A[s], sp.b[s]
-    prob = Problem(A, b, sp.lam, sp.kind)
     idx = jax.random.randint(key, (tau,), 0, sp.ns)
-
-    def body(carry, i):
-        x, table, gbar = carry
-        s_new = convex.scalar_residual(prob, x, i)
-        v = (s_new - table[i]) * A[i] + gbar + 2.0 * sp.lam * x
-        # line 9: global 1/n scaling of the running-mean update
-        gbar = gbar + (s_new - table[i]) * A[i] / n_global
-        table = table.at[i].set(s_new)
-        return (x - eta * v, table, gbar), None
-
-    (x, table, gbar), _ = jax.lax.scan(
-        body, (st.x_c, st.tables[s], st.gbar_c), idx)
+    x, table, gbar = _local_saga_steps(
+        sp.A[s], sp.b[s], sp.lam, sp.kind, st.x_c, st.tables[s], st.gbar_c,
+        eta, sp.p * sp.ns, idx)
     dx = x - st.x_old[s]
     if literal_scaling:
         dg = gbar - st.gbar_old[s]       # printed line 13
@@ -432,19 +463,75 @@ def dsaga_init(sp: ShardedProblem) -> DSagaState:
                       gbar_old=jnp.tile(gbar0, (sp.p, 1)))
 
 
-@functools.partial(jax.jit, static_argnames=("tau", "literal_scaling"),
+def dsaga_init_stale(sp: ShardedProblem) -> AsyncState:
+    """Stale-fetch D-SAGA start state: ``dsaga_init`` plus per-worker fetch
+    snapshots initialized to the central values (every worker's first event
+    starts from the true t=0 state, exactly like ``async_init``)."""
+    st = dsaga_init(sp)
+    return AsyncState(
+        x_c=st.x_c, gbar_c=st.gbar_c, tables=st.tables,
+        x_old=st.x_old, gbar_old=st.gbar_old,
+        x_fetch=jnp.tile(st.x_c, (sp.p, 1)),
+        gbar_fetch=jnp.tile(st.gbar_c, (sp.p, 1)),
+    )
+
+
+def dsaga_event_stale(sp: ShardedProblem, st: AsyncState, s, eta: float,
+                      tau: int, key, literal_scaling: bool = False
+                      ) -> AsyncState:
+    """Algorithm 5 with Algorithm 3's fetch discipline: worker s runs its
+    tau local SAGA steps from the central state it fetched at its PREVIOUS
+    event (``st.x_fetch[s]``/``st.gbar_fetch[s]``) instead of the
+    instantaneous central state ``dsaga_event`` reads.  This is the
+    event-serial reference for the spmd-async backend (DESIGN.md §2): the
+    stale snapshot removes the event-to-event serial dependency, so all
+    events of a concurrency wave commute and can run under ``shard_map``.
+    The delta algebra is unchanged — dx against the worker's previous sent
+    x, dgbar against its fetched gbar (its own table-update contribution,
+    the §5.2 semantics), server coefficients exactly as ``dsaga_event``.
+    ``s`` may be a traced index, as everywhere in this runtime."""
+    alpha = 1.0 / sp.p
+    alpha_g = alpha if literal_scaling else 1.0
+    idx = jax.random.randint(key, (tau,), 0, sp.ns)
+    x, table, gbar = _local_saga_steps(
+        sp.A[s], sp.b[s], sp.lam, sp.kind, st.x_fetch[s], st.tables[s],
+        st.gbar_fetch[s], eta, sp.p * sp.ns, idx)
+    dx = x - st.x_old[s]
+    if literal_scaling:
+        dg = gbar - st.gbar_old[s]       # printed line 13
+    else:
+        dg = gbar - st.gbar_fetch[s]     # own contribution only
+    x_c = st.x_c + alpha * dx
+    gbar_c = st.gbar_c + alpha_g * dg
+    return AsyncState(
+        x_c=x_c, gbar_c=gbar_c,
+        tables=st.tables.at[s].set(table),
+        x_old=st.x_old.at[s].set(x),
+        gbar_old=st.gbar_old.at[s].set(gbar),
+        x_fetch=st.x_fetch.at[s].set(x_c),
+        gbar_fetch=st.gbar_fetch.at[s].set(gbar_c),
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tau", "literal_scaling", "stale"),
                    donate_argnames=("st",))
-def _dsaga_scan(sp: ShardedProblem, st: DSagaState, eta, g0, schedule, keys,
-                tau: int, literal_scaling: bool):
+def _dsaga_scan(sp: ShardedProblem, st, eta, g0, schedule, keys,
+                tau: int, literal_scaling: bool, stale: bool):
+    """One scan runner for both fetch disciplines: ``stale`` selects the
+    event function (and the matching state type — DSagaState for instant,
+    AsyncState for stale) at trace time."""
     merged = sp.merged()
+    event = dsaga_event_stale if stale else dsaga_event
+    trace_key = "dsaga_event_stale" if stale else "dsaga_event"
 
     def one_round(st, xs):
         sched_row, key_row = xs
 
         def one_event(st, sk):
-            runtime.TRACES["dsaga_event"] += 1
+            runtime.TRACES[trace_key] += 1
             s, k = sk
-            return dsaga_event(sp, st, s, eta, tau, k, literal_scaling), None
+            return event(sp, st, s, eta, tau, k, literal_scaling), None
 
         st, _ = jax.lax.scan(one_event, st, (sched_row, key_row))
         rel = convex.rel_grad_norm(merged, st.x_c, g0)
@@ -455,7 +542,8 @@ def _dsaga_scan(sp: ShardedProblem, st: DSagaState, eta, g0, schedule, keys,
 
 def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
               tau: int = 100, literal_scaling: bool = False,
-              backend: str = "vmap"):
+              backend: str = "vmap", fetch: str | None = None,
+              speeds=None, mesh=None):
     """Algorithm 5. Each worker runs tau SAGA steps with its local table;
     the running mean gbar is updated with the GLOBAL 1/n scaling (§5.2);
     deltas (dx, dgbar) are pushed with server coefficient alpha.
@@ -478,15 +566,36 @@ def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     to the global table mean at every event). That is the default here;
     ``literal_scaling=True`` reproduces the printed lines for comparison.
 
+    Fetch discipline: the default ``fetch="instant"`` is the locked serial
+    model (each event reads the central state left by the previous event —
+    the seed semantics, pinned against ``host_loop.run_dsaga``);
+    ``fetch="stale"`` is Algorithm 3's discipline applied to Algorithm 5
+    (each worker starts from the central state fetched at its own previous
+    event), which removes the event-to-event serial dependency and is
+    therefore what the wave-parallel spmd backend executes.
+    ``backend="spmd"`` defaults to (and requires) ``fetch="stale"``:
+    instant fetch has no worker-parallel program and raises.  ``speeds``
+    weights the event schedule exactly as in :func:`run_async`.
+
     Like CentralVR-Async, the whole event schedule runs as one jitted scan
     with a traced worker index — one executable regardless of p.
-    Event-serial, hence vmap-only: ``backend="spmd"`` raises.
     """
-    check_backend(backend, spmd_ok=False, algo="D-SAGA")
-    st = dsaga_init(sp)
+    if fetch is None:
+        fetch = "stale" if backend == "spmd" else "instant"
+    if fetch not in ("instant", "stale"):
+        raise ValueError(
+            f"unknown fetch {fetch!r}: expected 'instant' or 'stale'")
+    check_backend(backend, spmd_ok=(fetch == "stale"),
+                  algo="D-SAGA with fetch='instant'")
+    if backend == "spmd":
+        from repro.core import spmd
+        return spmd.run_dsaga(sp, eta=eta, rounds=rounds, key=key, tau=tau,
+                              literal_scaling=literal_scaling, speeds=speeds,
+                              mesh=mesh)
     g0 = convex.grad_norm0(sp.merged())
-    schedule = runtime.event_schedule(sp.p, rounds)
+    schedule = runtime.event_schedule(sp.p, rounds, speeds)
     keys = jax.random.split(key, schedule.size)
     sched, keys = runtime.per_round(schedule, keys, sp.p)
+    st = dsaga_init_stale(sp) if fetch == "stale" else dsaga_init(sp)
     return _dsaga_scan(sp, st, eta, g0, jnp.asarray(sched), keys, tau,
-                       literal_scaling)
+                       literal_scaling, stale=(fetch == "stale"))

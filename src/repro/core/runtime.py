@@ -90,6 +90,76 @@ def _event_schedule_loop(p: int, rounds: int, speeds) -> np.ndarray:
     return schedule
 
 
+def wave_partition(schedule: np.ndarray, p: int):
+    """Partition a flat event schedule into *concurrency waves* for the
+    spmd-async backend (DESIGN.md §2): within each metric round (p
+    consecutive events) the events are grouped greedily into maximal waves
+    that contain each worker at most once.  A worker's local epoch depends
+    only on the central state it fetched at its OWN previous event, never
+    on the other events of its wave, so all events of a wave can execute
+    concurrently under ``shard_map``; the delta pushes are then applied at
+    the wave boundary in event order (the rank below).  Round-robin
+    schedules produce exactly one wave per round; heterogeneous-speed
+    schedules split a round wherever a worker fires twice.
+
+    Returns ``(active, rank, slot)``:
+
+      * ``active``: ``(rounds, W, p)`` bool — worker s fires in wave w of
+        round r (W = max waves per round; padded waves are all-inactive);
+      * ``rank``: ``(rounds, W, p)`` int32 — the event's position within
+        its wave (the prefix order of the stale-fetch construction);
+        ``p`` sentinel where inactive;
+      * ``slot``: ``(rounds * p,)`` int64 — flat wave index ``r * W + w``
+        of event t, so per-event host-precomputed RNG draws can be
+        scattered to their (round, wave, worker) slot.
+
+    Concatenating the waves in order — each wave's workers sorted by rank
+    — reproduces ``schedule`` byte-identically (``wave_flatten``, pinned
+    by ``tests/test_driver_runtime.py``)."""
+    schedule = np.asarray(schedule, dtype=np.int32)
+    if schedule.size % p:
+        raise ValueError(
+            f"schedule size {schedule.size} is not a multiple of p={p}")
+    rounds = schedule.size // p
+    sched = schedule.reshape(rounds, p)
+    per_round_waves = []
+    for r in range(rounds):
+        waves = [[]]
+        seen: set = set()
+        for s in sched[r].tolist():
+            if s in seen:
+                waves.append([])
+                seen = set()
+            seen.add(s)
+            waves[-1].append(s)
+        per_round_waves.append(waves)
+    width = max(len(w) for w in per_round_waves)
+    active = np.zeros((rounds, width, p), dtype=bool)
+    rank = np.full((rounds, width, p), p, dtype=np.int32)
+    slot = np.empty(schedule.size, dtype=np.int64)
+    t = 0
+    for r, waves in enumerate(per_round_waves):
+        for w, wave in enumerate(waves):
+            for k, s in enumerate(wave):
+                active[r, w, s] = True
+                rank[r, w, s] = k
+                slot[t] = r * width + w
+                t += 1
+    return active, rank, slot
+
+
+def wave_flatten(active: np.ndarray, rank: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`wave_partition`: the flat event schedule implied
+    by the wave arrays — the byte-identical-order pin."""
+    rounds, width, _ = active.shape
+    out = []
+    for r in range(rounds):
+        for w in range(width):
+            workers = np.nonzero(active[r, w])[0]
+            out.extend(workers[np.argsort(rank[r, w, workers])].tolist())
+    return np.asarray(out, dtype=np.int32)
+
+
 def per_round(schedule: np.ndarray, keys, p: int):
     """Reshape a flat event schedule + per-event keys into per-round rows
     ``(rounds, p, ...)`` so an outer scan over rounds (emitting the metric)

@@ -30,15 +30,30 @@ enter unreplicated and leave pmean-replicated, which is the shape of
 every round loop here; correctness is pinned by the vmap-agreement tests
 instead.)
 
+The asynchronous drivers (CentralVR-Async, D-SAGA) run their deterministic
+event schedule as ROUNDS OF CONCURRENT EVENTS: ``runtime.wave_partition``
+groups the flat schedule into waves containing each worker at most once
+(byte-identical event order), every worker of a wave runs its local epoch
+from the central state it fetched at its previous event — a stale snapshot
+carried per worker on its own device — and the Algorithm-3 delta pushes
+``x += dx/p`` are applied at the wave boundary in the schedule's event
+order (each worker's fresh fetch is the central state immediately after
+its own event, reconstructed as a rank-prefix over the wave's
+all-gathered deltas).  Same delta algebra, so the trajectories match the
+event-serial scan within float32 tolerance.  D-SAGA requires the
+``fetch="stale"`` discipline for this (see ``distributed.run_dsaga``);
+instant-fetch D-SAGA remains event-serial and refuses ``backend="spmd"``.
+
 Backend contract (pinned by ``tests/test_spmd_backend.py``):
 
-  * trajectories agree with the vmap backend within float32 tolerance;
+  * trajectories agree with the event-equivalent vmap driver within
+    float32 tolerance — including the async drivers, round-robin and
+    heterogeneous-speed schedules alike;
   * worker state is genuinely placed: each shard of the ``(p, ns)`` tables
     maps to a distinct device;
-  * the event-serial drivers (CentralVR-Async, D-SAGA) have no
-    worker-parallel program — one worker updates the central state at a
-    time — and their ``backend="spmd"`` raises ``NotImplementedError``
-    from ``distributed.py`` rather than silently falling back.
+  * instant-fetch D-SAGA (a serial dependency chain between events) raises
+    ``NotImplementedError`` from ``distributed.py`` rather than silently
+    falling back.
 """
 from __future__ import annotations
 
@@ -53,7 +68,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import convex
+from repro.core import convex, runtime
 from repro.core.convex import Problem
 
 WORKER_AXIS = "workers"
@@ -432,6 +447,244 @@ def run_ps_svrg(sp, *, eta: float, rounds: int, key: jax.Array,
         mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
     (idx,), () = _put(mesh, (idx,), (), worker_dim=2)
     return _ps_svrg_runner(mesh, sp.kind)(A, b, lam, eta, g0, idx)
+
+
+# ---------------------------------------------------------------------------
+# Async drivers (Algorithms 3 & 5) as concurrency waves under shard_map
+# ---------------------------------------------------------------------------
+
+def _scatter_events(draws, schedule, slot, shape):
+    """Arrange per-event host-precomputed draws ``(total, ...)`` — computed
+    in flat schedule order with EXACTLY the event-serial drivers' key
+    splits — into the ``(rounds, W, p, ...)`` wave layout of
+    ``runtime.wave_partition``.  Inactive (padding) slots keep a zeros
+    filler: index 0 is valid everywhere and the runner masks those
+    workers' results out."""
+    rounds, width, p = shape
+    draws = np.asarray(draws)
+    out = np.zeros((rounds * width, p) + draws.shape[1:], dtype=draws.dtype)
+    out[slot, schedule] = draws
+    return out.reshape((rounds, width, p) + draws.shape[1:])
+
+
+def _wave_push(x_c, gbar_c, dxs, dgs, rk, my_rank, alpha, alpha_g):
+    """Apply a wave's delta pushes to the central state and reconstruct
+    this worker's fresh fetch.  ``dxs``/``dgs`` are the all-gathered
+    (p, d) per-worker deltas (zero where inactive); the serial scan adds
+    them one event at a time, so worker w's fetch — the central state
+    immediately after ITS event — is the rank-prefix sum ``rk <= my_rank``
+    over the wave (inactive workers carry the rank sentinel p and a zero
+    delta, so they never contribute).  Returns (x_c', gbar_c', x_f, g_f)."""
+    pre = (rk <= my_rank)[:, None]
+    x_f = x_c + alpha * jnp.where(pre, dxs, 0.0).sum(0)
+    g_f = gbar_c + alpha_g * jnp.where(pre, dgs, 0.0).sum(0)
+    x_c = x_c + alpha * dxs.sum(0)
+    gbar_c = gbar_c + alpha_g * dgs.sum(0)
+    return x_c, gbar_c, x_f, g_f
+
+
+@functools.lru_cache(maxsize=None)
+def _async_runner(mesh: Mesh, kind: str):
+    """CentralVR-Async (Algorithm 3) with one worker per device: the whole
+    wave schedule in one jitted shard_map.  Each worker's stale snapshot
+    (x_fetch, gbar_fetch), previous contribution (x_old, gbar_old), and
+    scalar table live on its own device; the central (x_c, gbar_c) are
+    replicated and advanced at wave boundaries."""
+    from repro.core.distributed import _local_centralvr_epoch, _local_sgd_epoch
+
+    p = int(mesh.devices.size)
+    alpha = 1.0 / p
+
+    def body(A, b, lam, eta, g0, perm0, active, rank, perms):
+        A, b, perm0 = A[0], b[0], perm0[0]    # this worker's shard
+        local = Problem(A, b, lam, kind)
+        w_idx = jax.lax.axis_index(WORKER_AXIS)
+
+        # --- init == async_init: one SGD epoch per worker, average, and
+        # every worker's previous contribution / fetch set to that iterate
+        x0 = jnp.zeros((A.shape[1],), dtype=A.dtype)
+        x_w, table, acc = _local_sgd_epoch(A, b, lam, kind, x0, eta, perm0)
+        x_c = jax.lax.pmean(x_w, WORKER_AXIS)
+        gbar_c = jax.lax.pmean(acc, WORKER_AXIS)
+        carry0 = (x_c, gbar_c, table, x_c, gbar_c, x_c, gbar_c)
+
+        def one_round(carry, xs):
+            act_r, rank_r, perm_r = xs
+
+            def one_wave(carry, wv):
+                (x_c, gbar_c, table, x_old, gbar_old,
+                 x_fetch, gbar_fetch) = carry
+                act, rk, perm = wv
+                # every worker traces the epoch; inactive results are
+                # masked (round-robin schedules have no inactive slots)
+                x_new, table_new, gtilde = _local_centralvr_epoch(
+                    A, b, lam, kind, x_fetch, table, gbar_fetch, eta,
+                    perm[0])
+                on = act[w_idx]
+                dx = jnp.where(on, x_new - x_old, 0.0)
+                dg = jnp.where(on, gtilde - gbar_old, 0.0)
+                dxs = jax.lax.all_gather(dx, WORKER_AXIS)
+                dgs = jax.lax.all_gather(dg, WORKER_AXIS)
+                x_c, gbar_c, x_f, g_f = _wave_push(
+                    x_c, gbar_c, dxs, dgs, rk, rk[w_idx], alpha, alpha)
+                table = jnp.where(on, table_new, table)
+                x_old = jnp.where(on, x_new, x_old)
+                gbar_old = jnp.where(on, gtilde, gbar_old)
+                x_fetch = jnp.where(on, x_f, x_fetch)
+                gbar_fetch = jnp.where(on, g_f, gbar_fetch)
+                return (x_c, gbar_c, table, x_old, gbar_old,
+                        x_fetch, gbar_fetch), None
+
+            carry, _ = jax.lax.scan(one_wave, carry, (act_r, rank_r, perm_r))
+            rel = _rel_grad_norm(local, carry[0], g0)
+            return carry, rel
+
+        carry, rels = jax.lax.scan(one_round, carry0, (active, rank, perms))
+        x_c, gbar_c, table, x_old, gbar_old, x_fetch, gbar_fetch = carry
+        return (x_c, gbar_c, table[None], x_old[None], gbar_old[None],
+                x_fetch[None], gbar_fetch[None], rels)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P(), P(), P(),
+                  P(WORKER_AXIS), P(), P(), P(None, None, WORKER_AXIS)),
+        out_specs=(P(), P(), P(WORKER_AXIS), P(WORKER_AXIS), P(WORKER_AXIS),
+                   P(WORKER_AXIS), P(WORKER_AXIS), P()), check_rep=False))
+
+
+def _wave_inputs(mesh, sp, schedule, draws):
+    """Common wave-layout plumbing: partition the schedule, scatter the
+    per-event draws into (rounds, W, p, ...), and place everything —
+    active/rank replicated, draws sharded along the worker axis."""
+    active, rank, slot = runtime.wave_partition(schedule, sp.p)
+    waved = _scatter_events(draws, schedule, slot, active.shape)
+    (), (active, rank) = _put(mesh, (), (jnp.asarray(active),
+                                         jnp.asarray(rank)))
+    (waved,), () = _put(mesh, (waved,), (), worker_dim=2)
+    return active, rank, waved
+
+
+def run_async(sp, *, eta: float, rounds: int, key: jax.Array, speeds=None,
+              mesh: Optional[Mesh] = None):
+    """Algorithm 3 as concurrency waves (DESIGN.md §2, spmd-async mode).
+    Identical schedule, identical RNG draws, and identical delta algebra
+    as ``distributed.run_async`` — the event-serial reference it is pinned
+    against."""
+    from repro.core.distributed import AsyncState
+
+    mesh = _check_mesh(mesh, sp.p)
+    k_init, k_run = jax.random.split(key)
+    g0 = convex.grad_norm0(sp.merged())
+    # init draws: exactly sync_init's splits (async_init delegates to it)
+    perm0 = jax.vmap(lambda kk: jax.random.permutation(kk, sp.ns))(
+        jax.random.split(k_init, sp.p))
+    schedule = runtime.event_schedule(sp.p, rounds, speeds)
+    # per-event draws: exactly async_event's permutation(keys[t], ns)
+    perms = jax.vmap(lambda k: jax.random.permutation(k, sp.ns))(
+        jax.random.split(k_run, schedule.size))
+    (A, b, perm0), (lam, eta, g0) = _put(
+        mesh, (sp.A, sp.b, perm0), (sp.lam, jnp.asarray(eta), g0))
+    active, rank, perms = _wave_inputs(mesh, sp, schedule, perms)
+    (x_c, gbar_c, tables, x_old, gbar_old, x_fetch, gbar_fetch,
+     rels) = _async_runner(mesh, sp.kind)(
+        A, b, lam, eta, g0, perm0, active, rank, perms)
+    return AsyncState(x_c=x_c, gbar_c=gbar_c, tables=tables, x_old=x_old,
+                      gbar_old=gbar_old, x_fetch=x_fetch,
+                      gbar_fetch=gbar_fetch), rels
+
+
+@functools.lru_cache(maxsize=None)
+def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool):
+    """Stale-fetch D-SAGA (Algorithm 5 with Algorithm 3's fetch
+    discipline) as concurrency waves — the spmd execution of
+    ``distributed.dsaga_event_stale``."""
+    from repro.core.distributed import _local_saga_steps
+
+    p = int(mesh.devices.size)
+    alpha = 1.0 / p
+    alpha_g = alpha if literal_scaling else 1.0
+
+    def body(A, b, lam, eta, g0, active, rank, idx):
+        A, b = A[0], b[0]
+        local = Problem(A, b, lam, kind)
+        n_global = p * A.shape[0]
+        w_idx = jax.lax.axis_index(WORKER_AXIS)
+
+        # --- init == dsaga_init: tables at x0, central gbar = table mean
+        x0 = jnp.zeros((A.shape[1],), dtype=A.dtype)
+        table = convex.scalar_residual_all(local, x0)
+        gbar_c = jax.lax.pmean(
+            convex.data_grad_from_scalars(local, table), WORKER_AXIS)
+        carry0 = (x0, gbar_c, table, x0, gbar_c, x0, gbar_c)
+
+        def one_round(carry, xs):
+            act_r, rank_r, idx_r = xs
+
+            def one_wave(carry, wv):
+                (x_c, gbar_c, table, x_old, gbar_old,
+                 x_fetch, gbar_fetch) = carry
+                act, rk, idx_w = wv
+                x_new, table_new, gb = _local_saga_steps(
+                    A, b, lam, kind, x_fetch, table, gbar_fetch, eta,
+                    n_global, idx_w[0])
+                on = act[w_idx]
+                dx = jnp.where(on, x_new - x_old, 0.0)
+                if literal_scaling:
+                    dg = jnp.where(on, gb - gbar_old, 0.0)
+                else:
+                    dg = jnp.where(on, gb - gbar_fetch, 0.0)
+                dxs = jax.lax.all_gather(dx, WORKER_AXIS)
+                dgs = jax.lax.all_gather(dg, WORKER_AXIS)
+                x_c, gbar_c, x_f, g_f = _wave_push(
+                    x_c, gbar_c, dxs, dgs, rk, rk[w_idx], alpha, alpha_g)
+                table = jnp.where(on, table_new, table)
+                x_old = jnp.where(on, x_new, x_old)
+                gbar_old = jnp.where(on, gb, gbar_old)
+                x_fetch = jnp.where(on, x_f, x_fetch)
+                gbar_fetch = jnp.where(on, g_f, gbar_fetch)
+                return (x_c, gbar_c, table, x_old, gbar_old,
+                        x_fetch, gbar_fetch), None
+
+            carry, _ = jax.lax.scan(one_wave, carry, (act_r, rank_r, idx_r))
+            rel = _rel_grad_norm(local, carry[0], g0)
+            return carry, rel
+
+        carry, rels = jax.lax.scan(one_round, carry0, (active, rank, idx))
+        x_c, gbar_c, table, x_old, gbar_old, x_fetch, gbar_fetch = carry
+        return (x_c, gbar_c, table[None], x_old[None], gbar_old[None],
+                x_fetch[None], gbar_fetch[None], rels)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P(), P(), P(),
+                  P(), P(), P(None, None, WORKER_AXIS)),
+        out_specs=(P(), P(), P(WORKER_AXIS), P(WORKER_AXIS), P(WORKER_AXIS),
+                   P(WORKER_AXIS), P(WORKER_AXIS), P()), check_rep=False))
+
+
+def run_dsaga(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 100,
+              literal_scaling: bool = False, speeds=None,
+              mesh: Optional[Mesh] = None):
+    """Stale-fetch Algorithm 5 as concurrency waves (DESIGN.md §2).
+    Pinned against ``distributed.run_dsaga(fetch="stale")``, the
+    event-serial scan with the same fetch discipline, schedule, and RNG."""
+    from repro.core.distributed import AsyncState
+
+    mesh = _check_mesh(mesh, sp.p)
+    g0 = convex.grad_norm0(sp.merged())
+    schedule = runtime.event_schedule(sp.p, rounds, speeds)
+    # per-event draws: exactly dsaga_event's randint(keys[t], (tau,), 0, ns)
+    idx = jax.vmap(lambda k: jax.random.randint(k, (tau,), 0, sp.ns))(
+        jax.random.split(key, schedule.size))
+    (A, b), (lam, eta, g0) = _put(
+        mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
+    active, rank, idx = _wave_inputs(mesh, sp, schedule, idx)
+    (x_c, gbar_c, tables, x_old, gbar_old, x_fetch, gbar_fetch,
+     rels) = _dsaga_runner(mesh, sp.kind, bool(literal_scaling))(
+        A, b, lam, eta, g0, active, rank, idx)
+    return AsyncState(x_c=x_c, gbar_c=gbar_c, tables=tables, x_old=x_old,
+                      gbar_old=gbar_old, x_fetch=x_fetch,
+                      gbar_fetch=gbar_fetch), rels
 
 
 # ---------------------------------------------------------------------------

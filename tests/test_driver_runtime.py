@@ -165,6 +165,76 @@ def test_event_schedule_matches_seed_loop():
                                                               speeds)))
 
 
+def test_wave_partition_byte_identical_order():
+    """The spmd-async concurrency waves must be a pure REGROUPING of the
+    event schedule: flattening the waves (workers of each wave in rank
+    order) reproduces the schedule byte-identically, every wave contains
+    each worker at most once, and waves never cross a metric-round
+    boundary."""
+    cases = [(3, 5, [1.0, 2.0, 3.0]), (4, 6, (1.0, 1.0, 2.0, 4.0)),
+             (2, 4, None), (5, 3, None), (1, 4, None),
+             (5, 7, [0.3, 1.7, 2.2, 0.9, 5.0])]
+    for p, rounds, speeds in cases:
+        sched = runtime.event_schedule(p, rounds, speeds)
+        active, rank, slot = runtime.wave_partition(sched, p)
+        assert active.shape == rank.shape
+        assert active.shape[0] == rounds and active.shape[2] == p
+        np.testing.assert_array_equal(runtime.wave_flatten(active, rank),
+                                      sched, err_msg=str((p, rounds,
+                                                          speeds)))
+        # each worker at most once per wave; ranks are 0..k-1 per wave
+        for r in range(rounds):
+            for w in range(active.shape[1]):
+                ranks = np.sort(rank[r, w][active[r, w]])
+                np.testing.assert_array_equal(ranks, np.arange(ranks.size))
+        assert np.all(rank[~active] == p)
+        # events stay within their round: round r's events fill exactly
+        # its p slots
+        assert active.reshape(rounds, -1).sum(1).tolist() == [p] * rounds
+        # slot maps each event into a monotonically nondecreasing wave
+        assert np.all(np.diff(slot) >= 0)
+
+
+def test_wave_partition_round_robin_is_one_wave():
+    """Round-robin (the default schedule) is fully parallel: exactly one
+    wave per round, everyone active."""
+    sched = runtime.event_schedule(4, 5)
+    active, rank, _ = runtime.wave_partition(sched, 4)
+    assert active.shape == (5, 1, 4)
+    assert active.all()
+    np.testing.assert_array_equal(rank[:, 0], np.tile(np.arange(4), (5, 1)))
+
+
+def test_dsaga_stale_fetch_p1_equals_instant():
+    """With one worker nothing happens between a worker's events, so the
+    state fetched at the previous event IS the instantaneous central
+    state: fetch="stale" must be bit-identical to the default."""
+    sp = _sharded("logistic", p=1, n=32, d=6, seed=13)
+    key = jax.random.PRNGKey(14)
+    eta = _eta(sp) / 2
+    st_i, rels_i = distributed.run_dsaga(sp, eta=eta, rounds=3, key=key,
+                                         tau=16)
+    st_s, rels_s = distributed.run_dsaga(sp, eta=eta, rounds=3, key=key,
+                                         tau=16, fetch="stale")
+    np.testing.assert_array_equal(np.asarray(rels_i), np.asarray(rels_s))
+    np.testing.assert_array_equal(np.asarray(st_i.x_c), np.asarray(st_s.x_c))
+
+
+@pytest.mark.parametrize("kind", ["logistic", "ridge"])
+def test_dsaga_stale_fetch_converges(kind):
+    """The stale-fetch discipline (Algorithm 3's, applied to Algorithm 5 so
+    the spmd waves commute) is a different but convergent trajectory: it
+    must still drive the relative grad norm down on the toy problems."""
+    sp = _sharded(kind, p=4)
+    key = jax.random.PRNGKey(15)
+    eta = _eta(sp) / 2
+    _, rels = distributed.run_dsaga(sp, eta=eta, rounds=8, key=key, tau=32,
+                                    fetch="stale")
+    rels = np.asarray(rels)
+    assert np.isfinite(rels).all()
+    assert rels[-1] < 0.5 * rels[0], rels
+
+
 def test_event_schedule_speed_weighted():
     """Faster workers fire proportionally more events; every worker's
     event count is within one of its speed share."""

@@ -2,11 +2,14 @@
 
 The heavy comparisons run in a SUBPROCESS with 8 forced host devices (the
 main pytest process must keep the real single-device view — see conftest):
-spmd trajectories must match the vmap backend within float32 tolerance for
-p ∈ {2, 4} on both toy problems, and each worker's table shard must be
-resident on its own device.  Cheap contract checks (backend validation,
-the event-serial drivers refusing spmd, the shared host-device helper) run
-in-process.
+spmd trajectories must match the event-equivalent vmap driver within
+float32 tolerance for p ∈ {2, 4} on both toy problems — the synchronous
+drivers AND the async drivers (CentralVR-Async against the event-serial
+staleness scan, D-SAGA against its ``fetch="stale"`` event-serial
+reference), round-robin and heterogeneous-speed schedules alike — and
+each worker's table shard must be resident on its own device.  Cheap
+contract checks (backend validation, instant-fetch D-SAGA refusing spmd,
+the shared host-device helper) run in-process.
 """
 import json
 import os
@@ -75,6 +78,41 @@ SCRIPT = textwrap.dedent("""
                     **kw)
         out["baselines"][name] = {"drel": diff(rv, rs), "dx": diff(xv, xs)}
 
+    # async drivers as concurrency waves: spmd vs the event-serial vmap
+    # reference (same schedule, same RNG, same delta algebra), round-robin
+    # for p in {2, 4} x {logistic, ridge} plus heterogeneous-speed
+    # schedules (speeds=[1,2,3] at p=3, speeds=[1,1,2,4] at p=4)
+    out["async"] = []
+    for p, speeds, kinds in ((2, None, ("logistic", "ridge")),
+                             (4, None, ("logistic", "ridge")),
+                             (3, (1.0, 2.0, 3.0), ("logistic",)),
+                             (4, (1.0, 1.0, 2.0, 4.0), ("ridge",))):
+        for kind in kinds:
+            cfg = ConvexConfig(problem=kind, n=48, d=8, workers=p)
+            sp = distributed.make_distributed(jax.random.PRNGKey(0), cfg)
+            eta = convex.auto_eta(sp.merged(), 0.3)
+            st_v, rv = distributed.run_async(sp, eta=eta, rounds=4, key=key,
+                                             speeds=speeds)
+            st_s, rs = distributed.run_async(sp, eta=eta, rounds=4, key=key,
+                                             speeds=speeds, backend="spmd")
+            dv, rdv = distributed.run_dsaga(sp, eta=eta / 2, rounds=4,
+                                            key=key, tau=24, fetch="stale",
+                                            speeds=speeds)
+            ds, rds = distributed.run_dsaga(sp, eta=eta / 2, rounds=4,
+                                            key=key, tau=24, speeds=speeds,
+                                            backend="spmd")
+            out["async"].append({
+                "p": p, "kind": kind, "heterogeneous": speeds is not None,
+                "async_drel": diff(rv, rs),
+                "async_dx": diff(st_v.x_c, st_s.x_c),
+                "async_shard_devices": sorted(
+                    {str(s.device) for s in st_s.tables.addressable_shards}),
+                "dsaga_drel": diff(rdv, rds),
+                "dsaga_dx": diff(dv.x_c, ds.x_c),
+                "dsaga_shard_devices": sorted(
+                    {str(s.device) for s in ds.tables.addressable_shards}),
+            })
+
     # Algorithm 1: spmd == execute on the mesh's first device
     prob = convex.make_logistic_data(jax.random.PRNGKey(1), 64, 8)
     eta1 = convex.auto_eta(prob, 0.3)
@@ -133,6 +171,43 @@ def test_centralvr_spmd_is_exact(results):
     assert results["centralvr_drel"] == 0.0, results["centralvr_drel"]
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("p,kind", [(2, "logistic"), (2, "ridge"),
+                                    (4, "logistic"), (4, "ridge")])
+def test_async_spmd_matches_event_serial(results, p, kind):
+    """CentralVR-Async and stale-fetch D-SAGA under the wave-parallel spmd
+    backend vs their event-serial vmap references, round-robin."""
+    row = [r for r in results["async"]
+           if r["p"] == p and r["kind"] == kind
+           and not r["heterogeneous"]][0]
+    assert row["async_drel"] < TOL, row
+    assert row["async_dx"] < TOL, row
+    assert row["dsaga_drel"] < TOL, row
+    assert row["dsaga_dx"] < TOL, row
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("p", [3, 4])
+def test_async_spmd_matches_heterogeneous_schedule(results, p):
+    """Heterogeneous speeds split rounds into several waves (a worker
+    firing twice in a round forces a wave boundary); trajectories must
+    still match the event-serial schedule."""
+    row = [r for r in results["async"]
+           if r["p"] == p and r["heterogeneous"]][0]
+    assert row["async_drel"] < TOL, row
+    assert row["async_dx"] < TOL, row
+    assert row["dsaga_drel"] < TOL, row
+    assert row["dsaga_dx"] < TOL, row
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("p", [2, 3, 4])
+def test_async_worker_state_on_distinct_devices(results, p):
+    for row in [r for r in results["async"] if r["p"] == p]:
+        assert len(row["async_shard_devices"]) == p, row
+        assert len(row["dsaga_shard_devices"]) == p, row
+
+
 # ---------------------------------------------------------------------------
 # In-process contract checks (no forced devices needed)
 # ---------------------------------------------------------------------------
@@ -147,7 +222,10 @@ def _sharded(p=2):
     return distributed.make_distributed(jax.random.PRNGKey(0), cfg)
 
 
-def test_event_serial_drivers_refuse_spmd():
+def test_instant_fetch_dsaga_refuses_spmd():
+    """Instant-fetch D-SAGA is a serial dependency chain between events —
+    no worker-parallel program exists, so asking for one must error rather
+    than silently running the stale-fetch construction."""
     import jax
 
     from repro.core import distributed
@@ -155,10 +233,27 @@ def test_event_serial_drivers_refuse_spmd():
     sp = _sharded()
     key = jax.random.PRNGKey(0)
     with pytest.raises(NotImplementedError, match="event-serial"):
-        distributed.run_async(sp, eta=0.1, rounds=1, key=key,
-                              backend="spmd")
-    with pytest.raises(NotImplementedError, match="event-serial"):
         distributed.run_dsaga(sp, eta=0.1, rounds=1, key=key,
+                              backend="spmd", fetch="instant")
+    with pytest.raises(ValueError, match="unknown fetch"):
+        distributed.run_dsaga(sp, eta=0.1, rounds=1, key=key,
+                              fetch="bogus")
+
+
+def test_async_spmd_needs_devices():
+    """run_async accepts backend="spmd" now; on a single-device process it
+    must fail with the actionable device-count error, not the old
+    event-serial NotImplementedError."""
+    import jax
+
+    from repro.core import distributed
+
+    jax.device_count()              # initialize the single-device backend
+    sp = _sharded(p=2)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(RuntimeError,
+                       match="xla_force_host_platform_device_count"):
+        distributed.run_async(sp, eta=0.1, rounds=1, key=key,
                               backend="spmd")
 
 
@@ -201,16 +296,19 @@ def test_force_host_devices_after_init():
 
 def test_bench_artifact_structure():
     """BENCH_spmd.json (written by benchmarks/spmd_scaling.py) reports warm
-    epochs/sec per backend per worker count — the scaling artifact the
-    acceptance criteria name."""
+    epochs/sec per algorithm per backend per worker count — including the
+    async rows the acceptance criteria name (CentralVR-Async on both
+    backends, the spmd side running the wave construction)."""
     path = os.path.join(ROOT, "BENCH_spmd.json")
     assert os.path.exists(path), "run: python -m benchmarks.spmd_scaling"
     with open(path) as f:
         payload = json.load(f)
     rows = payload["rows"]
-    for backend in ("vmap", "spmd"):
-        for p in (1, 2, 4):
-            match = [r for r in rows
-                     if r["backend"] == backend and r["p"] == p]
-            assert match, (backend, p)
-            assert match[0]["epochs_per_s"] > 0, match[0]
+    for algo in ("sync", "async"):
+        for backend in ("vmap", "spmd"):
+            for p in (1, 2, 4):
+                match = [r for r in rows
+                         if r.get("algo") == algo
+                         and r["backend"] == backend and r["p"] == p]
+                assert match, (algo, backend, p)
+                assert match[0]["epochs_per_s"] > 0, match[0]
