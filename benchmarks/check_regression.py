@@ -1,12 +1,21 @@
 """CI regression guard over the benchmark artifacts (DESIGN.md §7).
 
-Reads ``BENCH_drivers.json`` (written by ``benchmarks/driver_throughput.py``
-— the ``--quick`` harness run regenerates it) and fails if any driver's
-warm scan-runtime speedup over the seed host loop drops below the floor:
-the device-resident scan runtime losing to the host loop it replaced is a
-performance regression, whatever absolute wall clock the runner has.
+Gates TWO artifacts (the ``--quick`` harness run regenerates both):
+
+  * ``BENCH_drivers.json`` (``benchmarks/driver_throughput.py``) — every
+    driver's warm scan-runtime speedup over the seed host loop must stay
+    at or above the floor;
+  * ``BENCH_train.json`` (``benchmarks/train_throughput.py``) — every
+    epoch-scan path (``scan-vmap``, ``scan-spmd``) must stay at or above
+    the floor against the seed per-step host path (``speedup_vs_host``).
+
+The device-resident runtimes losing to the host loops they replaced is a
+performance regression whatever absolute wall clock the runner has.  A
+missing or row-less artifact is itself a failure — a gate that silently
+passes because the bench never ran guards nothing.
 
     python benchmarks/check_regression.py [--path BENCH_drivers.json]
+                                          [--train-path BENCH_train.json]
                                           [--floor 1.0]
 
 Exit status 1 on regression — the benchmark-smoke CI job gates on it.
@@ -18,36 +27,80 @@ import json
 import sys
 
 
+def _load_rows(path: str):
+    """Rows of one artifact; missing/unreadable/empty is a hard failure."""
+    try:
+        with open(path) as f:
+            rows = json.load(f)["rows"]
+    except (OSError, KeyError, TypeError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable bench artifact ({e}); run "
+              "`python benchmarks/run.py --quick` first", file=sys.stderr)
+        return None
+    if not rows:
+        print(f"{path} has no rows", file=sys.stderr)
+        return None
+    return rows
+
+
+def _gate(rows, speedup_key: str, floor: float, what: str):
+    """Names of rows whose speedup is below the floor (prints each row)."""
+    bad = []
+    for r in rows:
+        speedup = r[speedup_key]
+        status = "ok" if speedup >= floor else "REGRESSION"
+        print(f"{r['name']}: {what} {speedup:.1f}x warm [{status}]")
+        if speedup < floor:
+            bad.append(r["name"])
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", default="BENCH_drivers.json",
                     help="driver-throughput artifact to check")
+    ap.add_argument("--train-path", default="BENCH_train.json",
+                    help="train-throughput artifact to check")
     ap.add_argument("--floor", type=float, default=1.0,
-                    help="minimum acceptable warm scan-vs-host-loop "
-                         "speedup")
+                    help="minimum acceptable warm speedup over the seed "
+                         "host path")
     args = ap.parse_args(argv)
 
-    with open(args.path) as f:
-        rows = json.load(f)["rows"]
-    if not rows:
-        print(f"{args.path} has no rows", file=sys.stderr)
-        return 1
+    failed = False
 
-    bad = []
-    for r in rows:
-        speedup = r["speedup_warm"]
-        status = "ok" if speedup >= args.floor else "REGRESSION"
-        print(f"{r['name']}: scan vs host loop {speedup:.1f}x warm "
-              f"[{status}]")
-        if speedup < args.floor:
-            bad.append(r["name"])
-    if bad:
-        print(f"speedup below {args.floor:.2f}x floor for: "
-              f"{', '.join(bad)}", file=sys.stderr)
-        return 1
-    print(f"all {len(rows)} drivers at or above the {args.floor:.2f}x "
-          "floor")
-    return 0
+    rows = _load_rows(args.path)
+    if rows is None:
+        failed = True
+    else:
+        bad = _gate(rows, "speedup_warm", args.floor, "scan vs host loop")
+        if bad:
+            print(f"speedup below {args.floor:.2f}x floor for: "
+                  f"{', '.join(bad)}", file=sys.stderr)
+            failed = True
+        else:
+            print(f"all {len(rows)} drivers at or above the "
+                  f"{args.floor:.2f}x floor")
+
+    rows = _load_rows(args.train_path)
+    if rows is None:
+        failed = True
+    else:
+        scan = [r for r in rows if r["path"].startswith("scan-")]
+        if not scan:
+            print(f"{args.train_path} has no scan-path rows",
+                  file=sys.stderr)
+            failed = True
+        else:
+            bad = _gate(scan, "speedup_vs_host", args.floor,
+                        "epoch scan vs seed host path")
+            if bad:
+                print(f"train speedup below {args.floor:.2f}x floor for: "
+                      f"{', '.join(bad)}", file=sys.stderr)
+                failed = True
+            else:
+                print(f"all {len(scan)} train scan paths at or above the "
+                      f"{args.floor:.2f}x floor")
+
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

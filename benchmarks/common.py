@@ -23,21 +23,23 @@ def timed(fn: Callable, *args, repeat: int = 3, **kw):
 
 
 def timed_cold_warm(fn: Callable, *args, repeat: int = 3, **kw):
-    """(cold_s, warm_s): wall time of the FIRST call (compile included for
-    jit-cached drivers) and the median of ``repeat`` subsequent calls.
-    Blocks on the returned pytree so async dispatch can't hide work."""
+    """(cold_s, warm_s, last): wall time of the FIRST call (compile
+    included for jit-cached drivers), the median of ``repeat`` subsequent
+    calls, and the LAST call's return value (so callers can record
+    provenance without re-executing the measured work).  Blocks on the
+    returned pytree so async dispatch can't hide work."""
     import jax
 
     t0 = time.perf_counter()
-    jax.block_until_ready(fn(*args, **kw))
+    last = jax.block_until_ready(fn(*args, **kw))
     cold = time.perf_counter() - t0
     times = []
     for _ in range(repeat):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args, **kw))
+        last = jax.block_until_ready(fn(*args, **kw))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return cold, times[len(times) // 2]
+    return cold, times[len(times) // 2], last
 
 
 def emit(rows: List[Dict], name: str) -> None:

@@ -2,6 +2,11 @@
 seed host-loop drivers (core/host_loop), establishing the repo's perf
 trajectory for the driver layer (DESIGN.md §3).
 
+The scan side goes through the unified solver API — each measured run is
+one ``repro.solve(RunSpec(...))`` call, and every artifact row embeds the
+``RunResult.provenance()`` record (resolved spec + rels tail), so the
+artifact states exactly what configuration produced it.
+
 For each worker count p we measure, on CPU:
 
   * cold wall clock (first invocation — includes jit compilation; the
@@ -15,27 +20,34 @@ For each worker count p we measure, on CPU:
 Writes ``BENCH_drivers.json`` at the repo root (the acceptance artifact:
 scan beats host loop on wall clock at p=8) plus the standard results CSV.
 
-    PYTHONPATH=src python -m benchmarks.driver_throughput [--quick]
+    python -m benchmarks.driver_throughput [--quick]
 """
 from __future__ import annotations
 
 import json
 import os
 
+try:
+    import repro_bootstrap  # noqa: F401  (repo-root module/script form)
+except ModuleNotFoundError:
+    pass  # installed form: repro resolves without the fallback
+
 import jax
 
 from benchmarks.common import emit, timed_cold_warm
+from repro import RunSpec, solve
 from repro.config import ConvexConfig
-from repro.core import centralvr, convex, distributed, host_loop
+from repro.core import convex, distributed, host_loop
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 WORKER_COUNTS = (1, 2, 4, 8)
 
 
-def _bench_pair(name, scan_fn, loop_fn, epochs, repeat):
-    scan_cold, scan_warm = timed_cold_warm(scan_fn, repeat=repeat)
-    loop_cold, loop_warm = timed_cold_warm(loop_fn, repeat=repeat)
+def _bench_pair(name, spec, problem, loop_fn, epochs, repeat):
+    scan_cold, scan_warm, res = timed_cold_warm(
+        lambda: solve(spec, problem), repeat=repeat)
+    loop_cold, loop_warm, _ = timed_cold_warm(loop_fn, repeat=repeat)
     return {
         "name": name,
         "us_per_call": scan_warm * 1e6,
@@ -47,6 +59,7 @@ def _bench_pair(name, scan_fn, loop_fn, epochs, repeat):
         "scan_epochs_per_s": epochs / scan_warm,
         "loop_epochs_per_s": epochs / loop_warm,
         "speedup_warm": loop_warm / scan_warm,
+        "provenance": res.provenance(),
         "derived": (f"scan:cold={scan_cold:.3f}s,warm={scan_warm:.3f}s;"
                     f"loop:cold={loop_cold:.3f}s,warm={loop_warm:.3f}s;"
                     f"speedup={loop_warm / scan_warm:.1f}x"),
@@ -66,7 +79,7 @@ def run(quick: bool = False):
             eta = convex.auto_eta(prob, 0.3)
             rows.append(_bench_pair(
                 "drivers/centralvr-p1",
-                lambda: centralvr.run(prob, eta=eta, epochs=rounds, key=key),
+                RunSpec(algo="centralvr", eta=eta, rounds=rounds), prob,
                 lambda: host_loop.run(prob, eta=eta, epochs=rounds, key=key),
                 rounds, repeat))
             continue
@@ -75,13 +88,12 @@ def run(quick: bool = False):
         eta = convex.auto_eta(sp.merged(), 0.3)
         rows.append(_bench_pair(
             f"drivers/sync-p{p}",
-            lambda: distributed.run_sync(sp, eta=eta, rounds=rounds, key=key),
+            RunSpec(algo="centralvr_sync", p=p, eta=eta, rounds=rounds), sp,
             lambda: host_loop.run_sync(sp, eta=eta, rounds=rounds, key=key),
             rounds, repeat))
         rows.append(_bench_pair(
             f"drivers/async-p{p}",
-            lambda: distributed.run_async(sp, eta=eta, rounds=rounds,
-                                          key=key),
+            RunSpec(algo="centralvr_async", p=p, eta=eta, rounds=rounds), sp,
             lambda: host_loop.run_async(sp, eta=eta, rounds=rounds, key=key),
             rounds, repeat))
 

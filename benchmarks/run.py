@@ -13,9 +13,11 @@ import traceback
 
 # script form: `python benchmarks/run.py` puts benchmarks/ (not the repo
 # root) on sys.path, so the `from benchmarks import ...` below needs the
-# root added — the CI benchmark-smoke job invokes this spelling
+# root added — the CI benchmark-smoke job invokes this spelling — and
+# repro_bootstrap adds src/ when repro isn't pip-installed
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
     __file__))))
+import repro_bootstrap  # noqa: F401,E402
 
 
 def main(argv=None) -> None:

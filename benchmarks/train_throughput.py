@@ -34,6 +34,13 @@ from __future__ import annotations
 import json
 import os
 
+import numpy as np
+
+try:
+    import repro_bootstrap  # noqa: F401  (repo-root module/script form)
+except ModuleNotFoundError:
+    pass  # installed form: repro resolves without the fallback
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 WORKER_COUNTS = (1, 2, 4)
@@ -158,8 +165,12 @@ def run(quick: bool = False):
                 state = tstep.place_train_state(state, meta["mesh"])
             paths[f"scan-{backend}"] = _chained(run_epoch, state)
         for name, fn in paths.items():
-            cold, warm = timed_cold_warm(fn, repeat=repeat)
+            cold, warm, losses = timed_cold_warm(fn, repeat=repeat)
             warm_by[(name, W)] = warm
+            # provenance row (same role as RunResult.provenance() in the
+            # solver-driven artifacts): the resolved configuration that
+            # produced this measurement + the last timed epoch's loss tail
+            loss_tail = np.atleast_1d(np.asarray(losses, dtype=float))
             rows.append({
                 "name": f"train_throughput/{name}-w{W}",
                 "path": name,
@@ -169,6 +180,14 @@ def run(quick: bool = False):
                 "warm_s": warm,
                 "compile_s": max(cold - warm, 0.0),
                 "steps_per_s": E / warm,
+                "provenance": {
+                    "spec": {"arch": cfg.name, "seq_len": tcfg.seq_len,
+                             "global_batch": tcfg.global_batch,
+                             "vr": tcfg.vr, "table_size": M,
+                             "steps_per_epoch": E, "path": name,
+                             "workers": W, "quick": quick},
+                    "loss_tail": [float(v) for v in loss_tail[-8:]],
+                },
                 "derived": f"cold={cold:.3f}s,warm={warm:.3f}s,"
                            f"steps/s={E / warm:.1f}",
             })

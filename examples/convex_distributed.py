@@ -2,17 +2,21 @@
 -Async vs D-SVRG / D-SAGA / EASGD on weak-scaled toy data, with the
 rounds-to-tolerance linear-scaling readout.
 
-    PYTHONPATH=src python examples/convex_distributed.py [--workers 8]
+    python examples/convex_distributed.py [--workers 8]
 
-``--backend spmd`` runs every driver with one worker per simulated host
-device (DESIGN.md §2) — the async rows execute their event schedule as
-concurrency waves (D-SAGA under the stale-fetch discipline the waves
-require).
+Every row is one declarative ``repro.solve(RunSpec(...))`` call
+(DESIGN.md §Solver API).  ``--backend spmd`` runs every driver with one
+worker per simulated host device (DESIGN.md §2) — the async rows execute
+their event schedule as concurrency waves (D-SAGA under the stale-fetch
+discipline the waves require).
 """
 import argparse
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+import repro_bootstrap  # noqa: F401,E402  (adds src/ if repro isn't installed)
 
 
 def parse_args():
@@ -37,56 +41,53 @@ def main():
     import jax
     import numpy as np
 
+    from repro import RunSpec, solve
     from repro.config import ConvexConfig
-    from repro.core import baselines, distributed
+    from repro.core import convex, distributed
 
     cfg = ConvexConfig(problem="logistic", n=args.n_per_worker, d=args.d,
                        workers=args.workers)
     sp = distributed.make_distributed(jax.random.PRNGKey(0), cfg)
-    key = jax.random.PRNGKey(1)
-    from repro.core import convex
     eta = convex.auto_eta(sp.merged(), 0.4)
 
-    be = args.backend
-    print(f"p={args.workers} workers, |Omega_s|={args.n_per_worker}, "
-          f"d={args.d}, {args.rounds} communication rounds, "
+    p, be, rounds = args.workers, args.backend, args.rounds
+    print(f"p={p} workers, |Omega_s|={args.n_per_worker}, "
+          f"d={args.d}, {rounds} communication rounds, "
           f"backend={be}\n")
-    runs = {
-        "CentralVR-Sync": lambda: distributed.run_sync(
-            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
-        "CentralVR-Async": lambda: distributed.run_async(
-            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
-        "CentralVR-Async (4x speed spread)": lambda: distributed.run_async(
-            sp, eta=eta, rounds=args.rounds, key=key, backend=be,
-            speeds=[1 + 3 * i / max(args.workers - 1, 1)
-                    for i in range(args.workers)])[1],
-        "Distributed-SVRG": lambda: distributed.run_dsvrg(
-            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
+    common = dict(p=p, eta=eta, rounds=rounds, backend=be, seed=1)
+    specs = {
+        "CentralVR-Sync": RunSpec(algo="centralvr_sync", **common),
+        "CentralVR-Async": RunSpec(algo="centralvr_async", **common),
+        "CentralVR-Async (4x speed spread)": RunSpec(
+            algo="centralvr_async",
+            speeds=tuple(1 + 3 * i / max(p - 1, 1) for i in range(p)),
+            **common),
+        "Distributed-SVRG": RunSpec(algo="dsvrg", **common),
         # spmd implies the stale-fetch discipline (DESIGN.md §2)
-        "Distributed-SAGA": lambda: distributed.run_dsaga(
-            sp, eta=eta / 2, rounds=args.rounds, key=key, backend=be,
-            tau=args.n_per_worker // 2)[1],
-        "EASGD": lambda: baselines.run_easgd(
-            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
-        "dist-SGD": lambda: baselines.run_dist_sgd(
-            sp, eta=eta, rounds=args.rounds, key=key, backend=be)[1],
+        "Distributed-SAGA": RunSpec(algo="dsaga",
+                                    tau=args.n_per_worker // 2,
+                                    **{**common, "eta": eta / 2}),
+        "EASGD": RunSpec(algo="easgd", **common),
+        "dist-SGD": RunSpec(algo="dist_sgd", **common),
     }
-    for name, fn in runs.items():
-        rels = np.asarray(fn())
-        print(f"{name:35s} final rel-grad-norm {rels[-1]:.2e}")
+    for name, spec in specs.items():
+        res = solve(spec, sp)
+        print(f"{name:35s} final rel-grad-norm {res.final_rel:.2e} "
+              f"[{res.wall_s:.2f}s]")
 
     # weak scaling: rounds to 1e-5 as p grows (the linear-scaling claim)
     print("\nweak scaling (rounds to rel-grad-norm < 1e-3):")
-    for p in (2, 4, args.workers):
+    for pw in (2, 4, p):
         cfg_p = ConvexConfig(problem="logistic", n=args.n_per_worker,
-                             d=args.d, workers=p)
+                             d=args.d, workers=pw)
         sp_p = distributed.make_distributed(jax.random.PRNGKey(0), cfg_p)
-        eta_p = convex.auto_eta(sp_p.merged(), 0.4)
-        rels = np.asarray(distributed.run_sync(
-            sp_p, eta=eta_p, rounds=args.rounds, key=key, backend=be)[1])
-        hit = np.nonzero(rels < 1e-3)[0]
-        r = int(hit[0]) + 1 if hit.size else f">{args.rounds}"
-        print(f"  p={p:3d} (total data {p * args.n_per_worker}): {r} rounds")
+        res = solve(RunSpec(algo="centralvr_sync", p=pw,
+                            eta=convex.auto_eta(sp_p.merged(), 0.4),
+                            rounds=rounds, backend=be, seed=1), sp_p)
+        hit = np.nonzero(res.rels < 1e-3)[0]
+        r = int(hit[0]) + 1 if hit.size else f">{rounds}"
+        print(f"  p={pw:3d} (total data {pw * args.n_per_worker}): "
+              f"{r} rounds")
 
 
 if __name__ == "__main__":

@@ -4,11 +4,14 @@
    regression — linear convergence with a CONSTANT step size.
 2. LM (framework): a tiny decoder trained with the CentralVR optimizer.
 
-    PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py
 """
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+import repro_bootstrap  # noqa: F401,E402  (adds src/ if repro isn't installed)
 
 import jax
 

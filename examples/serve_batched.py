@@ -2,12 +2,15 @@
 the sharded KV cache — across three architecture families (dense GQA,
 attention-free SSM, hybrid RG-LRU) to show the cache abstraction.
 
-    PYTHONPATH=src python examples/serve_batched.py
+    python examples/serve_batched.py
 """
+import os
 import sys
 import time
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+import repro_bootstrap  # noqa: F401,E402  (adds src/ if repro isn't installed)
 
 import jax
 import jax.numpy as jnp

@@ -7,13 +7,16 @@ The default profile is sized for the 1-core CPU container (a ~20M model,
 deliverable names (identical code path; budget several hours on CPU — on
 one v5e host it is minutes).
 
-    PYTHONPATH=src python examples/train_centralvr_100m.py [--full]
+    python examples/train_centralvr_100m.py [--full]
 """
 import argparse
 import dataclasses
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+import repro_bootstrap  # noqa: F401,E402  (adds src/ if repro isn't installed)
 
 from repro.config import ModelConfig, TrainConfig
 from repro.train import loop

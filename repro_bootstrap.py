@@ -1,0 +1,27 @@
+"""Fallback import bootstrap for script-form invocation.
+
+``repro`` lives in ``src/`` and is normally importable either via the
+editable install (``pip install -e .``, what CI does) or via
+``PYTHONPATH=src`` (the tier-1 verify spelling).  Scripts under
+``examples/`` and ``benchmarks/`` are also run bare —
+``python examples/convex_distributed.py`` from any cwd — where neither
+holds, so each script puts the repo root on ``sys.path`` and imports this
+module, which adds ``src/`` only when ``repro`` doesn't already resolve:
+
+    sys.path.insert(0, <repo root>)
+    import repro_bootstrap  # noqa: F401
+
+One helper instead of a hand-rolled ``sys.path.insert(0, "src")`` per
+script (which only worked with the repo root as cwd).  Importing ``repro``
+here is safe before ``spmd.force_host_devices``: the package import is
+lazy and touches no jax device (see ``src/repro/__init__.py``).
+"""
+import os
+import sys
+
+try:
+    import repro  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "src"))
+    import repro  # noqa: F401

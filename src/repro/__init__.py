@@ -1,4 +1,26 @@
 """repro: a multi-pod JAX training/inference framework implementing
 "Efficient Distributed SGD with Variance Reduction" (De & Goldstein, 2015)
-as a first-class distributed-optimizer feature."""
-__version__ = "1.0.0"
+as a first-class distributed-optimizer feature.
+
+The solver API (DESIGN.md §Solver API) is re-exported here lazily:
+
+    import repro
+    res = repro.solve(repro.RunSpec(algo="centralvr_sync", p=4), cfg)
+
+Laziness matters: ``import repro`` must not import jax, so scripts can
+call ``repro.core.spmd.force_host_devices`` (which must precede the first
+jax operation) after importing this package.
+"""
+__version__ = "1.1.0"
+
+_SOLVER_EXPORTS = ("solve", "RunSpec", "RunResult", "AlgoCaps",
+                   "REGISTRY", "algorithms", "runner")
+
+__all__ = list(_SOLVER_EXPORTS) + ["__version__"]
+
+
+def __getattr__(name):
+    if name in _SOLVER_EXPORTS:
+        from repro.core import solver
+        return getattr(solver, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

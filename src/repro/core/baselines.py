@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import convex, runtime
 from repro.core.convex import Problem
-from repro.core.distributed import ShardedProblem, check_backend
+from repro.core.distributed import ShardedProblem
 
 
 # ---------------------------------------------------------------------------
@@ -48,7 +48,10 @@ def _sgd_scan(prob: Problem, x, g0, keys, etas):
 
 def run_sgd(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
             decay: float = 0.0):
-    """Plain SGD, permutation sampling; eta_l = eta / (1 + decay*l)."""
+    """Plain SGD, permutation sampling; eta_l = eta / (1 + decay*l).
+    Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
+    from repro.core import solver
+    solver.RunSpec(algo="sgd", eta=float(eta), rounds=epochs, decay=decay)
     x = jnp.zeros((prob.d,))
     g0 = convex.grad_norm0(prob)
     keys = jax.random.split(key, epochs)
@@ -80,7 +83,12 @@ def _svrg_scan(prob: Problem, x, eta, g0, keys, inner: int):
 def run_svrg(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
              inner: int = 0):
     """SVRG [17]: snapshot + full gradient every epoch; update (3).
-    Gradient evaluations per outer epoch: n (full grad) + 2*inner."""
+    Gradient evaluations per outer epoch: n (full grad) + 2*inner.
+    Validation is a ``solver.RunSpec`` build (``inner`` maps onto the
+    spec's ``tau`` axis — DESIGN.md §Solver API)."""
+    from repro.core import solver
+    solver.RunSpec(algo="svrg", eta=float(eta), rounds=epochs,
+                   tau=inner or None)
     inner = inner or prob.n
     x = jnp.zeros((prob.d,))
     g0 = convex.grad_norm0(prob)
@@ -113,7 +121,10 @@ def _saga_scan(prob: Problem, carry, eta, g0, keys):
 
 def run_saga(prob: Problem, *, eta: float, epochs: int, key: jax.Array):
     """SAGA [12]: update (4), table mean refreshed every iteration.
-    1 gradient evaluation per iteration; table init at x0."""
+    1 gradient evaluation per iteration; table init at x0.
+    Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
+    from repro.core import solver
+    solver.RunSpec(algo="saga", eta=float(eta), rounds=epochs)
     x = jnp.zeros((prob.d,))
     g0 = convex.grad_norm0(prob)
     table = convex.scalar_residual_all(prob, x)
@@ -160,8 +171,13 @@ def run_dist_sgd(sp: ShardedProblem, *, eta: float, rounds: int,
                  key: jax.Array, tau: int = 0, decay: float = 0.0,
                  backend: str = "vmap", mesh=None):
     """Distributed SGD: tau local steps (default: one local epoch), then
-    average — the 'one-shot-averaging per round' baseline."""
-    if check_backend(backend) == "spmd":
+    average — the 'one-shot-averaging per round' baseline.
+    Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
+    from repro.core import solver
+    spec = solver.RunSpec(algo="dist_sgd", p=sp.p, eta=float(eta),
+                          rounds=rounds, backend=backend,
+                          tau=tau or None, decay=decay)
+    if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_dist_sgd(sp, eta=eta, rounds=rounds, key=key,
                                  tau=tau, decay=decay, mesh=mesh)
@@ -224,8 +240,14 @@ def run_easgd(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     with alpha = eta*rho (the paper's beta=p*alpha convention, symmetric
     moving-average form). Step size optionally decays as eta0/(1+gamma*k)^.5
     on a local clock, as in [36]/§6.2.
+
+    Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API).
     """
-    if check_backend(backend) == "spmd":
+    from repro.core import solver
+    spec = solver.RunSpec(algo="easgd", p=sp.p, eta=float(eta),
+                          rounds=rounds, backend=backend,
+                          tau=tau or None, decay=decay)
+    if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_easgd(sp, eta=eta, rounds=rounds, key=key, tau=tau,
                               rho=rho, decay=decay, mesh=mesh)
@@ -280,8 +302,12 @@ def run_ps_svrg(sp: ShardedProblem, *, eta: float, rounds: int,
     high-bandwidth regime the paper contrasts against). Simulated with
     synchronized arrivals (staleness 0, the method's best case); epoch
     size 2n as recommended in [29]. Per round: one full gradient + 2
-    gradient evaluations per inner step per worker."""
-    if check_backend(backend) == "spmd":
+    gradient evaluations per inner step per worker.
+    Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
+    from repro.core import solver
+    spec = solver.RunSpec(algo="ps_svrg", p=sp.p, eta=float(eta),
+                          rounds=rounds, backend=backend)
+    if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_ps_svrg(sp, eta=eta, rounds=rounds, key=key,
                                 epoch_mult=epoch_mult, mesh=mesh)

@@ -144,9 +144,13 @@ def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     ``backend``: Algorithm 1 is single-worker, so ``"spmd"`` simply places
     the run on the mesh's first device — the parameter exists so launchers
     can address every driver through one switch (DESIGN.md §2).
+
+    Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API).
     """
-    from repro.core.distributed import check_backend
-    if check_backend(backend) == "spmd":
+    from repro.core import solver
+    spec = solver.RunSpec(algo="centralvr", eta=float(eta), rounds=epochs,
+                          backend=backend, sampling=sampling)
+    if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_centralvr(prob, eta=eta, epochs=epochs, key=key,
                                   sampling=sampling, x0=x0, mesh=mesh)

@@ -213,8 +213,15 @@ def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
 
     ``backend="spmd"`` runs the same rounds under ``shard_map`` with one
     worker per device of ``mesh`` (default: a mesh over the first p
-    devices); the central average becomes a ``pmean`` (DESIGN.md §2)."""
-    if check_backend(backend) == "spmd":
+    devices); the central average becomes a ``pmean`` (DESIGN.md §2).
+
+    Thin wrapper contract (DESIGN.md §Solver API): argument validation is
+    a ``solver.RunSpec`` build, so this signature and ``solve()`` fail
+    identically on invalid combinations."""
+    from repro.core import solver
+    spec = solver.RunSpec(algo="centralvr_sync", p=sp.p, eta=float(eta),
+                          rounds=rounds, backend=backend)
+    if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_sync(sp, eta=eta, rounds=rounds, key=key, mesh=mesh)
     k_init, k_run = jax.random.split(key)
@@ -323,15 +330,22 @@ def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     worker per device of ``mesh``, and the ``x += dx/p`` delta pushes are
     applied at the wave boundary in the schedule's event order
     (DESIGN.md §2).  Trajectories match this event-serial path within
-    float32 tolerance (pinned by ``tests/test_spmd_backend.py``)."""
-    if check_backend(backend) == "spmd":
+    float32 tolerance (pinned by ``tests/test_spmd_backend.py``).
+
+    Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
+    from repro.core import solver
+    spec = solver.RunSpec(
+        algo="centralvr_async", p=sp.p, eta=float(eta), rounds=rounds,
+        backend=backend,
+        speeds=None if speeds is None else tuple(float(s) for s in speeds))
+    if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_async(sp, eta=eta, rounds=rounds, key=key,
-                              speeds=speeds, mesh=mesh)
+                              speeds=spec.speeds, mesh=mesh)
     k_init, k_run = jax.random.split(key)
     st = async_init(sp, eta, k_init)
     g0 = convex.grad_norm0(sp.merged())
-    schedule = runtime.event_schedule(sp.p, rounds, speeds)
+    schedule = runtime.event_schedule(sp.p, rounds, spec.speeds)
     keys = jax.random.split(k_run, schedule.size)
     sched, keys = runtime.per_round(schedule, keys, sp.p)
     return _async_scan(sp, st, eta, g0, jnp.asarray(sched), keys)
@@ -379,8 +393,13 @@ def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     (the synchronization step); then average x across workers.
     2 gradient evaluations per iteration (Table 1).  One jitted scan over
     rounds (DESIGN.md §3); ``backend="spmd"`` places one worker per mesh
-    device and the averages/sync gradient become collectives."""
-    if check_backend(backend) == "spmd":
+    device and the averages/sync gradient become collectives.
+
+    Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
+    from repro.core import solver
+    spec = solver.RunSpec(algo="dsvrg", p=sp.p, eta=float(eta),
+                          rounds=rounds, backend=backend, tau=tau or None)
+    if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_dsvrg(sp, eta=eta, rounds=rounds, key=key, tau=tau,
                               mesh=mesh)
@@ -579,21 +598,25 @@ def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
 
     Like CentralVR-Async, the whole event schedule runs as one jitted scan
     with a traced worker index — one executable regardless of p.
+
+    Validation — including the fetch-default resolution and the
+    fetch='instant'+spmd refusal — is a ``solver.RunSpec`` build
+    (DESIGN.md §Solver API).
     """
-    if fetch is None:
-        fetch = "stale" if backend == "spmd" else "instant"
-    if fetch not in ("instant", "stale"):
-        raise ValueError(
-            f"unknown fetch {fetch!r}: expected 'instant' or 'stale'")
-    check_backend(backend, spmd_ok=(fetch == "stale"),
-                  algo="D-SAGA with fetch='instant'")
-    if backend == "spmd":
+    from repro.core import solver
+    spec = solver.RunSpec(
+        algo="dsaga", p=sp.p, eta=float(eta), rounds=rounds,
+        backend=backend, fetch=fetch,
+        speeds=None if speeds is None else tuple(float(s) for s in speeds),
+        tau=tau)
+    fetch = spec.fetch
+    if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_dsaga(sp, eta=eta, rounds=rounds, key=key, tau=tau,
-                              literal_scaling=literal_scaling, speeds=speeds,
-                              mesh=mesh)
+                              literal_scaling=literal_scaling,
+                              speeds=spec.speeds, mesh=mesh)
     g0 = convex.grad_norm0(sp.merged())
-    schedule = runtime.event_schedule(sp.p, rounds, speeds)
+    schedule = runtime.event_schedule(sp.p, rounds, spec.speeds)
     keys = jax.random.split(key, schedule.size)
     sched, keys = runtime.per_round(schedule, keys, sp.p)
     st = dsaga_init_stale(sp) if fetch == "stale" else dsaga_init(sp)

@@ -1,0 +1,562 @@
+"""Unified solver API: declarative ``RunSpec`` -> ``solve`` -> ``RunResult``.
+
+The paper's experiments (§6) are head-to-head sweeps of one algorithm
+family — CentralVR-Sync/Async vs D-SVRG, D-SAGA, EASGD and SGD baselines —
+parameterized by a few axes (table form, fetch discipline, topology,
+speeds).  This module exposes that family *as data* instead of 11 drifting
+``run_*`` keyword surfaces:
+
+  * :class:`RunSpec` — a frozen, validated description of one run (algo,
+    p, eta, rounds, backend, fetch, speeds, tau, seed, metric cadence).
+    Every backend/fetch/speeds combination check lives in spec
+    construction, so an invalid combination fails *before* any JAX work,
+    with an error naming the offending spec field.
+  * the algorithm **registry** — name -> driver + :class:`AlgoCaps`
+    capability record (distributed? spmd program? async? accepts
+    fetch/speeds/tau?).  New workloads are one registry entry, not a new
+    bespoke driver signature.
+  * :class:`RunResult` — the uniform return: rels trajectory, final
+    iterate + full driver state, wall clock, trace-count stats, and the
+    resolved spec for provenance (``RunResult.provenance()`` is what the
+    benchmark artifacts embed).
+  * :func:`solve` — runs a spec against a problem/config: acquires
+    simulated host devices before the first jax op when
+    ``backend="spmd"``, shards or merges the data to match the algorithm's
+    topology, derives the RNG key from ``spec.seed``, and normalizes every
+    driver's return tuple.
+
+The ``run_*`` drivers keep their exact signatures and trajectories; they
+now build a spec internally for validation (DESIGN.md §Solver API), so
+existing call sites — and all vmap/spmd/host-loop trajectory pins — are
+untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core import runtime
+
+__all__ = ["RunSpec", "RunResult", "AlgoCaps", "Algorithm", "REGISTRY",
+           "algorithms", "runner", "solve"]
+
+
+# ---------------------------------------------------------------------------
+# Capability records + registry
+# ---------------------------------------------------------------------------
+
+class AlgoCaps(NamedTuple):
+    """What a registry algorithm supports — the validation contract
+    :class:`RunSpec` enforces at construction, pinned against observed
+    driver behavior by ``tests/test_solver_api.py``."""
+
+    distributed: bool          # runs on a ShardedProblem (p workers)?
+    spmd_ok: bool              # has a backend="spmd" program?
+    is_async: bool             # event-scheduled (vs bulk-synchronous)?
+    accepts_fetch: bool = False   # fetch="instant"|"stale" discipline?
+    accepts_speeds: bool = False  # heterogeneous-speed event schedule?
+    accepts_tau: bool = False     # local-step count (inner loop length)?
+
+
+class Algorithm(NamedTuple):
+    name: str
+    module: str                # dotted module of the public run_* driver
+    func: str                  # driver attribute within ``module``
+    caps: AlgoCaps
+    call: Callable             # (spec, problem, eta, key, mesh) ->
+                               #   (state, x, rels, grad_evals | None)
+    doc: str
+
+
+REGISTRY: dict[str, Algorithm] = {}
+
+
+def register(name: str, module: str, func: str, caps: AlgoCaps,
+             call: Callable, doc: str) -> None:
+    if name in REGISTRY:
+        raise ValueError(f"algorithm {name!r} already registered")
+    REGISTRY[name] = Algorithm(name, module, func, caps, call, doc)
+
+
+def algorithms() -> Tuple[str, ...]:
+    """Registered algorithm names, in registration (paper) order."""
+    return tuple(REGISTRY)
+
+
+def runner(name: str) -> Callable:
+    """Resolve a registry entry to its public ``run_*`` driver."""
+    entry = REGISTRY[name]
+    return getattr(importlib.import_module(entry.module), entry.func)
+
+
+# ---------------------------------------------------------------------------
+# RunSpec — declarative, frozen, validated at construction
+# ---------------------------------------------------------------------------
+
+_SAMPLINGS = ("permutation", "uniform")
+_DECAY_ALGOS = ("sgd", "dist_sgd", "easgd")
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """One solver run, as data.
+
+    Fields:
+      algo          registry name (see :func:`algorithms`)
+      p             worker count (must be 1 for single-worker algorithms)
+      eta           step size; None -> ``convex.auto_eta`` on the (merged)
+                    problem at solve time
+      rounds        communication rounds (epochs for the single-worker
+                    algorithms; ``spec.epochs`` is an alias)
+      backend       "vmap" (stacked single-device simulation, default) or
+                    "spmd" (one worker per mesh device, DESIGN.md §2)
+      fetch         D-SAGA fetch discipline "instant"|"stale"; None
+                    resolves to the driver default ("stale" under spmd,
+                    else "instant")
+      speeds        per-worker relative speeds for the async event
+                    schedule (len p); None -> round-robin
+      tau           local steps per event/round where the algorithm takes
+                    them (D-SVRG/D-SAGA/dist-SGD/EASGD; SVRG's inner loop);
+                    None -> the driver's documented default
+      seed          PRNGKey seed used by :func:`solve` when no explicit
+                    key is passed
+      metric_every  metric cadence: keep every k-th round's rel-grad-norm
+                    (plus the final round) in ``RunResult.rels``.  The
+                    drivers still compute the metric on device each round
+                    inside their jitted scan; this controls what the
+                    result records.
+      sampling      CentralVR sampling mode ("permutation"|"uniform",
+                    Algorithm 1 only)
+      decay         step-size decay for the SGD-family baselines
+
+    All cross-field validation happens here: asking for an impossible
+    combination (spmd on a serial algorithm, speeds on a synchronous one,
+    fetch="instant" under spmd, ...) raises at construction with the
+    offending field named, before any JAX work.
+    """
+
+    algo: str
+    p: int = 1
+    eta: Optional[float] = None
+    rounds: int = 10
+    backend: str = "vmap"
+    fetch: Optional[str] = None
+    speeds: Optional[Tuple[float, ...]] = None
+    tau: Optional[int] = None
+    seed: int = 0
+    metric_every: int = 1
+    sampling: str = "permutation"
+    decay: float = 0.0
+
+    def __post_init__(self):
+        if self.algo not in REGISTRY:
+            raise ValueError(
+                f"RunSpec.algo: unknown algorithm {self.algo!r}; registry "
+                f"has {', '.join(REGISTRY)}")
+        caps = REGISTRY[self.algo].caps
+        _set = lambda k, v: object.__setattr__(self, k, v)  # noqa: E731
+
+        # normalize scalar fields so asdict() round-trips exactly
+        _set("p", int(self.p))
+        _set("rounds", int(self.rounds))
+        _set("seed", int(self.seed))
+        _set("metric_every", int(self.metric_every))
+        if self.eta is not None:
+            _set("eta", float(self.eta))
+        if self.tau is not None:
+            _set("tau", int(self.tau))
+        _set("decay", float(self.decay))
+
+        if self.p < 1:
+            raise ValueError(f"RunSpec.p: need at least 1 worker, got "
+                             f"{self.p}")
+        if not caps.distributed and self.p != 1:
+            raise ValueError(
+                f"RunSpec.p: algorithm {self.algo!r} is single-worker; "
+                f"got p={self.p} (use the distributed variants for p>1)")
+        if self.rounds < 1:
+            raise ValueError(f"RunSpec.rounds: need >= 1, got {self.rounds}")
+        if self.metric_every < 1:
+            raise ValueError(
+                f"RunSpec.metric_every: need >= 1, got {self.metric_every}")
+        if self.eta is not None and not self.eta > 0.0:
+            raise ValueError(f"RunSpec.eta: need > 0, got {self.eta}")
+        if self.tau is not None and self.tau < 1:
+            raise ValueError(f"RunSpec.tau: need >= 1, got {self.tau}")
+
+        # fetch discipline (resolved BEFORE the backend check: whether an
+        # spmd program exists for D-SAGA depends on the discipline)
+        if self.fetch is not None and not caps.accepts_fetch:
+            raise ValueError(
+                f"RunSpec.fetch: algorithm {self.algo!r} has a single "
+                "fetch discipline; only D-SAGA exposes fetch=")
+        if caps.accepts_fetch:
+            if self.fetch is None:
+                _set("fetch",
+                     "stale" if self.backend == "spmd" else "instant")
+            if self.fetch not in ("instant", "stale"):
+                raise ValueError(
+                    f"RunSpec.fetch: unknown fetch {self.fetch!r}: "
+                    "expected 'instant' or 'stale'")
+
+        # backend — reuse check_backend so the error contracts ("unknown
+        # backend", "event-serial") stay the single spelling everywhere
+        from repro.core.distributed import check_backend
+        try:
+            check_backend(self.backend)
+        except ValueError as e:
+            raise ValueError(f"RunSpec.backend: {e}") from None
+        if self.backend == "spmd":
+            if not caps.spmd_ok:
+                raise NotImplementedError(
+                    f"RunSpec.backend: algorithm {self.algo!r} has no SPMD "
+                    "program (single-device driver); use backend='vmap'")
+            if caps.accepts_fetch and self.fetch == "instant":
+                try:
+                    check_backend(
+                        "spmd", spmd_ok=False,
+                        algo=f"{self.algo} with fetch='instant'")
+                except NotImplementedError as e:
+                    raise NotImplementedError(
+                        f"RunSpec.backend: {e}") from None
+
+        # speeds — async event schedules only
+        if self.speeds is not None:
+            if not caps.accepts_speeds:
+                raise ValueError(
+                    f"RunSpec.speeds: algorithm {self.algo!r} is "
+                    "synchronous — per-worker speeds only weight the "
+                    "asynchronous event schedules (centralvr_async, dsaga)")
+            speeds = tuple(float(s) for s in self.speeds)
+            if len(speeds) != self.p:
+                raise ValueError(
+                    f"RunSpec.speeds: need one entry per worker "
+                    f"(p={self.p}), got {len(speeds)}")
+            if any(s <= 0.0 for s in speeds):
+                raise ValueError("RunSpec.speeds: speeds must be > 0, got "
+                                 f"{speeds}")
+            _set("speeds", speeds)
+
+        if self.tau is not None and not caps.accepts_tau:
+            raise ValueError(
+                f"RunSpec.tau: algorithm {self.algo!r} has no local-step "
+                "count (its inner loop is a full epoch)")
+        if self.sampling not in _SAMPLINGS:
+            raise ValueError(
+                f"RunSpec.sampling: unknown sampling {self.sampling!r}: "
+                f"expected one of {_SAMPLINGS}")
+        if self.sampling != "permutation" and self.algo != "centralvr":
+            raise ValueError(
+                "RunSpec.sampling: only 'centralvr' (Algorithm 1) exposes "
+                "the sampling mode")
+        if self.decay != 0.0 and self.algo not in _DECAY_ALGOS:
+            raise ValueError(
+                f"RunSpec.decay: step-size decay only applies to "
+                f"{_DECAY_ALGOS}, not {self.algo!r}")
+
+    @property
+    def epochs(self) -> int:
+        """Alias: the single-worker algorithms call rounds 'epochs'."""
+        return self.rounds
+
+    @property
+    def caps(self) -> AlgoCaps:
+        return REGISTRY[self.algo].caps
+
+
+# ---------------------------------------------------------------------------
+# RunResult — the uniform return
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunResult:
+    """What every algorithm returns through :func:`solve`.
+
+    ``spec`` is the *resolved* spec (eta filled in, fetch defaulted) — the
+    exact configuration that produced the run, suitable for artifact
+    provenance.  ``wall_s`` is the blocking wall clock of the driver call
+    (the first call of a fresh process includes jit compilation);
+    ``traces`` is the delta of ``runtime.TRACES`` over the call — 0 on a
+    jit cache hit, the exact retrace/compile probe of DESIGN.md §3.
+    """
+
+    spec: RunSpec
+    rels: np.ndarray           # recorded rel-grad-norm trajectory
+    x: np.ndarray              # final iterate (d,)
+    state: Any                 # the driver's full final state pytree
+    wall_s: float
+    traces: dict
+    grad_evals: Optional[np.ndarray] = None
+
+    @property
+    def final_rel(self) -> float:
+        return float(self.rels[-1])
+
+    def provenance(self, tail: int = 8) -> dict:
+        """JSON-able record of exactly what configuration produced this
+        result — embedded alongside each benchmark-artifact row."""
+        rels = np.asarray(self.rels, dtype=float)
+        return {
+            "spec": dataclasses.asdict(self.spec),
+            "final_rel": float(rels[-1]) if rels.size else None,
+            "rels_tail": [float(v) for v in rels[-tail:]],
+            "rounds_recorded": int(rels.size),
+            "wall_s": float(self.wall_s),
+            "traces": dict(self.traces),
+        }
+
+
+# ---------------------------------------------------------------------------
+# solve
+# ---------------------------------------------------------------------------
+
+def _coerce_problem(spec: RunSpec, problem):
+    """Match the data topology to the algorithm: shard a flat Problem for
+    the distributed algorithms, merge a ShardedProblem for the
+    single-worker ones, or build either from a ConvexConfig (dataset keyed
+    by ``cfg.seed``, so the same config always yields the same data)."""
+    import jax
+
+    from repro.config import ConvexConfig
+    from repro.core import convex, distributed
+
+    caps = REGISTRY[spec.algo].caps
+    if isinstance(problem, ConvexConfig):
+        if caps.distributed:
+            # cfg.workers left at its default (1) means "let the spec
+            # decide"; an explicit conflicting value is an error, same as
+            # the ShardedProblem mismatch below
+            if problem.workers not in (1, spec.p):
+                raise ValueError(
+                    f"RunSpec.p: spec says p={spec.p} but the ConvexConfig "
+                    f"sets workers={problem.workers}; make them agree (or "
+                    "leave cfg.workers at its default)")
+            cfg = dataclasses.replace(problem, workers=spec.p)
+            return distributed.make_distributed(
+                jax.random.PRNGKey(cfg.seed), cfg)
+        if problem.workers > 1:
+            # single-worker algorithm on a multi-worker config: run on the
+            # merged total dataset — the same data the distributed
+            # algorithms see, so baseline comparisons stay exact
+            return distributed.make_distributed(
+                jax.random.PRNGKey(problem.seed), problem).merged()
+        return convex.make_problem(jax.random.PRNGKey(problem.seed), problem)
+    if isinstance(problem, distributed.ShardedProblem):
+        if not caps.distributed:
+            return problem.merged()
+        if problem.p != spec.p:
+            raise ValueError(
+                f"RunSpec.p: spec says p={spec.p} but the ShardedProblem "
+                f"has p={problem.p}")
+        return problem
+    if isinstance(problem, convex.Problem):
+        if caps.distributed:
+            return distributed.shard_problem(problem, spec.p)
+        return problem
+    raise TypeError(
+        f"solve() takes a ConvexConfig, Problem, or ShardedProblem; got "
+        f"{type(problem).__name__}")
+
+
+def solve(spec: RunSpec, problem, *, key=None, mesh=None) -> RunResult:
+    """Run ``spec`` against ``problem`` (a ``ConvexConfig``, ``Problem``,
+    or ``ShardedProblem``) and return the uniform :class:`RunResult`.
+
+    Uniform handling across every registry algorithm:
+
+      * ``backend="spmd"``: simulated host devices are forced *before*
+        the first jax operation (``spmd.force_host_devices``; a fresh
+        process acquires them, an already-initialized one validates the
+        count) and the driver gets one worker per device of ``mesh``
+        (default: the first p devices);
+      * data sharding/merging per the algorithm's topology
+        (:func:`_coerce_problem`);
+      * ``eta=None`` resolves to ``convex.auto_eta`` on the merged
+        problem;
+      * the RNG key derives from ``spec.seed`` unless ``key`` overrides
+        it; all drivers precompute their draws on the host (DESIGN.md §2);
+      * the driver's return tuple is normalized to
+        (state, final iterate, rels, grad_evals).
+    """
+    entry = REGISTRY[spec.algo]
+    if spec.backend == "spmd":
+        from repro.core import spmd
+        spmd.force_host_devices(max(spec.p, 1))
+
+    import jax
+
+    from repro.core import convex, distributed
+
+    problem = _coerce_problem(spec, problem)
+    eta = spec.eta
+    if eta is None:
+        merged = (problem.merged()
+                  if isinstance(problem, distributed.ShardedProblem)
+                  else problem)
+        eta = convex.auto_eta(merged)
+    if key is None:
+        key = jax.random.PRNGKey(spec.seed)
+
+    before = dict(runtime.TRACES)
+    t0 = time.perf_counter()
+    state, x, rels, grad_evals = entry.call(spec, problem, eta, key, mesh)
+    rels = jax.block_until_ready(rels)
+    wall = time.perf_counter() - t0
+    traces = {k: v - before.get(k, 0) for k, v in runtime.TRACES.items()
+              if v != before.get(k, 0)}
+
+    rels = np.asarray(rels)
+    if grad_evals is not None:
+        grad_evals = np.asarray(grad_evals)
+    if spec.metric_every > 1 and rels.size:
+        idx = np.arange(spec.metric_every - 1, rels.size, spec.metric_every)
+        idx = np.unique(np.append(idx, rels.size - 1))
+        rels = rels[idx]
+        if grad_evals is not None:
+            # keep the two trajectories aligned (rels[i] <-> grad_evals[i])
+            grad_evals = grad_evals[idx]
+    resolved = dataclasses.replace(spec, eta=float(eta))
+    return RunResult(spec=resolved, rels=rels, x=np.asarray(x), state=state,
+                     wall_s=wall, traces=traces, grad_evals=grad_evals)
+
+
+# ---------------------------------------------------------------------------
+# Registry entries — the paper's algorithm family as data
+# ---------------------------------------------------------------------------
+# Each ``call`` adapter maps the uniform spec onto one driver's native
+# keyword surface and normalizes its return tuple.  Driver modules are
+# imported lazily: they import this module (inside their run_* bodies) for
+# spec validation, and the registry must be importable first.
+
+def _call_centralvr(spec, prob, eta, key, mesh):
+    from repro.core import centralvr
+    st, rels, evals = centralvr.run(prob, eta=eta, epochs=spec.rounds,
+                                    key=key, sampling=spec.sampling,
+                                    backend=spec.backend, mesh=mesh)
+    return st, st.x, rels, evals
+
+
+def _call_sync(spec, sp, eta, key, mesh):
+    from repro.core import distributed
+    st, rels = distributed.run_sync(sp, eta=eta, rounds=spec.rounds,
+                                    key=key, backend=spec.backend, mesh=mesh)
+    return st, st.x, rels, None
+
+
+def _call_async(spec, sp, eta, key, mesh):
+    from repro.core import distributed
+    st, rels = distributed.run_async(sp, eta=eta, rounds=spec.rounds,
+                                     key=key, speeds=spec.speeds,
+                                     backend=spec.backend, mesh=mesh)
+    return st, st.x_c, rels, None
+
+
+def _call_dsvrg(spec, sp, eta, key, mesh):
+    from repro.core import distributed
+    x, rels = distributed.run_dsvrg(sp, eta=eta, rounds=spec.rounds,
+                                    key=key, tau=spec.tau or 0,
+                                    backend=spec.backend, mesh=mesh)
+    return x, x, rels, None
+
+
+def _call_dsaga(spec, sp, eta, key, mesh):
+    from repro.core import distributed
+    st, rels = distributed.run_dsaga(sp, eta=eta, rounds=spec.rounds,
+                                     key=key, tau=spec.tau or 100,
+                                     fetch=spec.fetch, speeds=spec.speeds,
+                                     backend=spec.backend, mesh=mesh)
+    return st, st.x_c, rels, None
+
+
+def _call_sgd(spec, prob, eta, key, mesh):
+    from repro.core import baselines
+    x, rels = baselines.run_sgd(prob, eta=eta, epochs=spec.rounds, key=key,
+                                decay=spec.decay)
+    return x, x, rels, None
+
+
+def _call_svrg(spec, prob, eta, key, mesh):
+    from repro.core import baselines
+    x, rels = baselines.run_svrg(prob, eta=eta, epochs=spec.rounds, key=key,
+                                 inner=spec.tau or 0)
+    return x, x, rels, None
+
+
+def _call_saga(spec, prob, eta, key, mesh):
+    from repro.core import baselines
+    x, rels = baselines.run_saga(prob, eta=eta, epochs=spec.rounds, key=key)
+    return x, x, rels, None
+
+
+def _call_dist_sgd(spec, sp, eta, key, mesh):
+    from repro.core import baselines
+    x, rels = baselines.run_dist_sgd(sp, eta=eta, rounds=spec.rounds,
+                                     key=key, tau=spec.tau or 0,
+                                     decay=spec.decay,
+                                     backend=spec.backend, mesh=mesh)
+    return x, x, rels, None
+
+
+def _call_easgd(spec, sp, eta, key, mesh):
+    from repro.core import baselines
+    xc, rels = baselines.run_easgd(sp, eta=eta, rounds=spec.rounds, key=key,
+                                   tau=spec.tau or 16, decay=spec.decay,
+                                   backend=spec.backend, mesh=mesh)
+    return xc, xc, rels, None
+
+
+def _call_ps_svrg(spec, sp, eta, key, mesh):
+    from repro.core import baselines
+    x, rels = baselines.run_ps_svrg(sp, eta=eta, rounds=spec.rounds,
+                                    key=key, backend=spec.backend, mesh=mesh)
+    return x, x, rels, None
+
+
+register("centralvr", "repro.core.centralvr", "run",
+         AlgoCaps(distributed=False, spmd_ok=True, is_async=False),
+         _call_centralvr,
+         "CentralVR, single worker (Algorithm 1); spmd = run on the mesh")
+register("centralvr_sync", "repro.core.distributed", "run_sync",
+         AlgoCaps(distributed=True, spmd_ok=True, is_async=False),
+         _call_sync, "CentralVR-Sync (Algorithm 2)")
+register("centralvr_async", "repro.core.distributed", "run_async",
+         AlgoCaps(distributed=True, spmd_ok=True, is_async=True,
+                  accepts_speeds=True),
+         _call_async,
+         "CentralVR-Async (Algorithm 3), deterministic event schedule")
+register("dsvrg", "repro.core.distributed", "run_dsvrg",
+         AlgoCaps(distributed=True, spmd_ok=True, is_async=False,
+                  accepts_tau=True),
+         _call_dsvrg, "Distributed SVRG (Algorithm 4)")
+register("dsaga", "repro.core.distributed", "run_dsaga",
+         AlgoCaps(distributed=True, spmd_ok=True, is_async=True,
+                  accepts_fetch=True, accepts_speeds=True,
+                  accepts_tau=True),
+         _call_dsaga,
+         "Distributed SAGA (Algorithm 5); spmd requires fetch='stale'")
+register("sgd", "repro.core.baselines", "run_sgd",
+         AlgoCaps(distributed=False, spmd_ok=False, is_async=False),
+         _call_sgd, "plain SGD, permutation sampling (Fig. 1 baseline)")
+register("svrg", "repro.core.baselines", "run_svrg",
+         AlgoCaps(distributed=False, spmd_ok=False, is_async=False,
+                  accepts_tau=True),
+         _call_svrg, "SVRG [17]; tau = inner-loop length (default n)")
+register("saga", "repro.core.baselines", "run_saga",
+         AlgoCaps(distributed=False, spmd_ok=False, is_async=False),
+         _call_saga, "SAGA [12] (Fig. 1 baseline)")
+register("dist_sgd", "repro.core.baselines", "run_dist_sgd",
+         AlgoCaps(distributed=True, spmd_ok=True, is_async=False,
+                  accepts_tau=True),
+         _call_dist_sgd, "distributed SGD with periodic averaging")
+register("easgd", "repro.core.baselines", "run_easgd",
+         AlgoCaps(distributed=True, spmd_ok=True, is_async=False,
+                  accepts_tau=True),
+         _call_easgd, "elastic averaging SGD [36]")
+register("ps_svrg", "repro.core.baselines", "run_ps_svrg",
+         AlgoCaps(distributed=True, spmd_ok=True, is_async=False),
+         _call_ps_svrg, "parameter-server SVRG [29]")

@@ -1,0 +1,146 @@
+"""Run any registry algorithm — or a sweep over the whole registry —
+through the unified solver API (DESIGN.md §Solver API).
+
+    python -m repro.launch.solve --list
+    python -m repro.launch.solve --algo centralvr_sync --quick
+    python -m repro.launch.solve --algo dsaga --fetch stale --tau 50
+    python -m repro.launch.solve --algo centralvr_async --backend spmd \
+        --workers 4 --speeds 1,1,2,4
+    python -m repro.launch.solve --sweep --quick --json sweep.json
+
+Every run is one ``repro.solve(RunSpec(...), ConvexConfig(...))`` call;
+the printed row and the optional ``--json`` dump are
+``RunResult.provenance()`` records, the same rows the benchmark artifacts
+embed.  ``--backend spmd`` forces the simulated host devices before the
+first jax operation (the DESIGN.md §2 constraint); during a sweep,
+algorithms without an SPMD program fall back to vmap with a note.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Unified solver CLI: one RunSpec per run.")
+    ap.add_argument("--algo", default="",
+                    help="registry algorithm name (see --list)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run every registry algorithm")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registry (caps + doc) and exit")
+    ap.add_argument("--problem", choices=("logistic", "ridge"),
+                    default="logistic")
+    ap.add_argument("--n", type=int, default=0,
+                    help="samples per worker (0 -> 1000, or 64 in --quick)")
+    ap.add_argument("--d", type=int, default=0,
+                    help="feature dim (0 -> 50, or 8 in --quick)")
+    ap.add_argument("--workers", "-p", type=int, default=0,
+                    help="worker count for distributed algos "
+                         "(0 -> 4, or 2 in --quick)")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="communication rounds / epochs "
+                         "(0 -> 10, or 3 in --quick)")
+    ap.add_argument("--eta", type=float, default=0.0,
+                    help="step size (0 -> auto from the smoothness const)")
+    ap.add_argument("--backend", choices=("vmap", "spmd"), default="vmap")
+    ap.add_argument("--fetch", choices=("instant", "stale"), default="",
+                    help="D-SAGA fetch discipline")
+    ap.add_argument("--speeds", default="",
+                    help="comma list of per-worker relative speeds "
+                         "(async algos)")
+    ap.add_argument("--tau", type=int, default=0,
+                    help="local steps per event/round where supported")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metric-every", type=int, default=1)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny CI-smoke sizes")
+    ap.add_argument("--json", default="",
+                    help="write RunResult.provenance() rows to this path")
+    return ap.parse_args(argv)
+
+
+def build_spec(args, name, workers, rounds):
+    """One RunSpec from the flag surface, honoring the algorithm's
+    capability record (flags an algorithm doesn't take are only an error
+    when the user set them explicitly for a single --algo run)."""
+    import repro
+
+    caps = repro.REGISTRY[name].caps
+    backend = args.backend
+    note = ""
+    if backend == "spmd" and not caps.spmd_ok:
+        if not args.sweep:
+            # let RunSpec raise its field-named error
+            return repro.RunSpec(algo=name, backend=backend), ""
+        backend, note = "vmap", " (no spmd program: ran vmap)"
+    kw = dict(algo=name, p=workers if caps.distributed else 1,
+              rounds=rounds, backend=backend, seed=args.seed,
+              metric_every=args.metric_every)
+    if args.eta:
+        kw["eta"] = args.eta
+    # a flag the algorithm doesn't take is dropped during a sweep but kept
+    # for a single --algo run, so RunSpec surfaces the capability mismatch
+    # instead of silently ignoring what the user asked for
+    if args.tau and (caps.accepts_tau or not args.sweep):
+        kw["tau"] = args.tau
+    if args.fetch and (caps.accepts_fetch or not args.sweep):
+        kw["fetch"] = args.fetch
+    if args.speeds and (caps.accepts_speeds or not args.sweep):
+        kw["speeds"] = tuple(float(s) for s in args.speeds.split(","))
+    return repro.RunSpec(**kw), note
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    import repro
+
+    if args.list:
+        for name in repro.algorithms():
+            e = repro.REGISTRY[name]
+            c = e.caps
+            flags = [k for k, v in
+                     (("distributed", c.distributed), ("spmd", c.spmd_ok),
+                      ("async", c.is_async), ("fetch", c.accepts_fetch),
+                      ("speeds", c.accepts_speeds), ("tau", c.accepts_tau))
+                     if v]
+            print(f"{name:16s} [{', '.join(flags)}] {e.doc}")
+        return 0
+    if not args.sweep and not args.algo:
+        print("need --algo NAME, --sweep, or --list")
+        return 2
+
+    n = args.n or (64 if args.quick else 1000)
+    d = args.d or (8 if args.quick else 50)
+    workers = args.workers or (2 if args.quick else 4)
+    rounds = args.rounds or (3 if args.quick else 10)
+
+    if args.backend == "spmd":
+        # must precede the first jax operation (DESIGN.md §2); solve()
+        # would do this too, but the CLI forces the full sweep width once
+        from repro.core import spmd
+        spmd.force_host_devices(max(workers, 1))
+
+    from repro.config import ConvexConfig
+
+    cfg = ConvexConfig(problem=args.problem, n=n, d=d, seed=args.seed)
+    names = repro.algorithms() if args.sweep else [args.algo]
+    rows = []
+    for name in names:
+        spec, note = build_spec(args, name, workers, rounds)
+        res = repro.solve(spec, cfg)
+        rows.append(res.provenance())
+        print(f"{name:16s} backend={spec.backend:4s} p={spec.p} "
+              f"rounds={spec.rounds} eta={res.spec.eta:.3g} "
+              f"final rel-grad-norm {res.final_rel:.3e} "
+              f"[{res.wall_s:.2f}s]{note}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {len(rows)} provenance rows to {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,330 @@
+"""Unified solver API contracts (DESIGN.md §Solver API).
+
+Three layers of pins:
+
+  * registry completeness — every public ``run_*`` driver in the three
+    driver modules is reachable through exactly one registry entry, and
+    the capability records match observed behavior (impossible
+    combinations fail at ``RunSpec`` construction, before any JAX work,
+    with the offending field named);
+  * ``RunSpec`` round-trips through ``dataclasses.asdict`` -> rebuild;
+  * ``solve(RunSpec(...))`` reproduces every driver's direct-call
+    trajectory exactly — the unified entry point is pure dispatch, so all
+    existing vmap/spmd/host-loop pins transfer to it unchanged.
+"""
+import dataclasses
+import inspect
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro import REGISTRY, RunSpec, algorithms, runner, solve
+from repro.config import ConvexConfig
+from repro.core import baselines, centralvr, convex, distributed, solver
+
+
+def _sharded(p=2, n=32, d=6, kind="logistic"):
+    cfg = ConvexConfig(problem=kind, n=n, d=d, workers=p)
+    return distributed.make_distributed(jax.random.PRNGKey(0), cfg)
+
+
+def _prob(n=32, d=6):
+    return convex.make_logistic_data(jax.random.PRNGKey(0), n, d)
+
+
+# ---------------------------------------------------------------------------
+# Registry completeness
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_every_public_driver():
+    """Every public run_* entry point of the driver modules is some
+    registry entry's resolved runner — adding a driver without a registry
+    entry (or retiring one without cleaning up) fails here."""
+    public = set()
+    for mod in (centralvr, distributed, baselines):
+        for name, fn in inspect.getmembers(mod, inspect.isfunction):
+            if (name == "run" or name.startswith("run_")) \
+                    and fn.__module__ == mod.__name__:
+                public.add(fn)
+    registered = {runner(name) for name in algorithms()}
+    assert registered == public, (
+        "registry out of sync with the public run_* surface: "
+        f"unregistered={[f.__qualname__ for f in public - registered]}, "
+        f"stale={[f.__qualname__ for f in registered - public]}")
+    assert len(algorithms()) == 11
+
+
+def test_registry_names_are_the_papers_family():
+    assert set(algorithms()) == {
+        "centralvr", "centralvr_sync", "centralvr_async", "dsvrg", "dsaga",
+        "sgd", "svrg", "saga", "dist_sgd", "easgd", "ps_svrg"}
+
+
+# ---------------------------------------------------------------------------
+# Spec validation matches the capability records (fails pre-JAX,
+# naming the offending field)
+# ---------------------------------------------------------------------------
+
+def test_unknown_algo_names_field_and_registry():
+    with pytest.raises(ValueError, match=r"RunSpec\.algo.*centralvr_sync"):
+        RunSpec(algo="centralvr2")
+
+
+def test_spmd_on_non_spmd_algo_raises_at_spec_build():
+    for algo in algorithms():
+        caps = REGISTRY[algo].caps
+        if caps.spmd_ok:
+            continue
+        with pytest.raises(NotImplementedError, match=r"RunSpec\.backend"):
+            RunSpec(algo=algo, backend="spmd")
+
+
+def test_unknown_backend_keeps_error_contract():
+    with pytest.raises(ValueError, match="unknown backend"):
+        RunSpec(algo="centralvr_sync", p=2, backend="pmap")
+
+
+def test_instant_fetch_plus_spmd_raises_at_spec_build():
+    with pytest.raises(NotImplementedError, match="event-serial"):
+        RunSpec(algo="dsaga", p=2, backend="spmd", fetch="instant")
+    with pytest.raises(ValueError, match="unknown fetch"):
+        RunSpec(algo="dsaga", p=2, fetch="bogus")
+
+
+def test_fetch_default_resolution():
+    assert RunSpec(algo="dsaga", p=2).fetch == "instant"
+    assert RunSpec(algo="dsaga", p=2, backend="spmd").fetch == "stale"
+    # only D-SAGA exposes the discipline
+    with pytest.raises(ValueError, match=r"RunSpec\.fetch"):
+        RunSpec(algo="centralvr_async", p=2, fetch="stale")
+
+
+def test_speeds_rejected_for_sync_algos():
+    for algo in algorithms():
+        caps = REGISTRY[algo].caps
+        if caps.accepts_speeds:
+            continue
+        with pytest.raises(ValueError, match=r"RunSpec\.speeds"):
+            RunSpec(algo=algo, p=2 if caps.distributed else 1,
+                    speeds=(1.0, 2.0))
+
+
+def test_speeds_shape_and_sign_validated():
+    with pytest.raises(ValueError, match=r"RunSpec\.speeds.*p=3"):
+        RunSpec(algo="centralvr_async", p=3, speeds=(1.0, 2.0))
+    with pytest.raises(ValueError, match=r"RunSpec\.speeds"):
+        RunSpec(algo="centralvr_async", p=2, speeds=(1.0, -2.0))
+
+
+def test_tau_rejected_where_meaningless():
+    for algo in algorithms():
+        caps = REGISTRY[algo].caps
+        if caps.accepts_tau:
+            continue
+        with pytest.raises(ValueError, match=r"RunSpec\.tau"):
+            RunSpec(algo=algo, p=2 if caps.distributed else 1, tau=7)
+
+
+def test_single_worker_algos_reject_p():
+    for algo in algorithms():
+        if REGISTRY[algo].caps.distributed:
+            continue
+        with pytest.raises(ValueError, match=r"RunSpec\.p"):
+            RunSpec(algo=algo, p=2)
+
+
+def test_scalar_field_validation():
+    with pytest.raises(ValueError, match=r"RunSpec\.rounds"):
+        RunSpec(algo="sgd", rounds=0)
+    with pytest.raises(ValueError, match=r"RunSpec\.eta"):
+        RunSpec(algo="sgd", eta=-0.1)
+    with pytest.raises(ValueError, match=r"RunSpec\.metric_every"):
+        RunSpec(algo="sgd", metric_every=0)
+    with pytest.raises(ValueError, match=r"RunSpec\.sampling"):
+        RunSpec(algo="centralvr", sampling="bogus")
+    with pytest.raises(ValueError, match=r"RunSpec\.sampling"):
+        RunSpec(algo="sgd", sampling="uniform")
+    with pytest.raises(ValueError, match=r"RunSpec\.decay"):
+        RunSpec(algo="svrg", decay=0.5)
+
+
+def test_thin_wrappers_validate_via_spec():
+    """The run_* signatures stay, but their validation is a spec build:
+    the same invalid combinations fail identically both ways."""
+    sp = _sharded()
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="unknown backend"):
+        distributed.run_sync(sp, eta=0.1, rounds=1, key=key,
+                             backend="bogus")
+    with pytest.raises(ValueError, match=r"RunSpec\.speeds"):
+        distributed.run_async(sp, eta=0.1, rounds=1, key=key,
+                              speeds=[1.0, 2.0, 3.0])
+    with pytest.raises(ValueError, match=r"RunSpec\.rounds"):
+        baselines.run_sgd(_prob(), eta=0.1, epochs=0,
+                          key=key)
+    # eta is part of the shared contract too: both surfaces reject it
+    with pytest.raises(ValueError, match=r"RunSpec\.eta"):
+        distributed.run_sync(sp, eta=-0.1, rounds=1, key=key)
+    with pytest.raises(ValueError, match=r"RunSpec\.eta"):
+        baselines.run_saga(_prob(), eta=0.0, epochs=1, key=key)
+
+
+def test_runspec_roundtrips_through_asdict():
+    for spec in (
+        RunSpec(algo="centralvr_async", p=3, eta=0.05, rounds=7,
+                speeds=(1, 2, 3), seed=4, metric_every=2),
+        RunSpec(algo="dsaga", p=2, tau=50, fetch="stale"),
+        RunSpec(algo="centralvr", sampling="uniform"),
+        RunSpec(algo="easgd", p=4, tau=8, decay=0.1),
+    ):
+        rebuilt = RunSpec(**dataclasses.asdict(spec))
+        assert rebuilt == spec
+        assert isinstance(rebuilt.speeds, (tuple, type(None)))
+
+
+def test_lazy_package_export():
+    assert repro.solve is solver.solve
+    assert repro.RunSpec is solver.RunSpec
+    with pytest.raises(AttributeError):
+        repro.nonexistent_symbol
+
+
+# ---------------------------------------------------------------------------
+# solve() == the direct drivers, for every registry algorithm
+# ---------------------------------------------------------------------------
+
+def _direct(algo, problem, eta, rounds, key, tau):
+    """The pre-API call for each driver, normalized to (x, rels)."""
+    if algo == "centralvr":
+        st, rels, _ = centralvr.run(problem, eta=eta, epochs=rounds, key=key)
+        return st.x, rels
+    if algo == "centralvr_sync":
+        st, rels = distributed.run_sync(problem, eta=eta, rounds=rounds,
+                                        key=key)
+        return st.x, rels
+    if algo == "centralvr_async":
+        st, rels = distributed.run_async(problem, eta=eta, rounds=rounds,
+                                         key=key)
+        return st.x_c, rels
+    if algo == "dsvrg":
+        return distributed.run_dsvrg(problem, eta=eta, rounds=rounds,
+                                     key=key, tau=tau)
+    if algo == "dsaga":
+        st, rels = distributed.run_dsaga(problem, eta=eta, rounds=rounds,
+                                         key=key, tau=tau)
+        return st.x_c, rels
+    if algo == "sgd":
+        return baselines.run_sgd(problem, eta=eta, epochs=rounds, key=key)
+    if algo == "svrg":
+        return baselines.run_svrg(problem, eta=eta, epochs=rounds, key=key,
+                                  inner=tau)
+    if algo == "saga":
+        return baselines.run_saga(problem, eta=eta, epochs=rounds, key=key)
+    if algo == "dist_sgd":
+        return baselines.run_dist_sgd(problem, eta=eta, rounds=rounds,
+                                      key=key, tau=tau)
+    if algo == "easgd":
+        return baselines.run_easgd(problem, eta=eta, rounds=rounds, key=key,
+                                   tau=tau)
+    if algo == "ps_svrg":
+        return baselines.run_ps_svrg(problem, eta=eta, rounds=rounds,
+                                     key=key)
+    raise AssertionError(algo)
+
+
+@pytest.mark.parametrize("algo", sorted(
+    {"centralvr", "centralvr_sync", "centralvr_async", "dsvrg", "dsaga",
+     "sgd", "svrg", "saga", "dist_sgd", "easgd", "ps_svrg"}))
+def test_solve_matches_direct_driver(algo):
+    """solve(RunSpec(...)) is pure dispatch: bit-identical trajectory and
+    final iterate to calling the run_* driver directly with the same
+    problem, eta, and key — so every existing trajectory pin transfers."""
+    caps = REGISTRY[algo].caps
+    p = 2 if caps.distributed else 1
+    problem = _sharded(p=p) if caps.distributed else _prob()
+    merged = problem.merged() if caps.distributed else problem
+    eta, rounds, tau = convex.auto_eta(merged, 0.3), 2, 8
+    key = jax.random.PRNGKey(5)
+
+    spec = RunSpec(algo=algo, p=p, eta=eta, rounds=rounds, seed=5,
+                   **({"tau": tau} if caps.accepts_tau else {}))
+    res = solve(spec, problem)
+    x, rels = _direct(algo, problem, eta, rounds, key, tau)
+
+    np.testing.assert_array_equal(res.rels, np.asarray(rels))
+    np.testing.assert_array_equal(res.x, np.asarray(x))
+    assert res.spec.eta == eta
+    assert res.wall_s > 0.0
+    assert res.final_rel == float(np.asarray(rels)[-1])
+
+
+def test_solve_from_config_is_deterministic():
+    """A ConvexConfig input builds the dataset from cfg.seed: the same
+    spec + config always produces the same trajectory."""
+    cfg = ConvexConfig(problem="ridge", n=24, d=4)
+    spec = RunSpec(algo="centralvr_sync", p=2, rounds=2)
+    a = solve(spec, cfg)
+    b = solve(spec, cfg)
+    np.testing.assert_array_equal(a.rels, b.rels)
+    assert a.spec == b.spec
+    assert a.spec.eta is not None and a.spec.eta > 0
+
+
+def test_solve_topology_coercion():
+    """Flat Problem -> sharded for distributed algos; ShardedProblem ->
+    merged for single-worker algos; p mismatch is a spec error."""
+    prob = _prob(n=32)
+    res = solve(RunSpec(algo="centralvr_sync", p=2, rounds=1), prob)
+    assert res.rels.shape == (1,)
+    sp = _sharded(p=2)
+    res = solve(RunSpec(algo="sgd", rounds=1), sp)
+    assert res.rels.shape == (1,)
+    with pytest.raises(ValueError, match=r"RunSpec\.p"):
+        solve(RunSpec(algo="centralvr_sync", p=4, rounds=1), sp)
+    with pytest.raises(TypeError, match="ConvexConfig"):
+        solve(RunSpec(algo="sgd"), object())
+    # an explicitly conflicting cfg.workers is an error, not a silent
+    # override (cfg.workers=1, the default, defers to the spec)
+    with pytest.raises(ValueError, match=r"RunSpec\.p"):
+        solve(RunSpec(algo="centralvr_sync", p=2, rounds=1),
+              ConvexConfig(n=16, d=4, workers=8))
+    # single-worker algo + multi-worker cfg runs on the merged total data
+    res = solve(RunSpec(algo="sgd", rounds=1),
+                ConvexConfig(n=16, d=4, workers=2))
+    assert res.rels.shape == (1,)
+
+
+def test_metric_cadence_subsamples_with_final_round():
+    sp = _sharded(p=2)
+    eta = convex.auto_eta(sp.merged(), 0.3)
+    full = solve(RunSpec(algo="centralvr_sync", p=2, eta=eta, rounds=5), sp)
+    thin = solve(RunSpec(algo="centralvr_sync", p=2, eta=eta, rounds=5,
+                         metric_every=2), sp)
+    # rounds 2, 4 (cadence) + round 5 (final)
+    np.testing.assert_array_equal(thin.rels, full.rels[[1, 3, 4]])
+    assert thin.final_rel == full.final_rel
+    # grad_evals stays aligned with rels (rels[i] <-> grad_evals[i])
+    prob = _prob()
+    full = solve(RunSpec(algo="centralvr", rounds=5), prob)
+    thin = solve(RunSpec(algo="centralvr", rounds=5, metric_every=2), prob)
+    assert thin.grad_evals.shape == thin.rels.shape
+    np.testing.assert_array_equal(thin.grad_evals, full.grad_evals[[1, 3, 4]])
+
+
+def test_runresult_provenance_is_jsonable():
+    import json
+
+    res = solve(RunSpec(algo="saga", rounds=2),
+                ConvexConfig(problem="logistic", n=16, d=4))
+    row = res.provenance(tail=4)
+    encoded = json.dumps(row)
+    assert "saga" in encoded
+    assert row["spec"]["eta"] == res.spec.eta
+    assert row["rels_tail"][-1] == res.final_rel
+    assert row["rounds_recorded"] == 2
+    # traces reports the TRACES delta of THIS call (0 on a jit cache hit)
+    again = solve(RunSpec(algo="saga", rounds=2),
+                  ConvexConfig(problem="logistic", n=16, d=4))
+    assert again.traces == {}
