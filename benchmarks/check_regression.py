@@ -14,9 +14,20 @@ performance regression whatever absolute wall clock the runner has.  A
 missing or row-less artifact is itself a failure — a gate that silently
 passes because the bench never ran guards nothing.
 
+FUSED rows (``fused: true``, emitted by both benches as twins of their
+unfused configuration) are gated separately: ``speedup_vs_unfused`` must
+stay at or above the fused floor — a fused Pallas hot path slower than
+the unfused oracle it replaces means the kernel dispatch is a
+pessimization.  Rows with ``interpret: true`` (CPU emulation of the
+kernels — the only option off-TPU) are printed but EXEMPT: interpret
+mode measures the emulator, not the kernel, and the agreement tests
+already pin its numerics.  Fused rows are excluded from the legacy
+gates, which pin the unfused runtimes against the seed host paths.
+
     python benchmarks/check_regression.py [--path BENCH_drivers.json]
                                           [--train-path BENCH_train.json]
                                           [--floor 1.0]
+                                          [--fused-floor 1.0]
 
 Exit status 1 on regression — the benchmark-smoke CI job gates on it.
 """
@@ -54,6 +65,26 @@ def _gate(rows, speedup_key: str, floor: float, what: str):
     return bad
 
 
+def _gate_fused(rows, floor: float):
+    """Gate fused twin rows on ``speedup_vs_unfused``; interpret-mode
+    rows (CPU kernel emulation) are printed as exempt and not gated."""
+    bad = []
+    gated = 0
+    for r in rows:
+        speedup = r["speedup_vs_unfused"]
+        if r.get("interpret"):
+            print(f"{r['name']}: fused vs unfused {speedup:.2f}x warm "
+                  "[exempt: interpret]")
+            continue
+        gated += 1
+        status = "ok" if speedup >= floor else "REGRESSION"
+        print(f"{r['name']}: fused vs unfused {speedup:.2f}x warm "
+              f"[{status}]")
+        if speedup < floor:
+            bad.append(r["name"])
+    return bad, gated
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", default="BENCH_drivers.json",
@@ -63,28 +94,36 @@ def main(argv=None) -> int:
     ap.add_argument("--floor", type=float, default=1.0,
                     help="minimum acceptable warm speedup over the seed "
                          "host path")
+    ap.add_argument("--fused-floor", type=float, default=1.0,
+                    help="minimum acceptable fused-vs-unfused warm speedup "
+                         "(compiled-backend rows only; interpret exempt)")
     args = ap.parse_args(argv)
 
     failed = False
+    fused_rows = []
 
     rows = _load_rows(args.path)
     if rows is None:
         failed = True
     else:
-        bad = _gate(rows, "speedup_warm", args.floor, "scan vs host loop")
+        fused_rows += [r for r in rows if r.get("fused")]
+        legacy = [r for r in rows if not r.get("fused")]
+        bad = _gate(legacy, "speedup_warm", args.floor, "scan vs host loop")
         if bad:
             print(f"speedup below {args.floor:.2f}x floor for: "
                   f"{', '.join(bad)}", file=sys.stderr)
             failed = True
         else:
-            print(f"all {len(rows)} drivers at or above the "
+            print(f"all {len(legacy)} drivers at or above the "
                   f"{args.floor:.2f}x floor")
 
     rows = _load_rows(args.train_path)
     if rows is None:
         failed = True
     else:
-        scan = [r for r in rows if r["path"].startswith("scan-")]
+        fused_rows += [r for r in rows if r.get("fused")]
+        scan = [r for r in rows
+                if r["path"].startswith("scan-") and not r.get("fused")]
         if not scan:
             print(f"{args.train_path} has no scan-path rows",
                   file=sys.stderr)
@@ -99,6 +138,18 @@ def main(argv=None) -> int:
             else:
                 print(f"all {len(scan)} train scan paths at or above the "
                       f"{args.floor:.2f}x floor")
+
+    if fused_rows:
+        bad, gated = _gate_fused(fused_rows, args.fused_floor)
+        if bad:
+            print(f"fused speedup below {args.fused_floor:.2f}x floor "
+                  f"for: {', '.join(bad)}", file=sys.stderr)
+            failed = True
+        else:
+            exempt = len(fused_rows) - gated
+            print(f"all {gated} gated fused rows at or above the "
+                  f"{args.fused_floor:.2f}x floor ({exempt} interpret-mode "
+                  "rows exempt)")
 
     return 1 if failed else 0
 

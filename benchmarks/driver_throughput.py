@@ -7,6 +7,14 @@ one ``repro.solve(RunSpec(...))`` call, and every artifact row embeds the
 ``RunResult.provenance()`` record (resolved spec + rels tail), so the
 artifact states exactly what configuration produced it.
 
+Selected rows also get a FUSED TWIN (``-fused`` suffix): the same spec
+with ``fused=True``, routing the VR inner loop through the Pallas
+``vr_update`` kernel. Twin rows carry ``fused``/``interpret`` flags and
+``speedup_vs_unfused`` (warm unfused / warm fused); ``check_regression``
+gates that ratio at the 1.0x floor on compiled Pallas backends
+(interpret-mode rows — CPU — are exempt: emulating a kernel is not the
+configuration the gate protects).
+
 For each worker count p we measure, on CPU:
 
   * cold wall clock (first invocation — includes jit compilation; the
@@ -24,6 +32,7 @@ scan beats host loop on wall clock at p=8) plus the standard results CSV.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 
@@ -66,6 +75,33 @@ def _bench_pair(name, spec, problem, loop_fn, epochs, repeat):
     }
 
 
+def _fused_twin(base_row, spec, problem, epochs, repeat):
+    """The same run with fused=True, measured against its unfused twin."""
+    from repro import kernels
+
+    _, interpret = kernels.resolve_fused(True)
+    fspec = dataclasses.replace(spec, fused=True)
+    cold, warm, res = timed_cold_warm(
+        lambda: solve(fspec, problem), repeat=repeat)
+    speedup = base_row["scan_warm_s"] / warm
+    return {
+        "name": base_row["name"] + "-fused",
+        "us_per_call": warm * 1e6,
+        "fused": True,
+        "interpret": interpret,
+        "scan_cold_s": cold,
+        "scan_warm_s": warm,
+        "scan_compile_s": max(cold - warm, 0.0),
+        "unfused_warm_s": base_row["scan_warm_s"],
+        "scan_epochs_per_s": epochs / warm,
+        "speedup_vs_unfused": speedup,
+        "provenance": res.provenance(),
+        "derived": (f"fused:cold={cold:.3f}s,warm={warm:.3f}s;"
+                    f"vs_unfused={speedup:.2f}x;"
+                    f"interpret={interpret}"),
+    }
+
+
 def run(quick: bool = False):
     n, d = (128, 16) if quick else (256, 64)
     rounds = 4 if quick else 8
@@ -77,25 +113,30 @@ def run(quick: bool = False):
         if p == 1:
             prob = convex.make_logistic_data(jax.random.PRNGKey(2), n, d)
             eta = convex.auto_eta(prob, 0.3)
+            spec = RunSpec(algo="centralvr", eta=eta, rounds=rounds)
             rows.append(_bench_pair(
-                "drivers/centralvr-p1",
-                RunSpec(algo="centralvr", eta=eta, rounds=rounds), prob,
+                "drivers/centralvr-p1", spec, prob,
                 lambda: host_loop.run(prob, eta=eta, epochs=rounds, key=key),
                 rounds, repeat))
+            rows.append(_fused_twin(rows[-1], spec, prob, rounds, repeat))
             continue
         cfg = ConvexConfig(problem="logistic", n=n, d=d, workers=p)
         sp = distributed.make_distributed(jax.random.PRNGKey(2), cfg)
         eta = convex.auto_eta(sp.merged(), 0.3)
+        spec = RunSpec(algo="centralvr_sync", p=p, eta=eta, rounds=rounds)
         rows.append(_bench_pair(
-            f"drivers/sync-p{p}",
-            RunSpec(algo="centralvr_sync", p=p, eta=eta, rounds=rounds), sp,
+            f"drivers/sync-p{p}", spec, sp,
             lambda: host_loop.run_sync(sp, eta=eta, rounds=rounds, key=key),
             rounds, repeat))
+        if p == max(WORKER_COUNTS):
+            rows.append(_fused_twin(rows[-1], spec, sp, rounds, repeat))
+        spec = RunSpec(algo="centralvr_async", p=p, eta=eta, rounds=rounds)
         rows.append(_bench_pair(
-            f"drivers/async-p{p}",
-            RunSpec(algo="centralvr_async", p=p, eta=eta, rounds=rounds), sp,
+            f"drivers/async-p{p}", spec, sp,
             lambda: host_loop.run_async(sp, eta=eta, rounds=rounds, key=key),
             rounds, repeat))
+        if p == max(WORKER_COUNTS):
+            rows.append(_fused_twin(rows[-1], spec, sp, rounds, repeat))
 
     p8 = [r for r in rows if r["name"].endswith("-p8")]
     beats = all(r["speedup_warm"] > 1.0 for r in p8)

@@ -43,10 +43,11 @@ def main(argv=None) -> None:
         "tau": tau_sweep.run,
         "variance": variance.run,
         "drivers": driver_throughput.run,
-        # subprocess suites: force their own multi-device host platform
+        # subprocess suites: own interpreter (forced multi-device host
+        # platform, or — roofline — a fresh jax for the vr-traffic check)
         "spmd": spmd_scaling.run_isolated,
         "train": train_throughput.run_isolated,
-        "roofline": roofline_report.run,
+        "roofline": roofline_report.run_isolated,
     }
     only = [s for s in args.only.split(",") if s]
     failures = []

@@ -18,7 +18,15 @@ epoch (M*K steps) four ways:
     stacked on one device, batches generated on device inside the scan
     (warm calls hit the jit cache: one executable per config, ever);
   * ``scan-spmd``   — the same epoch scan under shard_map with one
-    worker per (CPU-simulated) device.
+    worker per (CPU-simulated) device;
+  * ``scan-vmap-fused`` — the vmap epoch scan with ``fused=True``: model
+    forward through the Pallas rmsnorm/flash-attention kernels and the
+    VR correction + SGD update through the single-launch ``vr_update``
+    kernel. Fused rows carry ``fused``/``interpret`` flags and
+    ``speedup_vs_unfused`` (warm scan-vmap / warm fused) for the
+    ``check_regression`` fused gate; on CPU the kernels run in interpret
+    mode, so those rows are gate-exempt (and excluded from the legacy
+    scan-vs-host gate, which pins the unfused runtime).
 
 Writes ``BENCH_train.json`` at the repo root (the acceptance artifact:
 warm epoch-scan steps/sec >= 3x the host-loop path at W=4) plus the
@@ -164,6 +172,10 @@ def run(quick: bool = False):
             if backend == "spmd":
                 state = tstep.place_train_state(state, meta["mesh"])
             paths[f"scan-{backend}"] = _chained(run_epoch, state)
+        frun, fmeta = tstep.make_epoch_runner(cfg, tcfg, W, backend="vmap",
+                                              fused=True)
+        fstate = tstep.init_train_state(cfg, tcfg, jax.random.PRNGKey(0), W)
+        paths["scan-vmap-fused"] = _chained(frun, fstate)
         for name, fn in paths.items():
             cold, warm, losses = timed_cold_warm(fn, repeat=repeat)
             warm_by[(name, W)] = warm
@@ -171,10 +183,13 @@ def run(quick: bool = False):
             # solver-driven artifacts): the resolved configuration that
             # produced this measurement + the last timed epoch's loss tail
             loss_tail = np.atleast_1d(np.asarray(losses, dtype=float))
+            fused = name == "scan-vmap-fused"
             rows.append({
                 "name": f"train_throughput/{name}-w{W}",
                 "path": name,
                 "workers": W,
+                **({"fused": True, "interpret": fmeta["interpret"]}
+                   if fused else {}),
                 "us_per_call": warm * 1e6,
                 "cold_s": cold,
                 "warm_s": warm,
@@ -196,6 +211,12 @@ def run(quick: bool = False):
         host = warm_by[("host", r["workers"])]
         r["speedup_vs_host"] = host / r["warm_s"]
         r["derived"] += f",vs_host={r['speedup_vs_host']:.1f}x"
+        if r.get("fused"):
+            unfused = warm_by[("scan-vmap", r["workers"])]
+            r["unfused_warm_s"] = unfused
+            r["speedup_vs_unfused"] = unfused / r["warm_s"]
+            r["derived"] += (f",vs_unfused={r['speedup_vs_unfused']:.2f}x,"
+                             f"interpret={r['interpret']}")
     scan_3x = warm_by[("host", 4)] / warm_by[("scan-vmap", 4)] >= 3.0
 
     payload = {
@@ -204,7 +225,7 @@ def run(quick: bool = False):
                    "vr": tcfg.vr, "table_size": M,
                    "steps_per_epoch": E, "workers": list(WORKER_COUNTS),
                    "paths": ["host", "host-steady", "scan-vmap",
-                             "scan-spmd"],
+                             "scan-spmd", "scan-vmap-fused"],
                    "quick": quick, "device_count": jax.device_count(),
                    "backend_platform": jax.default_backend()},
         "rows": rows,

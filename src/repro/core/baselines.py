@@ -59,14 +59,21 @@ def run_sgd(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     return _sgd_scan(prob, x, g0, keys, etas)
 
 
-@functools.partial(jax.jit, static_argnames=("inner",),
+@functools.partial(jax.jit, static_argnames=("inner", "fused"),
                    donate_argnames=("x",))
-def _svrg_scan(prob: Problem, x, eta, g0, keys, inner: int):
+def _svrg_scan(prob: Problem, x, eta, g0, keys, inner: int, fused=None):
     def one_epoch(x, k):
         runtime.TRACES["svrg_epoch"] += 1
         xbar = x
         gbar = convex.full_grad(prob, xbar)
         idx = jax.random.randint(k, (inner,), 0, prob.n)
+
+        if fused is not None:
+            from repro.core import fused as fusedmod
+            sbar = convex.scalar_residual_all(prob, xbar)
+            x = fusedmod.svrg_steps(prob.A, prob.b, prob.kind, xbar, sbar,
+                                    gbar, idx, fused)
+            return x, convex.rel_grad_norm(prob, x, g0)
 
         def body(x, i):
             g = ((convex.scalar_residual(prob, x, i)
@@ -81,28 +88,38 @@ def _svrg_scan(prob: Problem, x, eta, g0, keys, inner: int):
 
 
 def run_svrg(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
-             inner: int = 0):
+             inner: int = 0, fused=False):
     """SVRG [17]: snapshot + full gradient every epoch; update (3).
     Gradient evaluations per outer epoch: n (full grad) + 2*inner.
     Validation is a ``solver.RunSpec`` build (``inner`` maps onto the
     spec's ``tau`` axis — DESIGN.md §Solver API)."""
+    from repro.core import fused as fusedmod
     from repro.core import solver
-    solver.RunSpec(algo="svrg", eta=float(eta), rounds=epochs,
-                   tau=inner or None)
+    spec = solver.RunSpec(algo="svrg", eta=float(eta), rounds=epochs,
+                          tau=inner or None, fused=fused)
+    fused_t = fusedmod.make_params(spec.fused, eta, prob.lam)
     inner = inner or prob.n
     x = jnp.zeros((prob.d,))
     g0 = convex.grad_norm0(prob)
     keys = jax.random.split(key, epochs)
     # grad evals per epoch: n + 2*inner (3n at inner=n)
-    return _svrg_scan(prob, x, eta, g0, keys, inner)
+    return _svrg_scan(prob, x, eta, g0, keys, inner, fused=fused_t)
 
 
-@functools.partial(jax.jit, donate_argnames=("carry",))
-def _saga_scan(prob: Problem, carry, eta, g0, keys):
+@functools.partial(jax.jit, static_argnames=("fused",),
+                   donate_argnames=("carry",))
+def _saga_scan(prob: Problem, carry, eta, g0, keys, fused=None):
     def one_epoch(carry, k):
         runtime.TRACES["saga_epoch"] += 1
         x, table, gbar = carry
         idx = jax.random.randint(k, (prob.n,), 0, prob.n)
+
+        if fused is not None:
+            from repro.core import fused as fusedmod
+            x, table, gbar = fusedmod.saga_steps(
+                prob.A, prob.b, prob.kind, x, table, gbar, prob.n, idx,
+                fused)
+            return (x, table, gbar), convex.rel_grad_norm(prob, x, g0)
 
         def body(carry, i):
             x, table, gbar = carry
@@ -119,19 +136,23 @@ def _saga_scan(prob: Problem, carry, eta, g0, keys):
     return jax.lax.scan(one_epoch, carry, keys)
 
 
-def run_saga(prob: Problem, *, eta: float, epochs: int, key: jax.Array):
+def run_saga(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+             fused=False):
     """SAGA [12]: update (4), table mean refreshed every iteration.
     1 gradient evaluation per iteration; table init at x0.
     Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
+    from repro.core import fused as fusedmod
     from repro.core import solver
-    solver.RunSpec(algo="saga", eta=float(eta), rounds=epochs)
+    spec = solver.RunSpec(algo="saga", eta=float(eta), rounds=epochs,
+                          fused=fused)
+    fused_t = fusedmod.make_params(spec.fused, eta, prob.lam)
     x = jnp.zeros((prob.d,))
     g0 = convex.grad_norm0(prob)
     table = convex.scalar_residual_all(prob, x)
     gbar = convex.data_grad_from_scalars(prob, table)
     keys = jax.random.split(key, epochs)
     (x, table, gbar), rels = _saga_scan(prob, (x, table, gbar), eta, g0,
-                                        keys)
+                                        keys, fused=fused_t)
     return x, rels
 
 

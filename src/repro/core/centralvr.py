@@ -63,13 +63,24 @@ def init_state(prob: Problem, eta: float, key: jax.Array,
 # ---------------------------------------------------------------------------
 
 def epoch(prob: Problem, state: VRState, eta: float, order: jax.Array,
-          *, track_iterates: bool = False):
+          *, track_iterates: bool = False, fused=None):
     """Run n CentralVR updates visiting ``order`` (a permutation for the
     practical variant, i.i.d. uniform draws for the Theorem-1 variant).
 
     Returns the new state (gbar <- gtilde per line 11) and, optionally, the
     iterate trajectory for Lyapunov-function measurements.
+
+    ``fused``: static kernel params from :func:`fused.make_params`, or
+    ``None`` for the unfused oracle body.  The fused path runs the
+    correction + step + accumulator write as one ``vr_update`` launch per
+    step (DESIGN.md §Fused kernels hot-path); eta rides in the params.
     """
+    if fused is not None:
+        from repro.core import fused as fusedmod
+        x, table, acc, traj = fusedmod.centralvr_epoch(
+            prob.A, prob.b, prob.kind, state.x, state.table, state.gbar,
+            order, fused, track=track_iterates)
+        return VRState(x=x, table=table, gbar=acc), traj
 
     def body(carry, i):
         x, table, acc = carry
@@ -90,9 +101,16 @@ def epoch(prob: Problem, state: VRState, eta: float, order: jax.Array,
 
 
 def epoch_uniform(prob: Problem, state: VRState, eta: float, key: jax.Array,
-                  *, track_iterates: bool = False):
+                  *, track_iterates: bool = False, fused=None):
     """Theorem-1 regime: i.i.d. uniform sampling, gbar refreshed from table."""
     idx = jax.random.randint(key, (prob.n,), 0, prob.n)
+    if fused is not None:
+        from repro.core import fused as fusedmod
+        x, table, _, traj = fusedmod.centralvr_epoch(
+            prob.A, prob.b, prob.kind, state.x, state.table, state.gbar,
+            idx, fused, track=track_iterates)
+        gbar_next = convex.data_grad_from_scalars(prob, table)
+        return VRState(x=x, table=table, gbar=gbar_next), traj
 
     def body(carry, i):
         x, table = carry
@@ -111,9 +129,10 @@ def epoch_uniform(prob: Problem, state: VRState, eta: float, key: jax.Array,
 # Driver
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("sampling",),
+@functools.partial(jax.jit, static_argnames=("sampling", "fused"),
                    donate_argnames=("state",))
-def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str):
+def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str,
+              fused=None):
     """The whole Algorithm-1 run as one executable: a scan over epochs with
     the relative-grad-norm metric computed on device.  ``state`` is donated
     so the (n,) table and (d,) iterate/gbar update in place."""
@@ -122,9 +141,9 @@ def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str):
         runtime.TRACES["centralvr_epoch"] += 1
         if sampling == "permutation":
             order = jax.random.permutation(k, prob.n)
-            new_state, _ = epoch(prob, state, eta, order)
+            new_state, _ = epoch(prob, state, eta, order, fused=fused)
         else:
-            new_state, _ = epoch_uniform(prob, state, eta, k)
+            new_state, _ = epoch_uniform(prob, state, eta, k, fused=fused)
         rel = convex.rel_grad_norm(prob, new_state.x, g0)
         return new_state, rel
 
@@ -133,7 +152,7 @@ def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str):
 
 def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
         sampling: str = "permutation", x0: Optional[jax.Array] = None,
-        backend: str = "vmap", mesh=None):
+        backend: str = "vmap", mesh=None, fused=False):
     """Full Algorithm 1. Returns (final state, per-epoch relative grad norms,
     gradient-evaluation counts). 1 gradient evaluation per iteration
     (Table 1 row 'CentralVR'), plus the n initialization evaluations.
@@ -147,17 +166,21 @@ def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
 
     Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API).
     """
+    from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(algo="centralvr", eta=float(eta), rounds=epochs,
-                          backend=backend, sampling=sampling)
+                          backend=backend, sampling=sampling, fused=fused)
     if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_centralvr(prob, eta=eta, epochs=epochs, key=key,
-                                  sampling=sampling, x0=x0, mesh=mesh)
+                                  sampling=sampling, x0=x0, mesh=mesh,
+                                  fused=fused)
+    fused_t = fusedmod.make_params(spec.fused, eta, prob.lam)
     k_init, k_run = jax.random.split(key)
     state = init_state(prob, eta, k_init, x0=x0)
     g0 = convex.grad_norm0(prob)
     keys = jax.random.split(k_run, epochs)
-    state, rels = _run_scan(prob, state, eta, g0, keys, sampling)
+    state, rels = _run_scan(prob, state, eta, g0, keys, sampling,
+                            fused=fused_t)
     grad_evals = prob.n * jnp.arange(2, epochs + 2)
     return state, rels, grad_evals

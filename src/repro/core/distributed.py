@@ -123,8 +123,18 @@ def make_distributed(key, cfg) -> ShardedProblem:
 # Local epoch primitives (vmapped over the worker axis)
 # ---------------------------------------------------------------------------
 
-def _local_centralvr_epoch(A, b, lam, kind, x, table, gbar, eta, perm):
-    """One CentralVR epoch on one worker's shard (Alg 2 lines 6-12)."""
+def _local_centralvr_epoch(A, b, lam, kind, x, table, gbar, eta, perm,
+                           fused=None):
+    """One CentralVR epoch on one worker's shard (Alg 2 lines 6-12).
+
+    ``fused``: static kernel params from ``fused.make_params`` — routes
+    the per-step update through the ``vr_update`` Pallas kernel (one
+    launch per step) instead of the unfused oracle body."""
+    if fused is not None:
+        from repro.core import fused as fusedmod
+        x, table, acc, _ = fusedmod.centralvr_epoch(
+            A, b, kind, x, table, gbar, perm, fused)
+        return x, table, acc
     prob = Problem(A, b, lam, kind)
     ns = A.shape[0]
 
@@ -179,27 +189,29 @@ def sync_init(sp: ShardedProblem, eta: float, key: jax.Array) -> SyncState:
     return SyncState(x=xs.mean(0), tables=tables, gbar=accs.mean(0))
 
 
-def sync_round(sp: ShardedProblem, st: SyncState, eta: float, key: jax.Array
-               ) -> SyncState:
+def sync_round(sp: ShardedProblem, st: SyncState, eta: float, key: jax.Array,
+               fused=None) -> SyncState:
     """One communication round: a full local epoch everywhere, then the
     central average of (x, gbar) — Algorithm 2 lines 4-18."""
     keys = jax.random.split(key, sp.p)
     perms = jax.vmap(lambda k: jax.random.permutation(k, sp.ns))(keys)
     xs, tables, accs = jax.vmap(
         lambda A, b, table, perm: _local_centralvr_epoch(
-            A, b, sp.lam, sp.kind, st.x, table, st.gbar, eta, perm)
+            A, b, sp.lam, sp.kind, st.x, table, st.gbar, eta, perm,
+            fused=fused)
     )(sp.A, sp.b, st.tables, perms)
     # central node: average x and gbar (lines 16-18); on a pod: pmean
     return SyncState(x=xs.mean(0), tables=tables, gbar=accs.mean(0))
 
 
-@functools.partial(jax.jit, donate_argnames=("st",))
-def _sync_scan(sp: ShardedProblem, st: SyncState, eta, g0, keys):
+@functools.partial(jax.jit, static_argnames=("fused",),
+                   donate_argnames=("st",))
+def _sync_scan(sp: ShardedProblem, st: SyncState, eta, g0, keys, fused=None):
     merged = sp.merged()
 
     def step(st, k):
         runtime.TRACES["sync_round"] += 1
-        st = sync_round(sp, st, eta, k)
+        st = sync_round(sp, st, eta, k, fused=fused)
         rel = convex.rel_grad_norm(merged, st.x, g0)
         return st, rel
 
@@ -207,7 +219,7 @@ def _sync_scan(sp: ShardedProblem, st: SyncState, eta, g0, keys):
 
 
 def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-             backend: str = "vmap", mesh=None):
+             backend: str = "vmap", mesh=None, fused=False):
     """Algorithm 2 end to end: one jitted scan over communication rounds,
     metric on device, state donated (DESIGN.md §3).
 
@@ -218,17 +230,20 @@ def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     Thin wrapper contract (DESIGN.md §Solver API): argument validation is
     a ``solver.RunSpec`` build, so this signature and ``solve()`` fail
     identically on invalid combinations."""
+    from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(algo="centralvr_sync", p=sp.p, eta=float(eta),
-                          rounds=rounds, backend=backend)
+                          rounds=rounds, backend=backend, fused=fused)
     if spec.backend == "spmd":
         from repro.core import spmd
-        return spmd.run_sync(sp, eta=eta, rounds=rounds, key=key, mesh=mesh)
+        return spmd.run_sync(sp, eta=eta, rounds=rounds, key=key, mesh=mesh,
+                             fused=fused)
+    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam)
     k_init, k_run = jax.random.split(key)
     st = sync_init(sp, eta, k_init)
     g0 = convex.grad_norm0(sp.merged())
     keys = jax.random.split(k_run, rounds)
-    return _sync_scan(sp, st, eta, g0, keys)
+    return _sync_scan(sp, st, eta, g0, keys, fused=fused_t)
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +276,7 @@ def async_init(sp: ShardedProblem, eta: float, key: jax.Array) -> AsyncState:
 
 
 def async_event(sp: ShardedProblem, st: AsyncState, s, eta: float,
-                key: jax.Array) -> AsyncState:
+                key: jax.Array, fused=None) -> AsyncState:
     """Worker s completes one local epoch computed from its stale fetch,
     sends (dx, dgbar); the central node applies x += dx/p (Alg 3 l.18-21);
     the worker then fetches the fresh central state.
@@ -275,7 +290,8 @@ def async_event(sp: ShardedProblem, st: AsyncState, s, eta: float,
     perm = jax.random.permutation(key, sp.ns)
     x_new, table, gtilde = _local_centralvr_epoch(
         sp.A[s], sp.b[s], sp.lam, sp.kind,
-        st.x_fetch[s], st.tables[s], st.gbar_fetch[s], eta, perm)
+        st.x_fetch[s], st.tables[s], st.gbar_fetch[s], eta, perm,
+        fused=fused)
     dx = x_new - st.x_old[s]
     dg = gtilde - st.gbar_old[s]
     x_c = st.x_c + alpha * dx
@@ -290,8 +306,10 @@ def async_event(sp: ShardedProblem, st: AsyncState, s, eta: float,
     )
 
 
-@functools.partial(jax.jit, donate_argnames=("st",))
-def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys):
+@functools.partial(jax.jit, static_argnames=("fused",),
+                   donate_argnames=("st",))
+def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys,
+                fused=None):
     """The full event schedule in one executable: an outer scan over rounds
     (emitting the metric every p events, as the host loop did) nests an
     inner scan over each round's p events.  The worker index is TRACED —
@@ -304,7 +322,7 @@ def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys):
         def one_event(st, sk):
             runtime.TRACES["async_event"] += 1
             s, k = sk
-            return async_event(sp, st, s, eta, k), None
+            return async_event(sp, st, s, eta, k, fused=fused), None
 
         st, _ = jax.lax.scan(one_event, st, (sched_row, key_row))
         rel = convex.rel_grad_norm(merged, st.x_c, g0)
@@ -314,7 +332,7 @@ def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys):
 
 
 def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              speeds=None, backend: str = "vmap", mesh=None):
+              speeds=None, backend: str = "vmap", mesh=None, fused=False):
     """``rounds`` epochs per worker. ``speeds``: optional per-worker relative
     speeds; faster workers fire proportionally more events (heterogeneous
     cluster simulation). Default: round-robin (staleness p-1).
@@ -333,31 +351,34 @@ def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     float32 tolerance (pinned by ``tests/test_spmd_backend.py``).
 
     Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
+    from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(
         algo="centralvr_async", p=sp.p, eta=float(eta), rounds=rounds,
-        backend=backend,
+        backend=backend, fused=fused,
         speeds=None if speeds is None else tuple(float(s) for s in speeds))
     if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_async(sp, eta=eta, rounds=rounds, key=key,
-                              speeds=spec.speeds, mesh=mesh)
+                              speeds=spec.speeds, mesh=mesh, fused=fused)
+    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam)
     k_init, k_run = jax.random.split(key)
     st = async_init(sp, eta, k_init)
     g0 = convex.grad_norm0(sp.merged())
     schedule = runtime.event_schedule(sp.p, rounds, spec.speeds)
     keys = jax.random.split(k_run, schedule.size)
     sched, keys = runtime.per_round(schedule, keys, sp.p)
-    return _async_scan(sp, st, eta, g0, jnp.asarray(sched), keys)
+    return _async_scan(sp, st, eta, g0, jnp.asarray(sched), keys,
+                       fused=fused_t)
 
 
 # ---------------------------------------------------------------------------
 # Distributed SVRG (Algorithm 4)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("tau",),
+@functools.partial(jax.jit, static_argnames=("tau", "fused"),
                    donate_argnames=("x",))
-def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int):
+def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int, fused=None):
     merged = sp.merged()
 
     def round_(x, k):
@@ -368,6 +389,12 @@ def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int):
         def local(A, b, kk):
             prob = Problem(A, b, sp.lam, sp.kind)
             idx = jax.random.randint(kk, (tau,), 0, sp.ns)
+
+            if fused is not None:
+                from repro.core import fused as fusedmod
+                sbar = convex.scalar_residual_all(prob, xbar)
+                return fusedmod.svrg_steps(A, b, sp.kind, xbar, sbar, gbar,
+                                           idx, fused)
 
             def body(xl, i):
                 g = (convex.scalar_residual(prob, xl, i) * A[i]
@@ -387,7 +414,7 @@ def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int):
 
 
 def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              tau: int = 0, backend: str = "vmap", mesh=None):
+              tau: int = 0, backend: str = "vmap", mesh=None, fused=False):
     """tau local steps from the shared snapshot (default tau = 2*ns, the
     paper's recommendation from [17]); gbar = full gradient at the snapshot
     (the synchronization step); then average x across workers.
@@ -396,18 +423,21 @@ def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     device and the averages/sync gradient become collectives.
 
     Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
+    from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(algo="dsvrg", p=sp.p, eta=float(eta),
-                          rounds=rounds, backend=backend, tau=tau or None)
+                          rounds=rounds, backend=backend, tau=tau or None,
+                          fused=fused)
     if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_dsvrg(sp, eta=eta, rounds=rounds, key=key, tau=tau,
-                              mesh=mesh)
+                              mesh=mesh, fused=fused)
+    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam)
     tau = tau or 2 * sp.ns
     x = jnp.zeros((sp.d,))
     g0 = convex.grad_norm0(sp.merged())
     keys = jax.random.split(key, rounds)
-    return _dsvrg_scan(sp, x, eta, g0, keys, tau)
+    return _dsvrg_scan(sp, x, eta, g0, keys, tau, fused=fused_t)
 
 
 # ---------------------------------------------------------------------------
@@ -422,12 +452,18 @@ class DSagaState(NamedTuple):
     gbar_old: jax.Array   # (p, d) — literal mode: previous local final gbar
 
 
-def _local_saga_steps(A, b, lam, kind, x, table, gbar, eta, n_global, idx):
+def _local_saga_steps(A, b, lam, kind, x, table, gbar, eta, n_global, idx,
+                      fused=None):
     """tau local SAGA steps on one worker's shard (Alg 5 lines 5-11): VR
     step from the scalar table, running-mean gbar update with the GLOBAL
     1/n scaling (line 9, §5.2).  The single spelling shared by both fetch
     disciplines and the spmd wave runner — the vmap-vs-spmd agreement
-    pins rely on these being the same arithmetic."""
+    pins rely on these being the same arithmetic (and, when ``fused`` is
+    set, the same single-launch kernel step)."""
+    if fused is not None:
+        from repro.core import fused as fusedmod
+        return fusedmod.saga_steps(A, b, kind, x, table, gbar, n_global,
+                                   idx, fused)
     prob = Problem(A, b, lam, kind)
 
     def body(carry, i):
@@ -443,7 +479,8 @@ def _local_saga_steps(A, b, lam, kind, x, table, gbar, eta, n_global, idx):
 
 
 def dsaga_event(sp: ShardedProblem, st: DSagaState, s, eta: float, tau: int,
-                key, literal_scaling: bool = False) -> DSagaState:
+                key, literal_scaling: bool = False,
+                fused=None) -> DSagaState:
     """Worker s: tau local SAGA steps from its fetched central state, then
     the delta push (Alg 5 lines 12-20). Events interleave round-robin — the
     async arrival order, one at a time (the paper's implementation is
@@ -455,7 +492,7 @@ def dsaga_event(sp: ShardedProblem, st: DSagaState, s, eta: float, tau: int,
     idx = jax.random.randint(key, (tau,), 0, sp.ns)
     x, table, gbar = _local_saga_steps(
         sp.A[s], sp.b[s], sp.lam, sp.kind, st.x_c, st.tables[s], st.gbar_c,
-        eta, sp.p * sp.ns, idx)
+        eta, sp.p * sp.ns, idx, fused=fused)
     dx = x - st.x_old[s]
     if literal_scaling:
         dg = gbar - st.gbar_old[s]       # printed line 13
@@ -496,8 +533,8 @@ def dsaga_init_stale(sp: ShardedProblem) -> AsyncState:
 
 
 def dsaga_event_stale(sp: ShardedProblem, st: AsyncState, s, eta: float,
-                      tau: int, key, literal_scaling: bool = False
-                      ) -> AsyncState:
+                      tau: int, key, literal_scaling: bool = False,
+                      fused=None) -> AsyncState:
     """Algorithm 5 with Algorithm 3's fetch discipline: worker s runs its
     tau local SAGA steps from the central state it fetched at its PREVIOUS
     event (``st.x_fetch[s]``/``st.gbar_fetch[s]``) instead of the
@@ -514,7 +551,7 @@ def dsaga_event_stale(sp: ShardedProblem, st: AsyncState, s, eta: float,
     idx = jax.random.randint(key, (tau,), 0, sp.ns)
     x, table, gbar = _local_saga_steps(
         sp.A[s], sp.b[s], sp.lam, sp.kind, st.x_fetch[s], st.tables[s],
-        st.gbar_fetch[s], eta, sp.p * sp.ns, idx)
+        st.gbar_fetch[s], eta, sp.p * sp.ns, idx, fused=fused)
     dx = x - st.x_old[s]
     if literal_scaling:
         dg = gbar - st.gbar_old[s]       # printed line 13
@@ -533,10 +570,11 @@ def dsaga_event_stale(sp: ShardedProblem, st: AsyncState, s, eta: float,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("tau", "literal_scaling", "stale"),
+                   static_argnames=("tau", "literal_scaling", "stale",
+                                    "fused"),
                    donate_argnames=("st",))
 def _dsaga_scan(sp: ShardedProblem, st, eta, g0, schedule, keys,
-                tau: int, literal_scaling: bool, stale: bool):
+                tau: int, literal_scaling: bool, stale: bool, fused=None):
     """One scan runner for both fetch disciplines: ``stale`` selects the
     event function (and the matching state type — DSagaState for instant,
     AsyncState for stale) at trace time."""
@@ -550,7 +588,8 @@ def _dsaga_scan(sp: ShardedProblem, st, eta, g0, schedule, keys,
         def one_event(st, sk):
             runtime.TRACES[trace_key] += 1
             s, k = sk
-            return event(sp, st, s, eta, tau, k, literal_scaling), None
+            return event(sp, st, s, eta, tau, k, literal_scaling,
+                         fused=fused), None
 
         st, _ = jax.lax.scan(one_event, st, (sched_row, key_row))
         rel = convex.rel_grad_norm(merged, st.x_c, g0)
@@ -562,7 +601,7 @@ def _dsaga_scan(sp: ShardedProblem, st, eta, g0, schedule, keys,
 def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
               tau: int = 100, literal_scaling: bool = False,
               backend: str = "vmap", fetch: str | None = None,
-              speeds=None, mesh=None):
+              speeds=None, mesh=None, fused=False):
     """Algorithm 5. Each worker runs tau SAGA steps with its local table;
     the running mean gbar is updated with the GLOBAL 1/n scaling (§5.2);
     deltas (dx, dgbar) are pushed with server coefficient alpha.
@@ -603,22 +642,25 @@ def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     fetch='instant'+spmd refusal — is a ``solver.RunSpec`` build
     (DESIGN.md §Solver API).
     """
+    from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(
         algo="dsaga", p=sp.p, eta=float(eta), rounds=rounds,
         backend=backend, fetch=fetch,
         speeds=None if speeds is None else tuple(float(s) for s in speeds),
-        tau=tau)
+        tau=tau, fused=fused)
     fetch = spec.fetch
     if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_dsaga(sp, eta=eta, rounds=rounds, key=key, tau=tau,
                               literal_scaling=literal_scaling,
-                              speeds=spec.speeds, mesh=mesh)
+                              speeds=spec.speeds, mesh=mesh, fused=fused)
+    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam)
     g0 = convex.grad_norm0(sp.merged())
     schedule = runtime.event_schedule(sp.p, rounds, spec.speeds)
     keys = jax.random.split(key, schedule.size)
     sched, keys = runtime.per_round(schedule, keys, sp.p)
     st = dsaga_init_stale(sp) if fetch == "stale" else dsaga_init(sp)
     return _dsaga_scan(sp, st, eta, g0, jnp.asarray(sched), keys, tau,
-                       literal_scaling, stale=(fetch == "stale"))
+                       literal_scaling, stale=(fetch == "stale"),
+                       fused=fused_t)

@@ -1,0 +1,165 @@
+"""Fused-kernel bodies for the convex VR drivers (DESIGN.md §Fused
+kernels hot-path).
+
+Every VR inner loop in ``core/`` has the same per-step structure —
+correction from a stored scalar residual, parameter update, table/anchor
+write — which the ``kernels/vr_update`` Pallas kernel executes as ONE
+launch (5 reads / 4 writes of param-sized buffers instead of the ~9 reads
+XLA materializes for the unfused algebra).  This module adapts the flat
+kernel to the convex drivers:
+
+  * the iterate/anchor vectors are padded once per epoch to the kernel
+    tile (zero lanes stay exactly zero through the update: the padded
+    gbar/feature columns are zero and ``0*(1-eta*decay) - eta*0 = 0``);
+  * the features are padded column-wise once so the per-step rank-1
+    gradients ``s * a_i`` come out tile-shaped with a single gather;
+  * the l2 term ``2*lam*x`` is folded into the kernel's static ``decay``
+    instead of a separate elementwise pass.
+
+The step size and lam are baked into the kernel as static floats, so the
+fused configuration travels as a hashable tuple ``(eta, lam, interpret)``
+(``make_params``) that the jitted scan runners take as a static argument
+— ``None`` means "unfused oracle path".
+
+Numerics: the fused step computes ``s_new*a - s_old*a`` where the oracle
+computes ``(s_new - s_old)*a``, and applies the decay multiplicatively —
+identical real algebra, different rounding, so trajectories agree to
+float tolerance rather than bit-for-bit (pinned in
+``tests/test_fused_agreement.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.vr_update import kernel as vr_kernel
+
+
+def make_params(flag, eta: float, lam) -> tuple | None:
+    """Resolve a driver's ``fused=`` flag into the static kernel params.
+
+    Returns ``None`` (unfused) or ``(eta, lam, interpret)`` with python
+    floats — hashable, so the tuple rides through ``static_argnames`` of
+    the scan runners and the spmd runner caches.
+    """
+    on, interpret = kernels.resolve_fused(flag)
+    if not on:
+        return None
+    return (float(eta), float(lam), bool(interpret))
+
+
+def padded_len(d: int) -> int:
+    return ((d + vr_kernel.TILE - 1) // vr_kernel.TILE) * vr_kernel.TILE
+
+
+def pad_vec(v, P: int):
+    d = v.shape[-1]
+    if d == P:
+        return v
+    return jnp.concatenate([v, jnp.zeros((P - d,), v.dtype)])
+
+
+def pad_cols(A, P: int):
+    d = A.shape[-1]
+    if d == P:
+        return A
+    return jnp.pad(A, ((0, 0), (0, P - d)))
+
+
+def _residual(z, bb, kind: str):
+    """l'(z; b) — the scalar residual of convex.scalar_residual, computed
+    from an already-formed margin (the fused bodies dot the unpadded
+    feature row against the live iterate slice themselves)."""
+    if kind == "logistic":
+        return -bb * jax.nn.sigmoid(-bb * z)
+    return 2.0 * (z - bb)
+
+
+def centralvr_epoch(A, b, kind, x, table, gbar, order, fp, *,
+                    track: bool = False):
+    """Fused CentralVR epoch: the arithmetic of ``centralvr.epoch`` /
+    ``distributed._local_centralvr_epoch`` with the per-step update as one
+    kernel launch.  Returns (x, table, acc[, traj]); ``acc`` is the
+    running gtilde accumulator (data term, mean over this shard)."""
+    eta, lam, interpret = fp
+    n, d = A.shape
+    P = padded_len(d)
+    Ap = pad_cols(A, P)
+    xp = pad_vec(x, P)
+    gbarp = pad_vec(gbar, P)
+
+    def body(carry, i):
+        xp, table, accp = carry
+        ap = Ap[i]
+        s_new = _residual(ap[:d] @ xp[:d], b[i], kind)
+        xo, _, gto, _ = vr_kernel.vr_update_flat(
+            xp, s_new * ap, table[i] * ap, gbarp, accp,
+            eta=eta, m=n, saga=False, decay=2.0 * lam,
+            interpret=interpret)
+        table = table.at[i].set(s_new)
+        return (xo, table, gto), (xp[:d] if track else None)
+
+    init = (xp, table, jnp.zeros_like(xp))
+    (xp, table, accp), traj = jax.lax.scan(body, init, order)
+    return xp[:d], table, accp[:d], traj
+
+
+def saga_steps(A, b, kind, x, table, gbar, n_global: int, idx, fp):
+    """Fused SAGA inner loop: the arithmetic of ``baselines._saga_scan`` /
+    ``distributed._local_saga_steps`` — VR step plus running-mean gbar
+    update (global 1/n scaling) in the same launch.  Returns
+    (x, table, gbar)."""
+    eta, lam, interpret = fp
+    n, d = A.shape
+    P = padded_len(d)
+    Ap = pad_cols(A, P)
+    xp = pad_vec(x, P)
+    gbarp = pad_vec(gbar, P)
+    zp = jnp.zeros_like(xp)          # dummy gtilde lane (output discarded)
+
+    def body(carry, i):
+        xp, table, gbarp = carry
+        ap = Ap[i]
+        s_new = _residual(ap[:d] @ xp[:d], b[i], kind)
+        xo, _, _, gbo = vr_kernel.vr_update_flat(
+            xp, s_new * ap, table[i] * ap, gbarp, zp,
+            eta=eta, m=n_global, saga=True, decay=2.0 * lam,
+            interpret=interpret)
+        table = table.at[i].set(s_new)
+        return (xo, table, gbo), None
+
+    (xp, table, gbarp), _ = jax.lax.scan(body, (xp, table, gbarp), idx)
+    return xp[:d], table, gbarp[:d]
+
+
+def svrg_steps(A, b, kind, xbar, sbar, gbar, idx, fp):
+    """Fused SVRG inner loop from the snapshot ``xbar``: the arithmetic of
+    ``baselines._svrg_scan`` / ``distributed._dsvrg_scan``'s local body.
+
+    ``sbar`` holds the snapshot residuals for THIS shard (one matvec per
+    round instead of per-step anchor gathers); ``gbar`` is the full
+    REGULARIZED gradient at the snapshot — the kernel's decay term
+    supplies ``2*lam*x``, so the anchor part ``2*lam*xbar`` is subtracted
+    here once:  v = s*a - sbar*a + (gbar - 2*lam*xbar) + [decay] 2*lam*x,
+    exactly the oracle's  (s - sbar)*a + gbar + 2*lam*(x - xbar).
+    Returns the final iterate."""
+    eta, lam, interpret = fp
+    n, d = A.shape
+    P = padded_len(d)
+    Ap = pad_cols(A, P)
+    xbarp = pad_vec(xbar, P)
+    gbarp = pad_vec(gbar, P) - 2.0 * lam * xbarp
+    zp = jnp.zeros_like(xbarp)
+
+    def body(xp, i):
+        ap = Ap[i]
+        s_new = _residual(ap[:d] @ xp[:d], b[i], kind)
+        xo, _, _, _ = vr_kernel.vr_update_flat(
+            xp, s_new * ap, sbar[i] * ap, gbarp, zp,
+            eta=eta, m=n, saga=False, decay=2.0 * lam,
+            interpret=interpret)
+        return xo, None
+
+    xp, _ = jax.lax.scan(body, xbarp, idx)
+    return xp[:d]

@@ -61,6 +61,7 @@ class AlgoCaps(NamedTuple):
     accepts_fetch: bool = False   # fetch="instant"|"stale" discipline?
     accepts_speeds: bool = False  # heterogeneous-speed event schedule?
     accepts_tau: bool = False     # local-step count (inner loop length)?
+    accepts_fused: bool = False   # fused vr_update kernel hot path?
 
 
 class Algorithm(NamedTuple):
@@ -133,6 +134,11 @@ class RunSpec:
       sampling      CentralVR sampling mode ("permutation"|"uniform",
                     Algorithm 1 only)
       decay         step-size decay for the SGD-family baselines
+      fused         route the VR inner loop through the Pallas
+                    ``vr_update`` kernel (DESIGN.md §Fused kernels
+                    hot-path): False (unfused oracle, default), True
+                    (force; interpret mode off-TPU), or "auto" (fused
+                    iff a compiled Pallas backend is present)
 
     All cross-field validation happens here: asking for an impossible
     combination (spmd on a serial algorithm, speeds on a synchronous one,
@@ -152,6 +158,7 @@ class RunSpec:
     metric_every: int = 1
     sampling: str = "permutation"
     decay: float = 0.0
+    fused: Any = False
 
     def __post_init__(self):
         if self.algo not in REGISTRY:
@@ -258,6 +265,18 @@ class RunSpec:
             raise ValueError(
                 f"RunSpec.decay: step-size decay only applies to "
                 f"{_DECAY_ALGOS}, not {self.algo!r}")
+        if self.fused is None:
+            _set("fused", False)
+        if self.fused not in (True, False, "auto"):
+            raise ValueError(
+                f"RunSpec.fused: expected True, False or 'auto', got "
+                f"{self.fused!r}")
+        if self.fused and not caps.accepts_fused:
+            raise ValueError(
+                f"RunSpec.fused: algorithm {self.algo!r} has no VR inner "
+                "loop to fuse; only the VR family (centralvr, "
+                "centralvr_sync, centralvr_async, dsvrg, dsaga, svrg, "
+                "saga) exposes fused=")
 
     @property
     def epochs(self) -> int:
@@ -437,14 +456,16 @@ def _call_centralvr(spec, prob, eta, key, mesh):
     from repro.core import centralvr
     st, rels, evals = centralvr.run(prob, eta=eta, epochs=spec.rounds,
                                     key=key, sampling=spec.sampling,
-                                    backend=spec.backend, mesh=mesh)
+                                    backend=spec.backend, mesh=mesh,
+                                    fused=spec.fused)
     return st, st.x, rels, evals
 
 
 def _call_sync(spec, sp, eta, key, mesh):
     from repro.core import distributed
     st, rels = distributed.run_sync(sp, eta=eta, rounds=spec.rounds,
-                                    key=key, backend=spec.backend, mesh=mesh)
+                                    key=key, backend=spec.backend, mesh=mesh,
+                                    fused=spec.fused)
     return st, st.x, rels, None
 
 
@@ -452,7 +473,8 @@ def _call_async(spec, sp, eta, key, mesh):
     from repro.core import distributed
     st, rels = distributed.run_async(sp, eta=eta, rounds=spec.rounds,
                                      key=key, speeds=spec.speeds,
-                                     backend=spec.backend, mesh=mesh)
+                                     backend=spec.backend, mesh=mesh,
+                                     fused=spec.fused)
     return st, st.x_c, rels, None
 
 
@@ -460,7 +482,8 @@ def _call_dsvrg(spec, sp, eta, key, mesh):
     from repro.core import distributed
     x, rels = distributed.run_dsvrg(sp, eta=eta, rounds=spec.rounds,
                                     key=key, tau=spec.tau or 0,
-                                    backend=spec.backend, mesh=mesh)
+                                    backend=spec.backend, mesh=mesh,
+                                    fused=spec.fused)
     return x, x, rels, None
 
 
@@ -469,7 +492,8 @@ def _call_dsaga(spec, sp, eta, key, mesh):
     st, rels = distributed.run_dsaga(sp, eta=eta, rounds=spec.rounds,
                                      key=key, tau=spec.tau or 100,
                                      fetch=spec.fetch, speeds=spec.speeds,
-                                     backend=spec.backend, mesh=mesh)
+                                     backend=spec.backend, mesh=mesh,
+                                     fused=spec.fused)
     return st, st.x_c, rels, None
 
 
@@ -483,13 +507,14 @@ def _call_sgd(spec, prob, eta, key, mesh):
 def _call_svrg(spec, prob, eta, key, mesh):
     from repro.core import baselines
     x, rels = baselines.run_svrg(prob, eta=eta, epochs=spec.rounds, key=key,
-                                 inner=spec.tau or 0)
+                                 inner=spec.tau or 0, fused=spec.fused)
     return x, x, rels, None
 
 
 def _call_saga(spec, prob, eta, key, mesh):
     from repro.core import baselines
-    x, rels = baselines.run_saga(prob, eta=eta, epochs=spec.rounds, key=key)
+    x, rels = baselines.run_saga(prob, eta=eta, epochs=spec.rounds, key=key,
+                                 fused=spec.fused)
     return x, x, rels, None
 
 
@@ -518,25 +543,27 @@ def _call_ps_svrg(spec, sp, eta, key, mesh):
 
 
 register("centralvr", "repro.core.centralvr", "run",
-         AlgoCaps(distributed=False, spmd_ok=True, is_async=False),
+         AlgoCaps(distributed=False, spmd_ok=True, is_async=False,
+                  accepts_fused=True),
          _call_centralvr,
          "CentralVR, single worker (Algorithm 1); spmd = run on the mesh")
 register("centralvr_sync", "repro.core.distributed", "run_sync",
-         AlgoCaps(distributed=True, spmd_ok=True, is_async=False),
+         AlgoCaps(distributed=True, spmd_ok=True, is_async=False,
+                  accepts_fused=True),
          _call_sync, "CentralVR-Sync (Algorithm 2)")
 register("centralvr_async", "repro.core.distributed", "run_async",
          AlgoCaps(distributed=True, spmd_ok=True, is_async=True,
-                  accepts_speeds=True),
+                  accepts_speeds=True, accepts_fused=True),
          _call_async,
          "CentralVR-Async (Algorithm 3), deterministic event schedule")
 register("dsvrg", "repro.core.distributed", "run_dsvrg",
          AlgoCaps(distributed=True, spmd_ok=True, is_async=False,
-                  accepts_tau=True),
+                  accepts_tau=True, accepts_fused=True),
          _call_dsvrg, "Distributed SVRG (Algorithm 4)")
 register("dsaga", "repro.core.distributed", "run_dsaga",
          AlgoCaps(distributed=True, spmd_ok=True, is_async=True,
                   accepts_fetch=True, accepts_speeds=True,
-                  accepts_tau=True),
+                  accepts_tau=True, accepts_fused=True),
          _call_dsaga,
          "Distributed SAGA (Algorithm 5); spmd requires fetch='stale'")
 register("sgd", "repro.core.baselines", "run_sgd",
@@ -544,10 +571,11 @@ register("sgd", "repro.core.baselines", "run_sgd",
          _call_sgd, "plain SGD, permutation sampling (Fig. 1 baseline)")
 register("svrg", "repro.core.baselines", "run_svrg",
          AlgoCaps(distributed=False, spmd_ok=False, is_async=False,
-                  accepts_tau=True),
+                  accepts_tau=True, accepts_fused=True),
          _call_svrg, "SVRG [17]; tau = inner-loop length (default n)")
 register("saga", "repro.core.baselines", "run_saga",
-         AlgoCaps(distributed=False, spmd_ok=False, is_async=False),
+         AlgoCaps(distributed=False, spmd_ok=False, is_async=False,
+                  accepts_fused=True),
          _call_saga, "SAGA [12] (Fig. 1 baseline)")
 register("dist_sgd", "repro.core.baselines", "run_dist_sgd",
          AlgoCaps(distributed=True, spmd_ok=True, is_async=False,

@@ -189,10 +189,12 @@ def _full_grad(local: Problem, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _sync_runner(mesh: Mesh, kind: str):
-    """One compiled executable per (mesh, problem kind): init epoch + the
-    whole round scan inside a single jitted shard_map.  Cached so warm
-    calls skip shard_map re-construction and hit the jit cache."""
+def _sync_runner(mesh: Mesh, kind: str, fused=None):
+    """One compiled executable per (mesh, problem kind, fused params):
+    init epoch + the whole round scan inside a single jitted shard_map.
+    Cached so warm calls skip shard_map re-construction and hit the jit
+    cache.  ``fused`` is the static kernel-params tuple from
+    ``fused.make_params`` (hashable, so it extends the cache key)."""
     from repro.core.distributed import _local_centralvr_epoch, _local_sgd_epoch
 
     def body(A, b, lam, eta, g0, perm0, perms):
@@ -210,7 +212,7 @@ def _sync_runner(mesh: Mesh, kind: str):
         def one_round(carry, perm):
             x, table, gbar = carry
             x_w, table, acc = _local_centralvr_epoch(
-                A, b, lam, kind, x, table, gbar, eta, perm[0])
+                A, b, lam, kind, x, table, gbar, eta, perm[0], fused=fused)
             x = jax.lax.pmean(x_w, WORKER_AXIS)
             gbar = jax.lax.pmean(acc, WORKER_AXIS)
             rel = _rel_grad_norm(local, x, g0)
@@ -228,12 +230,14 @@ def _sync_runner(mesh: Mesh, kind: str):
 
 
 def run_sync(sp, *, eta: float, rounds: int, key: jax.Array,
-             mesh: Optional[Mesh] = None):
+             mesh: Optional[Mesh] = None, fused=False):
     """Algorithm 2 with one worker per device (DESIGN.md §2, spmd backend).
     Same RNG draws as the vmap driver (precomputed on host), so the
     trajectories agree within reduction-order float noise."""
+    from repro.core import fused as fusedmod
     from repro.core.distributed import SyncState
 
+    fused_t = fusedmod.make_params(fused, eta, sp.lam)
     mesh = _check_mesh(mesh, sp.p)
     k_init, k_run = jax.random.split(key)
     g0 = convex.grad_norm0(sp.merged())
@@ -243,7 +247,7 @@ def run_sync(sp, *, eta: float, rounds: int, key: jax.Array,
     (A, b, perm0), (lam, eta, g0) = _put(
         mesh, (sp.A, sp.b, perm0), (sp.lam, jnp.asarray(eta), g0))
     (perms,), () = _put(mesh, (perms,), (), worker_dim=1)
-    x, tables, gbar, rels = _sync_runner(mesh, sp.kind)(
+    x, tables, gbar, rels = _sync_runner(mesh, sp.kind, fused_t)(
         A, b, lam, eta, g0, perm0, perms)
     return SyncState(x=x, tables=tables, gbar=gbar), rels
 
@@ -253,7 +257,7 @@ def run_sync(sp, *, eta: float, rounds: int, key: jax.Array,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _dsvrg_runner(mesh: Mesh, kind: str):
+def _dsvrg_runner(mesh: Mesh, kind: str, fused=None):
     def body(A, b, lam, eta, g0, idx):
         A, b = A[0], b[0]
         local = Problem(A, b, lam, kind)
@@ -263,13 +267,19 @@ def _dsvrg_runner(mesh: Mesh, kind: str):
             xbar = x
             gbar = _full_grad(local, xbar)   # sync step (line 5)
 
-            def step(xl, i):
-                g = (convex.scalar_residual(local, xl, i) * A[i]
-                     - convex.scalar_residual(local, xbar, i) * A[i]
-                     + gbar + 2.0 * lam * (xl - xbar))
-                return xl - eta * g, None
+            if fused is not None:
+                from repro.core import fused as fusedmod
+                sbar = convex.scalar_residual_all(local, xbar)
+                xl = fusedmod.svrg_steps(A, b, kind, xbar, sbar, gbar,
+                                         idx_r[0], fused)
+            else:
+                def step(xl, i):
+                    g = (convex.scalar_residual(local, xl, i) * A[i]
+                         - convex.scalar_residual(local, xbar, i) * A[i]
+                         + gbar + 2.0 * lam * (xl - xbar))
+                    return xl - eta * g, None
 
-            xl, _ = jax.lax.scan(step, xbar, idx_r[0])
+                xl, _ = jax.lax.scan(step, xbar, idx_r[0])
             x = jax.lax.pmean(xl, WORKER_AXIS)
             rel = _rel_grad_norm(local, x, g0)
             return x, rel
@@ -284,7 +294,10 @@ def _dsvrg_runner(mesh: Mesh, kind: str):
 
 
 def run_dsvrg(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 0,
-              mesh: Optional[Mesh] = None):
+              mesh: Optional[Mesh] = None, fused=False):
+    from repro.core import fused as fusedmod
+
+    fused_t = fusedmod.make_params(fused, eta, sp.lam)
     tau = tau or 2 * sp.ns
     mesh = _check_mesh(mesh, sp.p)
     g0 = convex.grad_norm0(sp.merged())
@@ -292,7 +305,7 @@ def run_dsvrg(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 0,
     (A, b), (lam, eta, g0) = _put(
         mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
     (idx,), () = _put(mesh, (idx,), (), worker_dim=1)
-    return _dsvrg_runner(mesh, sp.kind)(A, b, lam, eta, g0, idx)
+    return _dsvrg_runner(mesh, sp.kind, fused_t)(A, b, lam, eta, g0, idx)
 
 
 # ---------------------------------------------------------------------------
@@ -484,7 +497,7 @@ def _wave_push(x_c, gbar_c, dxs, dgs, rk, my_rank, alpha, alpha_g):
 
 
 @functools.lru_cache(maxsize=None)
-def _async_runner(mesh: Mesh, kind: str):
+def _async_runner(mesh: Mesh, kind: str, fused=None):
     """CentralVR-Async (Algorithm 3) with one worker per device: the whole
     wave schedule in one jitted shard_map.  Each worker's stale snapshot
     (x_fetch, gbar_fetch), previous contribution (x_old, gbar_old), and
@@ -519,7 +532,7 @@ def _async_runner(mesh: Mesh, kind: str):
                 # masked (round-robin schedules have no inactive slots)
                 x_new, table_new, gtilde = _local_centralvr_epoch(
                     A, b, lam, kind, x_fetch, table, gbar_fetch, eta,
-                    perm[0])
+                    perm[0], fused=fused)
                 on = act[w_idx]
                 dx = jnp.where(on, x_new - x_old, 0.0)
                 dg = jnp.where(on, gtilde - gbar_old, 0.0)
@@ -565,13 +578,15 @@ def _wave_inputs(mesh, sp, schedule, draws):
 
 
 def run_async(sp, *, eta: float, rounds: int, key: jax.Array, speeds=None,
-              mesh: Optional[Mesh] = None):
+              mesh: Optional[Mesh] = None, fused=False):
     """Algorithm 3 as concurrency waves (DESIGN.md §2, spmd-async mode).
     Identical schedule, identical RNG draws, and identical delta algebra
     as ``distributed.run_async`` — the event-serial reference it is pinned
     against."""
+    from repro.core import fused as fusedmod
     from repro.core.distributed import AsyncState
 
+    fused_t = fusedmod.make_params(fused, eta, sp.lam)
     mesh = _check_mesh(mesh, sp.p)
     k_init, k_run = jax.random.split(key)
     g0 = convex.grad_norm0(sp.merged())
@@ -586,7 +601,7 @@ def run_async(sp, *, eta: float, rounds: int, key: jax.Array, speeds=None,
         mesh, (sp.A, sp.b, perm0), (sp.lam, jnp.asarray(eta), g0))
     active, rank, perms = _wave_inputs(mesh, sp, schedule, perms)
     (x_c, gbar_c, tables, x_old, gbar_old, x_fetch, gbar_fetch,
-     rels) = _async_runner(mesh, sp.kind)(
+     rels) = _async_runner(mesh, sp.kind, fused_t)(
         A, b, lam, eta, g0, perm0, active, rank, perms)
     return AsyncState(x_c=x_c, gbar_c=gbar_c, tables=tables, x_old=x_old,
                       gbar_old=gbar_old, x_fetch=x_fetch,
@@ -594,7 +609,7 @@ def run_async(sp, *, eta: float, rounds: int, key: jax.Array, speeds=None,
 
 
 @functools.lru_cache(maxsize=None)
-def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool):
+def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool, fused=None):
     """Stale-fetch D-SAGA (Algorithm 5 with Algorithm 3's fetch
     discipline) as concurrency waves — the spmd execution of
     ``distributed.dsaga_event_stale``."""
@@ -626,7 +641,7 @@ def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool):
                 act, rk, idx_w = wv
                 x_new, table_new, gb = _local_saga_steps(
                     A, b, lam, kind, x_fetch, table, gbar_fetch, eta,
-                    n_global, idx_w[0])
+                    n_global, idx_w[0], fused=fused)
                 on = act[w_idx]
                 dx = jnp.where(on, x_new - x_old, 0.0)
                 if literal_scaling:
@@ -664,12 +679,14 @@ def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool):
 
 def run_dsaga(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 100,
               literal_scaling: bool = False, speeds=None,
-              mesh: Optional[Mesh] = None):
+              mesh: Optional[Mesh] = None, fused=False):
     """Stale-fetch Algorithm 5 as concurrency waves (DESIGN.md §2).
     Pinned against ``distributed.run_dsaga(fetch="stale")``, the
     event-serial scan with the same fetch discipline, schedule, and RNG."""
+    from repro.core import fused as fusedmod
     from repro.core.distributed import AsyncState
 
+    fused_t = fusedmod.make_params(fused, eta, sp.lam)
     mesh = _check_mesh(mesh, sp.p)
     g0 = convex.grad_norm0(sp.merged())
     schedule = runtime.event_schedule(sp.p, rounds, speeds)
@@ -680,7 +697,7 @@ def run_dsaga(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 100,
         mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
     active, rank, idx = _wave_inputs(mesh, sp, schedule, idx)
     (x_c, gbar_c, tables, x_old, gbar_old, x_fetch, gbar_fetch,
-     rels) = _dsaga_runner(mesh, sp.kind, bool(literal_scaling))(
+     rels) = _dsaga_runner(mesh, sp.kind, bool(literal_scaling), fused_t)(
         A, b, lam, eta, g0, active, rank, idx)
     return AsyncState(x_c=x_c, gbar_c=gbar_c, tables=tables, x_old=x_old,
                       gbar_old=gbar_old, x_fetch=x_fetch,
@@ -693,7 +710,7 @@ def run_dsaga(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 100,
 
 def run_centralvr(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
                   sampling: str = "permutation", x0=None,
-                  mesh: Optional[Mesh] = None):
+                  mesh: Optional[Mesh] = None, fused=False):
     """Algorithm 1 has no worker axis to shard — ``backend="spmd"`` means
     "execute on the mesh": the problem is placed on the mesh's first
     device and the standard device-resident scan runs there, so a launcher
@@ -707,4 +724,4 @@ def run_centralvr(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     if x0 is not None:
         x0 = jax.device_put(x0, dev)
     return centralvr.run(prob, eta=eta, epochs=epochs, key=key,
-                         sampling=sampling, x0=x0)
+                         sampling=sampling, x0=x0, fused=fused)

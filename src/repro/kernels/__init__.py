@@ -5,4 +5,79 @@ ref.py oracles):
   flash_attention/ causal GQA flash attention (online softmax, windows)
   rmsnorm/         fused RMSNorm
   ssd_scan/        fused Mamba2 SSD chunk scan (state in VMEM scratch)
+
+Entry points are re-exported lazily (``import repro.kernels`` stays cheap
+and free of circular-import hazards):
+
+  * ``vr_update``        — fused VR correction + step + table/anchor write
+                           (pytree level, donating jit)
+  * ``vr_update_inline`` — same math, un-jitted, for call sites already
+                           inside a jit (the LM epoch scan)
+  * ``flash_attention``  — online-softmax causal attention
+  * ``rmsnorm``          — row-wise RMS normalization
+  * ``ssd_scan``         — chunked SSD state-space scan
+
+``has_pallas_support()`` / ``default_interpret()`` / ``resolve_fused()``
+centralize the CPU-interpret fallback so every ``fused="auto"`` caller
+agrees on the dispatch.
 """
+from __future__ import annotations
+
+import jax
+
+__all__ = [
+    "vr_update", "vr_update_inline", "flash_attention", "rmsnorm",
+    "ssd_scan", "has_pallas_support", "default_interpret", "resolve_fused",
+]
+
+_LAZY = {
+    "vr_update": ("repro.kernels.vr_update.ops", "vr_update"),
+    "vr_update_inline": ("repro.kernels.vr_update.ops", "vr_update_inline"),
+    "flash_attention": ("repro.kernels.flash_attention.ops",
+                        "flash_attention"),
+    "rmsnorm": ("repro.kernels.rmsnorm.ops", "rmsnorm"),
+    "ssd_scan": ("repro.kernels.ssd_scan.ops", "ssd_scan"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    import importlib
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value        # cache for subsequent lookups
+    return value
+
+
+def has_pallas_support() -> bool:
+    """True when the default backend compiles Pallas kernels natively.
+
+    Mosaic lowering exists for TPU; everywhere else (the CPU test/CI
+    environment) the kernels run in interpret mode.
+    """
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """The interpret= value matching the current backend."""
+    return not has_pallas_support()
+
+
+def resolve_fused(flag):
+    """Resolve a ``fused=True|False|"auto"`` flag to (fused, interpret).
+
+    * True   -> fused everywhere; interpret-mode fallback on CPU (slow but
+                exact — used by the agreement tests).
+    * "auto" -> fused only where the kernels compile natively.
+    * False  -> unfused oracle path.
+    """
+    if flag == "auto":
+        return has_pallas_support(), False
+    if flag is True:
+        return True, default_interpret()
+    if flag is False or flag is None:
+        return False, False
+    raise ValueError(
+        f"fused must be True, False or 'auto', got {flag!r}")

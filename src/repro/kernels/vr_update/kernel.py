@@ -7,10 +7,14 @@ the correction v and the updated table as separate HBM round trips; the
 fused kernel streams every buffer exactly once through VMEM tiles:
 
     v       = g - g_old + gbar            (error-corrected gradient, Eq. 6)
-    x'      = x - eta * v                 (SGD step)
+    x'      = x*(1 - eta*decay) - eta*v   (SGD step; decay folds the L2 term)
     table'  = g                           (store fresh gradient)
     gtilde' = gtilde + g / M              (epoch accumulator, Alg 1 line 8)
     gbar'   = gbar + (g - g_old) / M      (SAGA mode only, Alg 5 line 9)
+
+``decay`` is a static compile-time float (0.0 by default, which compiles to
+exactly the historical kernel); the convex drivers pass decay = 2*lam so the
+ridge term never needs a separate elementwise pass over x.
 
 Tiling: flat 1-D views, (8, 1024)-element VMEM tiles (float32: 32 KiB per
 operand, 8 operands -> ~256 KiB of VMEM per step, well inside the ~16 MiB
@@ -31,13 +35,17 @@ TILE = SUBLANES * LANES
 
 def _vr_update_kernel(x_ref, g_ref, gold_ref, gbar_ref, gtilde_ref,
                       xo_ref, tbl_ref, gto_ref, gbo_ref,
-                      *, eta: float, inv_m: float, saga: bool):
+                      *, eta: float, inv_m: float, saga: bool,
+                      decay: float = 0.0):
     g = g_ref[...]
     gold = gold_ref[...]
     gbar = gbar_ref[...]
     v = g - gold + gbar
-    xo_ref[...] = (x_ref[...].astype(jnp.float32) - eta * v).astype(
-        x_ref.dtype)
+    acc_t = jnp.promote_types(x_ref.dtype, jnp.float32)
+    xf = x_ref[...].astype(acc_t)
+    if decay:
+        xf = xf * (1.0 - eta * decay)
+    xo_ref[...] = (xf - eta * v).astype(x_ref.dtype)
     tbl_ref[...] = g
     gto_ref[...] = gtilde_ref[...] + g * inv_m
     if saga:
@@ -47,7 +55,8 @@ def _vr_update_kernel(x_ref, g_ref, gold_ref, gbar_ref, gtilde_ref,
 
 
 def vr_update_flat(x, g, g_old, gbar, gtilde, *, eta: float, m: int,
-                   saga: bool = False, interpret: bool = False):
+                   saga: bool = False, decay: float = 0.0,
+                   interpret: bool = False):
     """All inputs flat 1-D, length a multiple of TILE (ops.py pads).
     Returns (x', table', gtilde', gbar')."""
     n = x.shape[0]
@@ -67,7 +76,7 @@ def vr_update_flat(x, g, g_old, gbar, gtilde, *, eta: float, m: int,
     ]
     fn = pl.pallas_call(
         functools.partial(_vr_update_kernel, eta=eta, inv_m=1.0 / m,
-                          saga=saga),
+                          saga=saga, decay=decay),
         grid=grid,
         in_specs=[block] * 5,
         out_specs=[block] * 4,

@@ -3,10 +3,16 @@
 Flattens the param pytree into one contiguous stream per buffer, pads to
 the kernel tile, runs the fused kernel, and unflattens — one kernel launch
 per training step regardless of tree structure.
+
+The flat layout (leaf sizes, offsets, pad) depends only on the tree
+structure, so it is computed once per (treedef, shapes) and cached; the
+pad is folded into the same single concatenate as the leaves instead of a
+second copy of the full stream.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,51 +20,82 @@ import jax.numpy as jnp
 from repro.kernels.vr_update import kernel
 
 
+class _Layout(NamedTuple):
+    sizes: Tuple[int, ...]      # flat element count per leaf
+    offsets: Tuple[int, ...]    # start offset of each leaf in the stream
+    n: int                      # total un-padded length
+    pad: int                    # zeros appended to reach a TILE multiple
+
+
+@functools.lru_cache(maxsize=256)
+def _layout(treedef, shapes) -> _Layout:
+    del treedef  # part of the cache key only
+    sizes, offsets, o = [], [], 0
+    for s in shapes:
+        sz = 1
+        for d in s:
+            sz *= d
+        sizes.append(sz)
+        offsets.append(o)
+        o += sz
+    return _Layout(tuple(sizes), tuple(offsets), o, (-o) % kernel.TILE)
+
+
 def _flatten(tree):
+    """Flatten + cast to f32 + pad to the kernel tile in ONE concatenate.
+
+    Leaves already in float32 skip the astype; the tile padding rides in
+    the same concatenate as a zeros leaf instead of re-copying the stream.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
-                            for l in leaves])
-    return flat, leaves, treedef
+    lay = _layout(treedef, tuple(l.shape for l in leaves))
+    parts = [l.reshape(-1) if l.dtype == jnp.float32
+             else l.reshape(-1).astype(jnp.float32) for l in leaves]
+    if lay.pad:
+        parts.append(jnp.zeros((lay.pad,), jnp.float32))
+    flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return flat, leaves, treedef, lay
 
 
-def _unflatten(flat, leaves, treedef, dtype=None):
-    out = []
-    o = 0
-    for l in leaves:
-        chunk = flat[o:o + l.size].reshape(l.shape)
-        out.append(chunk.astype(dtype or l.dtype))
-        o += l.size
+def _unflatten(flat, leaves, treedef, lay, dtype=None):
+    out = [flat[o:o + sz].reshape(l.shape).astype(dtype or l.dtype)
+           for l, sz, o in zip(leaves, lay.sizes, lay.offsets)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-@functools.partial(jax.jit, static_argnames=("eta", "m", "saga", "interpret"),
-                   donate_argnums=(0, 1, 2, 3, 4))
-def vr_update(x_tree, g_tree, gold_tree, gbar_tree, gtilde_tree, *,
-              eta: float, m: int, saga: bool = False,
-              interpret: bool = False):
-    """Returns (x', table', gtilde', gbar') as pytrees like the inputs.
-
-    All five param-sized input pytrees are DONATED: their buffers are
-    reused for the outputs instead of freshly allocated each training
-    step, so callers must not read the arguments after the call (the
-    training step consumes its previous VR state anyway), and the five
-    arguments must be distinct buffers — passing the same array twice
-    raises XLA's double-donation error."""
-    x, x_leaves, treedef = _flatten(x_tree)
+def _vr_update_impl(x_tree, g_tree, gold_tree, gbar_tree, gtilde_tree, *,
+                    eta: float, m: int, saga: bool = False,
+                    decay: float = 0.0, interpret: bool = False):
+    x, x_leaves, treedef, lay = _flatten(x_tree)
     g = _flatten(g_tree)[0]
     gold = _flatten(gold_tree)[0]
     gbar = _flatten(gbar_tree)[0]
     gtilde = _flatten(gtilde_tree)[0]
-    n = x.shape[0]
-    pad = (-n) % kernel.TILE
-    if pad:
-        z = jnp.zeros((pad,), jnp.float32)
-        x, g, gold, gbar, gtilde = (jnp.concatenate([t, z])
-                                    for t in (x, g, gold, gbar, gtilde))
+    n = lay.n
     xo, tbl, gto, gbo = kernel.vr_update_flat(
-        x, g, gold, gbar, gtilde, eta=eta, m=m, saga=saga,
+        x, g, gold, gbar, gtilde, eta=eta, m=m, saga=saga, decay=decay,
         interpret=interpret)
-    return (_unflatten(xo[:n], x_leaves, treedef),
-            _unflatten(tbl[:n], x_leaves, treedef, jnp.float32),
-            _unflatten(gto[:n], x_leaves, treedef, jnp.float32),
-            _unflatten(gbo[:n], x_leaves, treedef, jnp.float32))
+    return (_unflatten(xo[:n], x_leaves, treedef, lay),
+            _unflatten(tbl[:n], x_leaves, treedef, lay, jnp.float32),
+            _unflatten(gto[:n], x_leaves, treedef, lay, jnp.float32),
+            _unflatten(gbo[:n], x_leaves, treedef, lay, jnp.float32))
+
+
+vr_update = jax.jit(
+    _vr_update_impl,
+    static_argnames=("eta", "m", "saga", "decay", "interpret"),
+    donate_argnums=(0, 1, 2, 3, 4))
+vr_update.__doc__ = """Returns (x', table', gtilde', gbar') as pytrees like the inputs.
+
+All five param-sized input pytrees are DONATED: their buffers are
+reused for the outputs instead of freshly allocated each training
+step, so callers must not read the arguments after the call (the
+training step consumes its previous VR state anyway), and the five
+arguments must be distinct buffers — passing the same array twice
+raises XLA's double-donation error."""
+
+# Non-donating variant for call sites already inside a jit (e.g. the LM
+# epoch scan): traces inline, so donation is managed by the outer jit and
+# XLA's buffer aliasing, not by a nested jit boundary (which would be
+# silently ignored anyway).
+vr_update_inline = _vr_update_impl

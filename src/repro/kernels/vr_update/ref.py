@@ -5,9 +5,12 @@ import jax.numpy as jnp
 
 
 def vr_update_ref(x, g, g_old, gbar, gtilde, *, eta: float, m: int,
-                  saga: bool = False):
+                  saga: bool = False, decay: float = 0.0):
     v = g - g_old + gbar
-    x_new = (x.astype(jnp.float32) - eta * v).astype(x.dtype)
+    xf = x.astype(jnp.promote_types(x.dtype, jnp.float32))
+    if decay:
+        xf = xf * (1.0 - eta * decay)
+    x_new = (xf - eta * v).astype(x.dtype)
     table_new = g
     gtilde_new = gtilde + g / m
     gbar_new = gbar + (g - g_old) / m if saga else gbar

@@ -10,13 +10,14 @@ mask, which is how the dense archs run the ``long_500k`` shape.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.models import layers
+from repro.models import kernel_ctx, layers
 
 NEG_INF = -1e30
 
@@ -136,16 +137,48 @@ def _head_mask(cfg: ModelConfig, out):
     return out * mask[..., :, None]
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_fused(q, k, v, window, interpret: bool):
+    """Pallas flash attention with the chunked-JAX backward — same
+    reasoning as ``layers._rmsnorm_fused``: forward-only kernel zoo plus
+    no interpret-mode transpose rule, so the VJP recomputes through the
+    oracle (which IS the kernel's pinned reference)."""
+    from repro.kernels.flash_attention import ops as fa_ops
+    return fa_ops.flash_attention(q, k, v, window=window,
+                                  interpret=interpret)
+
+
+def _flash_fused_fwd(q, k, v, window, interpret):
+    return _flash_fused(q, k, v, window, interpret), (q, k, v)
+
+
+def _flash_fused_bwd(window, interpret, res, ct):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: chunked_attention(q, k, v, window=window), q, k, v)
+    return vjp(ct)
+
+
+_flash_fused.defvjp(_flash_fused_fwd, _flash_fused_bwd)
+
+
 def attend_train(p, cfg: ModelConfig, x, *, window: Optional[int] = None,
                  q_chunk: int = 512, kv_chunk: int = 512):
-    """Full block for train/prefill: project, chunked attention, out-proj."""
+    """Full block for train/prefill: project, chunked attention, out-proj.
+
+    Under ``kernel_ctx`` the score/softmax/weighted-sum pipeline runs as
+    the Pallas flash kernel (one launch per layer) — except for softcapped
+    archs, which the kernel does not implement."""
     B, S, _ = x.shape
     positions = jnp.arange(S)[None, :]
     q, k, v = _project_qkv(p, cfg, x, positions)
     w = window if window is not None else cfg.sliding_window
-    out = chunked_attention(q, k, v, window=w, q_chunk=q_chunk,
-                            kv_chunk=kv_chunk,
-                            softcap=cfg.attn_logit_softcap)
+    if kernel_ctx.active() and cfg.attn_logit_softcap is None:
+        out = _flash_fused(q, k, v, w, kernel_ctx.interpret())
+    else:
+        out = chunked_attention(q, k, v, window=w, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk,
+                                softcap=cfg.attn_logit_softcap)
     return jnp.einsum("bshk,hkd->bsd", _head_mask(cfg, out), p["wo"])
 
 

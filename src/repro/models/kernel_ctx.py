@@ -1,0 +1,50 @@
+"""Process-global fused-kernel context for the LM forward pass.
+
+The model stack is pure functions of (params, cfg, batch) — there is no
+per-call config object to carry a "use Pallas kernels" bit through
+``model.forward`` -> blocks -> ``layers.apply_norm`` /
+``attention.attend_train``. Like ``sharding/gather_ctx``, the switch is a
+process-global consulted at TRACE time: the step factories
+(``train/step.py``) enable it around tracing their jitted runners and the
+decision is baked into the compiled executable, so nothing is looked up
+per step at run time.
+
+Trace-time means jit-cache discipline is the caller's problem: any cached
+runner factory that traces under this context must key its cache on the
+(fused, interpret) pair it traced with (see ``step._epoch_runner_vmap``).
+"""
+from __future__ import annotations
+
+import contextlib
+
+_STATE = {"active": False, "interpret": False}
+
+
+def enable(interpret: bool = False) -> None:
+    _STATE["active"] = True
+    _STATE["interpret"] = bool(interpret)
+
+
+def disable() -> None:
+    _STATE["active"] = False
+    _STATE["interpret"] = False
+
+
+def active() -> bool:
+    return _STATE["active"]
+
+
+def interpret() -> bool:
+    return _STATE["interpret"]
+
+
+@contextlib.contextmanager
+def scope(active: bool = True, interpret: bool = False):
+    """Enable (or disable) kernel dispatch for the duration of a trace."""
+    prev = dict(_STATE)
+    _STATE["active"] = bool(active)
+    _STATE["interpret"] = bool(interpret)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)

@@ -7,10 +7,13 @@ this keeps pjit/shard_map sharding rules a simple path-pattern match
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.models import kernel_ctx
 
 
 def _dense_init(key, shape, in_axis_size, dtype):
@@ -29,17 +32,46 @@ def init_norm(cfg: ModelConfig, dtype):
     return p
 
 
-def apply_norm(p, x, norm_type: str, eps: float = 1e-6):
+def _rmsnorm_ref(x, scale, eps: float):
     xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_fused(x, scale, eps: float, interpret: bool):
+    """Pallas RMSNorm with the pure-JAX backward: interpret-mode Pallas
+    has no transpose rule, and the kernel zoo ships forward kernels only —
+    the reference VJP recomputes from (x, scale), same math either way."""
+    from repro.kernels.rmsnorm import ops as rms_ops
+    return rms_ops.rmsnorm(x, scale, eps=eps, interpret=interpret)
+
+
+def _rmsnorm_fused_fwd(x, scale, eps, interpret):
+    return _rmsnorm_fused(x, scale, eps, interpret), (x, scale)
+
+
+def _rmsnorm_fused_bwd(eps, interpret, res, ct):
+    x, scale = res
+    _, vjp = jax.vjp(lambda x, s: _rmsnorm_ref(x, s, eps), x, scale)
+    return vjp(ct)
+
+
+_rmsnorm_fused.defvjp(_rmsnorm_fused_fwd, _rmsnorm_fused_bwd)
+
+
+def apply_norm(p, x, norm_type: str, eps: float = 1e-6):
     if norm_type == "layernorm":
+        xf = x.astype(jnp.float32)
         mean = xf.mean(-1, keepdims=True)
         var = ((xf - mean) ** 2).mean(-1, keepdims=True)
         y = (xf - mean) * jax.lax.rsqrt(var + eps)
         y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
-    else:
-        ms = (xf * xf).mean(-1, keepdims=True)
-        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
-    return y.astype(x.dtype)
+        return y.astype(x.dtype)
+    if kernel_ctx.active():
+        return _rmsnorm_fused(x, p["scale"], eps, kernel_ctx.interpret())
+    return _rmsnorm_ref(x, p["scale"], eps)
 
 
 def rms_norm_1d(scale, x, eps: float = 1e-6):

@@ -138,6 +138,76 @@ def correct(mode: str, state: VRState, g, M: int, *, g_snap=None,
     return v, jax.lax.cond(at_epoch_end, roll, keep, None)
 
 
+def apply(mode: str, state: VRState, g, M: int, *, lr: float, g_snap=None,
+          params=None, idx=None, interpret: bool = False):
+    """Fused VR correction + SGD parameter update: the arithmetic of
+    ``correct`` followed by ``optimizers.sgd`` / ``apply_updates``, with
+    the param-sized elementwise work (correction, step, table row,
+    anchor/accumulator update) dispatched to the ``kernels/vr_update``
+    Pallas kernel as ONE launch over the flattened param pytree
+    (DESIGN.md §Fused kernels hot-path).
+
+    Returns (new_params, new_state). SGD only — the kernel bakes the
+    plain ``x - lr*v`` step; stateful optimizers keep the unfused path.
+    ``params`` here is the live pre-update iterate (it is both the x the
+    kernel steps and, for svrg at epoch end, the snapshot source —
+    matching ``correct``'s pre-update refresh). The kernel computes in
+    f32 and results are cast back to each state leaf's dtype, so bf16
+    profiles agree to cast precision rather than bit-for-bit.
+    """
+    from repro.kernels.vr_update import ops as vr_ops
+
+    i = state.idx if idx is None else idx
+    at_epoch_end = i == (M - 1)
+
+    if mode == "svrg":
+        x_new, _, gto, _ = vr_ops.vr_update_inline(
+            params, g, g_snap, state.gbar, state.gtilde,
+            eta=lr, m=M, saga=False, interpret=interpret)
+        gtilde = tmap(lambda t, a: a.astype(t.dtype), state.gtilde, gto)
+
+        def refresh(_):
+            return VRState((), gtilde, tmap(jnp.zeros_like, gtilde),
+                           tmap(lambda p: p + 0, params),
+                           jnp.zeros((), jnp.int32))
+
+        def keep(_):
+            return VRState((), state.gbar, gtilde, state.snapshot, i + 1)
+
+        return x_new, jax.lax.cond(at_epoch_end, refresh, keep, None)
+
+    # table modes: the slot read/write stays a lax.switch over static
+    # indices (same SPMD-partitioner reasoning as ``correct``); the row
+    # content comes out of the kernel's table lane.
+    old = jax.lax.switch(
+        i, [(lambda m: lambda: tmap(lambda t: t[m], state.table))(m)
+            for m in range(M)])
+    x_new, row, gto, gbo = vr_ops.vr_update_inline(
+        params, g, old, state.gbar, state.gtilde,
+        eta=lr, m=M, saga=(mode == "saga"), interpret=interpret)
+    table = jax.lax.switch(
+        i, [(lambda m: lambda: tmap(
+            lambda t, a: t.at[m].set(a.astype(t.dtype)),
+            state.table, row))(m) for m in range(M)])
+
+    if mode == "saga":
+        gbar = tmap(lambda c, a: a.astype(c.dtype), state.gbar, gbo)
+        return x_new, VRState(table, gbar, state.gtilde, (), (i + 1) % M)
+
+    # centralvr: anchor frozen (kernel passes it through); accumulator
+    # from the kernel's gtilde lane, swapped in at epoch end
+    gtilde = tmap(lambda t, a: a.astype(t.dtype), state.gtilde, gto)
+
+    def roll(_):
+        return VRState(table, gtilde, tmap(jnp.zeros_like, gtilde),
+                       (), jnp.zeros((), jnp.int32))
+
+    def keep(_):
+        return VRState(table, state.gbar, gtilde, (), i + 1)
+
+    return x_new, jax.lax.cond(at_epoch_end, roll, keep, None)
+
+
 def grads_per_step(mode: str) -> int:
     """Table 1: gradient evaluations per iteration."""
     return 2 if mode == "svrg" else 1

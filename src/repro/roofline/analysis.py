@@ -29,6 +29,46 @@ PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s / chip
 ICI_BW = 50e9              # bytes/s / link
 
+# ---------------------------------------------------------------------------
+# VR-step memory traffic (param-sized HBM passes per inner-loop step)
+# ---------------------------------------------------------------------------
+# The fused kernels/vr_update launch touches each param-sized buffer once:
+# reads {x, g, g_old, gbar, gtilde}, writes {x', table-row, gtilde', gbar'}
+# = 5 reads / 4 writes regardless of mode. The unfused algebra XLA emits
+# for the same step is a chain of elementwise passes, counted from the
+# oracle dataflow (vr_wrapper.correct + sgd apply, per param-sized buffer
+# touched):
+#   centralvr  v=g-old+gbar (3r/1w), table row (1r/1w), gtilde+=g/M
+#              (2r/1w), u=-lr*v; x+=u (3r/1w)              -> 9r / 4w
+#   saga       centralvr's passes + gbar+=(g-old)/M re-reads the three
+#              correction operands minus the gtilde pass   -> 10r / 4w
+#   svrg       no table row; v=g-gsnap+gbar (3r/1w),
+#              gtilde+=g/M (2r/1w), fused-negate update
+#              x-=lr*v (3r/1w)                             -> 8r / 3w
+VR_TRAFFIC = {
+    ("centralvr", True): (5, 4), ("centralvr", False): (9, 4),
+    ("saga", True): (5, 4), ("saga", False): (10, 4),
+    ("svrg", True): (5, 4), ("svrg", False): (8, 3),
+}
+
+
+def vr_step_traffic(n_params: int, mode: str, *, fused: bool,
+                    bytes_per_el: int = 4) -> dict:
+    """Predicted HBM traffic of one VR inner-loop step over ``n_params``
+    parameters: param-sized buffer passes per the table above."""
+    reads, writes = VR_TRAFFIC[(mode, bool(fused))]
+    return {"mode": mode, "fused": bool(fused), "reads": reads,
+            "writes": writes, "passes": reads + writes,
+            "bytes": float((reads + writes) * n_params * bytes_per_el)}
+
+
+def vr_fused_traffic_ratio(mode: str) -> float:
+    """Analytical unfused/fused HBM-traffic ratio for one VR step —
+    13/9 for centralvr, the floor the BENCH roofline section asserts."""
+    ru, wu = VR_TRAFFIC[(mode, False)]
+    rf, wf = VR_TRAFFIC[(mode, True)]
+    return (ru + wu) / (rf + wf)
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,

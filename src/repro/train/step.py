@@ -21,6 +21,7 @@ Modes (TrainConfig.vr / vr_workers):
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, NamedTuple, Optional
 
@@ -31,7 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.config import ModelConfig, TrainConfig
 from repro.data import synthetic
 from repro.launch import mesh as meshlib
-from repro.models import model
+from repro.models import kernel_ctx, model
 from repro.optim import optimizers, vr_wrapper
 from repro.sharding import specs
 
@@ -133,22 +134,41 @@ def _local_grads(params, cfg, tcfg, tokens, fe, act_sharding=None):
     return loss, grads
 
 
-def _make_per_worker(cfg: ModelConfig, tcfg: TrainConfig, act_sharding=None):
+def _make_per_worker(cfg: ModelConfig, tcfg: TrainConfig, act_sharding=None,
+                     fused: bool = False, interpret: bool = False):
     """One worker's local step (grads -> VR correction -> optimizer),
     shared by the per-step train_step, the vmap epoch scan, and the spmd
-    epoch runner — the execution models differ, the math must not."""
+    epoch runner — the execution models differ, the math must not.
+
+    ``fused`` (a RESOLVED bool — callers go through
+    ``kernels.resolve_fused``) routes the hot paths through the Pallas
+    kernels: the forward/backward traces under ``kernel_ctx`` (RMSNorm +
+    flash attention), and for SGD the VR correction + update collapses
+    into one ``vr_update`` launch (``vr_wrapper.apply``)."""
     M = tcfg.vr_table_size
     mode = tcfg.vr
     opt = optimizers.make(tcfg.optimizer, tcfg.learning_rate,
                           tcfg.weight_decay)
+    fuse_vr = fused and mode != "none" and tcfg.optimizer == "sgd"
 
     def per_worker(params, vr_state, opt_state, tokens, fe, idx=None):
         # idx: scalar step % M, kept OUT of the vmapped axes so the VR
         # table switch stays unbatched (see vr_wrapper.correct)
-        loss, g = _local_grads(params, cfg, tcfg, tokens, fe, act_sharding)
+        ctx = (kernel_ctx.scope(True, interpret) if fused
+               else contextlib.nullcontext())
+        with ctx:
+            loss, g = _local_grads(params, cfg, tcfg, tokens, fe,
+                                   act_sharding)
+            g_snap = None
+            if mode == "svrg":
+                _, g_snap = _local_grads(vr_state.snapshot, cfg, tcfg,
+                                         tokens, fe, act_sharding)
+        if fuse_vr:
+            params, vr_state = vr_wrapper.apply(
+                mode, vr_state, g, M, lr=tcfg.learning_rate,
+                g_snap=g_snap, params=params, idx=idx, interpret=interpret)
+            return params, vr_state, opt_state, loss
         if mode == "svrg":
-            _, g_snap = _local_grads(vr_state.snapshot, cfg, tcfg, tokens,
-                                     fe, act_sharding)
             v, vr_state = vr_wrapper.correct(mode, vr_state, g, M,
                                              g_snap=g_snap, params=params,
                                              idx=idx)
@@ -240,7 +260,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
 # ---------------------------------------------------------------------------
 
 def make_epoch_runner(cfg: ModelConfig, tcfg: TrainConfig, W: int, *,
-                      backend: str = "vmap", mesh=None):
+                      backend: str = "vmap", mesh=None, fused=False):
     """One whole communication epoch (M*K steps) as a single jitted
     ``lax.scan`` with donated TrainState: ``run_epoch(state) -> (state,
     (M*K,) losses)``, with the Algorithm-2 worker average applied at the
@@ -261,20 +281,36 @@ def make_epoch_runner(cfg: ModelConfig, tcfg: TrainConfig, W: int, *,
 
     Returns (run_epoch, meta); meta carries the worker mesh for spmd so
     callers can place the state (``place_train_state``).
+
+    ``fused``: False | True | "auto" — same axis as the convex drivers
+    (``solver.RunSpec.fused``). True forces the Pallas kernels (interpret
+    mode off-TPU); "auto" fuses only on a compiled Pallas backend. The
+    fused VR step requires the SGD optimizer (the kernel bakes the plain
+    ``x - lr*v`` update); forcing it with a stateful optimizer is an
+    error, while "auto" quietly fuses just the model forward.
     """
     if backend not in ("vmap", "spmd"):
         raise ValueError(f"unknown backend {backend!r}: "
                          "expected 'vmap' or 'spmd'")
+    from repro import kernels
+    fuse_on, interpret = kernels.resolve_fused(fused)
+    if (fused is True and tcfg.vr != "none"
+            and tcfg.optimizer != "sgd"):
+        raise ValueError(
+            f"fused=True: the fused VR step bakes a plain SGD update, but "
+            f"optimizer={tcfg.optimizer!r}; use optimizer='sgd' or "
+            "fused='auto' (which fuses only the model forward)")
     E = tcfg.vr_table_size * tcfg.local_epoch
     accum, mb = batch_geometry(tcfg, W)
     meta = {"workers": W, "comm_every": E, "accum": accum,
             "microbatch": mb, "backend": backend,
             "grads_per_step": vr_wrapper.grads_per_step(tcfg.vr),
             "vr_storage_mult": vr_wrapper.storage_multiplier(
-                tcfg.vr, tcfg.vr_table_size)}
+                tcfg.vr, tcfg.vr_table_size),
+            "fused": fuse_on, "interpret": interpret}
 
     if backend == "vmap":
-        return _epoch_runner_vmap(cfg, tcfg, W), meta
+        return _epoch_runner_vmap(cfg, tcfg, W, fuse_on, interpret), meta
 
     if mesh is None:
         from repro.core import spmd
@@ -288,13 +324,13 @@ def make_epoch_runner(cfg: ModelConfig, tcfg: TrainConfig, W: int, *,
         # one worker has no axis to shard — like the convex backend
         # (core/spmd.py run_centralvr), "spmd" then means "execute on the
         # mesh device" so launchers address one API regardless of backend
-        return _epoch_runner_vmap(cfg, tcfg, W), meta
+        return _epoch_runner_vmap(cfg, tcfg, W, fuse_on, interpret), meta
     tokens = synthetic.epoch_tokens(
         cfg, tcfg.seed, workers=W, steps=E, accum=accum, microbatch=mb,
         seq=tcfg.seq_len, table_size=tcfg.vr_table_size)
     tokens = jax.device_put(
         tokens, NamedSharding(mesh, P(LM_WORKER_AXIS)))
-    runner = _epoch_runner_spmd(cfg, tcfg, mesh)
+    runner = _epoch_runner_spmd(cfg, tcfg, mesh, fuse_on, interpret)
 
     def run_epoch(state: TrainState):
         params, vr, opt, step, losses = runner(
@@ -306,10 +342,14 @@ def make_epoch_runner(cfg: ModelConfig, tcfg: TrainConfig, W: int, *,
 
 
 @functools.lru_cache(maxsize=None)
-def _epoch_runner_vmap(cfg: ModelConfig, tcfg: TrainConfig, W: int):
-    """One jitted runner per (cfg, tcfg, W) — repeated run_training calls
-    on the same config reuse the compiled epoch executable."""
-    per_worker = _make_per_worker(cfg, tcfg)
+def _epoch_runner_vmap(cfg: ModelConfig, tcfg: TrainConfig, W: int,
+                       fused: bool = False, interpret: bool = False):
+    """One jitted runner per (cfg, tcfg, W, fused, interpret) — repeated
+    run_training calls on the same config reuse the compiled epoch
+    executable. The fused pair is part of the key because kernel dispatch
+    is decided at trace time (models/kernel_ctx)."""
+    per_worker = _make_per_worker(cfg, tcfg, fused=fused,
+                                  interpret=interpret)
     E = tcfg.vr_table_size * tcfg.local_epoch
     accum, mb = batch_geometry(tcfg, W)
 
@@ -343,15 +383,17 @@ def _epoch_runner_vmap(cfg: ModelConfig, tcfg: TrainConfig, W: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _epoch_runner_spmd(cfg: ModelConfig, tcfg: TrainConfig, mesh):
-    """One compiled executable per (cfg, tcfg, mesh): the whole epoch scan
-    inside a single jitted shard_map, worker state donated.
-    ``check_rep=False`` for the same reason as the convex runners
-    (core/spmd.py): the replication checker rejects carries that enter
-    unreplicated and leave pmean-replicated."""
+def _epoch_runner_spmd(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                       fused: bool = False, interpret: bool = False):
+    """One compiled executable per (cfg, tcfg, mesh, fused, interpret):
+    the whole epoch scan inside a single jitted shard_map, worker state
+    donated. ``check_rep=False`` for the same reason as the convex
+    runners (core/spmd.py): the replication checker rejects carries that
+    enter unreplicated and leave pmean-replicated."""
     from jax.experimental.shard_map import shard_map
 
-    per_worker = _make_per_worker(cfg, tcfg)
+    per_worker = _make_per_worker(cfg, tcfg, fused=fused,
+                                  interpret=interpret)
     E = tcfg.vr_table_size * tcfg.local_epoch
     mode = tcfg.vr
     ax = LM_WORKER_AXIS

@@ -1,0 +1,235 @@
+"""Fused-vs-unfused agreement pins (ISSUE 6 tentpole, DESIGN.md §Fused
+kernels hot-path).
+
+The fused hot paths — the single-launch ``kernels/vr_update`` VR step in
+the convex drivers and the Pallas rmsnorm/flash-attention forward +
+fused VR correction in the LM epoch scan — must reproduce the retained
+unfused oracle's trajectory:
+
+  * convex drivers (in-process, vmap backend): every VR-family algorithm
+    through the solver API at p ∈ {1, 4} — x64 is on (conftest), the
+    fused kernel accumulates in the input precision, so agreement is
+    near machine epsilon;
+  * convex drivers under spmd (subprocess with 8 forced host devices —
+    the main pytest process must keep the real single-device view, same
+    rule as test_spmd_backend): fused spmd == unfused spmd for the
+    sync/dsvrg/dsaga runners at p=4;
+  * LM epoch scan: fused vmap == unfused vmap for every VR mode over
+    TWO epochs — svrg's first epoch from a fresh snapshot is a no-op
+    (g_snap == g and gbar == 0, so v == 0), so a one-epoch comparison
+    would be vacuous for it;
+  * contract checks: RunSpec validation of the ``fused`` axis, the
+    fused-VR-requires-plain-SGD refusal, and donation safety (aliased
+    buffers into the donating ``ops.vr_update`` entry point must raise,
+    not silently corrupt).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# x64 problems + in-input-precision kernel accumulation: the fused step
+# is the same algebra in a different launch order
+CONVEX_TOL = 1e-10
+
+# float32 LM forward: kernel block order vs XLA fusion order
+LM_TOL = dict(rtol=3e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# convex drivers, vmap backend (in-process)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,p", [
+    ("centralvr", 1), ("svrg", 1), ("saga", 1),
+    ("centralvr_sync", 4), ("centralvr_async", 4),
+    ("dsvrg", 4), ("dsaga", 4),
+])
+def test_convex_fused_matches_unfused(algo, p):
+    import jax
+
+    from repro import RunSpec, solve
+    from repro.config import ConvexConfig
+    from repro.core import convex, distributed
+
+    key = jax.random.PRNGKey(7)
+    if p == 1:
+        problem = convex.make_logistic_data(jax.random.PRNGKey(2), 48, 8)
+        eta = convex.auto_eta(problem, 0.3)
+    else:
+        cfg = ConvexConfig(problem="logistic", n=48, d=8, workers=p)
+        problem = distributed.make_distributed(jax.random.PRNGKey(2), cfg)
+        eta = convex.auto_eta(problem.merged(), 0.3)
+
+    res_u = solve(RunSpec(algo=algo, p=p, eta=eta, rounds=3), problem,
+                  key=key)
+    res_f = solve(RunSpec(algo=algo, p=p, eta=eta, rounds=3, fused=True),
+                  problem, key=key)
+    np.testing.assert_allclose(res_f.x, res_u.x, rtol=0, atol=CONVEX_TOL)
+    np.testing.assert_allclose(res_f.rels, res_u.rels, rtol=CONVEX_TOL,
+                               atol=CONVEX_TOL)
+
+
+# ---------------------------------------------------------------------------
+# convex drivers, spmd backend (forced-multi-device subprocess)
+# ---------------------------------------------------------------------------
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, "src")
+    from repro.core import spmd
+    spmd.force_host_devices(8)      # before the first jax operation
+    import json
+    import jax
+    jax.config.update("jax_enable_x64", True)   # match conftest precision
+    import numpy as np
+    from repro.config import ConvexConfig
+    from repro.core import convex, distributed
+
+    def diff(a, b):
+        return float(np.abs(np.asarray(a) - np.asarray(b)).max())
+
+    def final_x(st):
+        for attr in ("x", "x_c"):   # sync: x; dsaga (AsyncState): x_c
+            if hasattr(st, attr):
+                return getattr(st, attr)
+        return st                   # dsvrg returns the iterate directly
+
+    key = jax.random.PRNGKey(7)
+    cfg = ConvexConfig(problem="logistic", n=48, d=8, workers=4)
+    sp = distributed.make_distributed(jax.random.PRNGKey(2), cfg)
+    eta = convex.auto_eta(sp.merged(), 0.3)
+
+    out = {"device_count": jax.device_count(), "drivers": {}}
+    for name, fn, kw in (
+            ("sync", distributed.run_sync, {}),
+            ("dsvrg", distributed.run_dsvrg, {"tau": 32}),
+            ("dsaga", distributed.run_dsaga, {"fetch": "stale"})):
+        st_u, rels_u = fn(sp, eta=eta, rounds=3, key=key, backend="spmd",
+                          **kw)
+        st_f, rels_f = fn(sp, eta=eta, rounds=3, key=key, backend="spmd",
+                          fused=True, **kw)
+        out["drivers"][name] = {"dx": diff(final_x(st_u), final_x(st_f)),
+                                "drel": diff(rels_u, rels_f)}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_convex_fused_matches_unfused_spmd():
+    proc = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], cwd=ROOT,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    assert out["device_count"] == 8
+    for name, d in out["drivers"].items():
+        assert d["dx"] <= CONVEX_TOL, (name, d)
+        assert d["drel"] <= CONVEX_TOL, (name, d)
+
+
+# ---------------------------------------------------------------------------
+# LM epoch scan
+# ---------------------------------------------------------------------------
+
+def _tiny_setup(vr, W):
+    from repro.config import ModelConfig, TrainConfig
+
+    cfg = ModelConfig(name="tiny-scan", family="dense", num_layers=2,
+                      d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32",
+                      param_dtype="float32")
+    tcfg = TrainConfig(seq_len=16, global_batch=2 * W, microbatch=2,
+                       optimizer="sgd", learning_rate=0.1, vr=vr,
+                       vr_table_size=2, local_epoch=1)
+    return cfg, tcfg
+
+
+def _run_epochs(cfg, tcfg, W, fused, epochs=2):
+    import jax
+
+    from repro.train import step as tstep
+
+    run_epoch, meta = tstep.make_epoch_runner(cfg, tcfg, W, backend="vmap",
+                                              fused=fused)
+    state = tstep.init_train_state(cfg, tcfg, jax.random.PRNGKey(0), W)
+    losses = []
+    for _ in range(epochs):
+        state, ls = run_epoch(state)
+        losses.append(np.asarray(ls, dtype=float))
+    return state, np.concatenate([l.ravel() for l in losses])
+
+
+@pytest.mark.parametrize("vr", ["centralvr", "svrg", "saga"])
+@pytest.mark.parametrize("W", [1, 2])
+def test_lm_fused_matches_unfused(vr, W):
+    import jax
+
+    cfg, tcfg = _tiny_setup(vr, W)
+    # two epochs: svrg's first epoch from a fresh snapshot is a no-op
+    st_u, loss_u = _run_epochs(cfg, tcfg, W, fused=False)
+    st_f, loss_f = _run_epochs(cfg, tcfg, W, fused=True)
+    for lu, lf in zip(jax.tree_util.tree_leaves(st_u.params),
+                      jax.tree_util.tree_leaves(st_f.params)):
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(lu), **LM_TOL)
+    np.testing.assert_allclose(loss_f, loss_u, **LM_TOL)
+    # the unfused run must not have seen a vacuous trajectory
+    assert np.all(np.isfinite(loss_u)) and loss_u.size >= 2
+
+
+def test_lm_fused_auto_forward_only_with_adam():
+    """fused='auto' with a non-sgd optimizer fuses only the model forward
+    (no refusal); fused=True refuses — the fused VR step bakes plain SGD."""
+    import jax
+
+    from repro.train import step as tstep
+
+    cfg, tcfg = _tiny_setup("centralvr", 1)
+    import dataclasses
+    tcfg = dataclasses.replace(tcfg, optimizer="adam")
+    with pytest.raises(ValueError, match="plain SGD"):
+        tstep.make_epoch_runner(cfg, tcfg, 1, backend="vmap", fused=True)
+    run_epoch, meta = tstep.make_epoch_runner(cfg, tcfg, 1, backend="vmap",
+                                              fused="auto")
+    state = tstep.init_train_state(cfg, tcfg, jax.random.PRNGKey(0), 1)
+    state, losses = run_epoch(state)
+    assert np.all(np.isfinite(np.asarray(losses, dtype=float)))
+
+
+# ---------------------------------------------------------------------------
+# contracts
+# ---------------------------------------------------------------------------
+
+def test_runspec_fused_validation():
+    from repro import RunSpec
+
+    with pytest.raises(ValueError, match="fused"):
+        RunSpec(algo="centralvr", eta=0.1, rounds=1, fused="yes")
+    with pytest.raises(ValueError, match="no VR inner loop"):
+        RunSpec(algo="sgd", eta=0.1, rounds=1, fused=True)
+    # None normalizes to False; "auto" resolves per backend
+    assert RunSpec(algo="centralvr", eta=0.1, rounds=1,
+                   fused=None).fused is False
+    assert RunSpec(algo="centralvr", eta=0.1, rounds=1,
+                   fused="auto").fused == "auto"
+
+
+def test_vr_update_rejects_aliased_donated_buffers():
+    """``ops.vr_update`` donates all five operands; passing the same
+    buffer for two of them must fail loudly (double donation), never
+    silently alias the in-place update."""
+    import jax.numpy as jnp
+
+    from repro.kernels.vr_update import ops
+
+    x = {"a": jnp.ones((64,), jnp.float32)}
+    g = {"a": jnp.full((64,), 2.0, jnp.float32)}
+    with pytest.raises(Exception, match="donate the same buffer twice"):
+        ops.vr_update(x, x, g, g, g, eta=0.1, m=4, saga=False,
+                      interpret=True)
