@@ -24,12 +24,21 @@ mode measures the emulator, not the kernel, and the agreement tests
 already pin its numerics.  Fused rows are excluded from the legacy
 gates, which pin the unfused runtimes against the seed host paths.
 
+TELEMETRY rows (``telemetry: true``, the ``-obs`` twins) are printed
+with their overhead-vs-off ratio but never gated: they measure the
+recorder's observation cost, and the telemetry-OFF base rows are what
+the floors protect (enabling telemetry must not be able to fail CI).
+
     python benchmarks/check_regression.py [--path BENCH_drivers.json]
                                           [--train-path BENCH_train.json]
                                           [--floor 1.0]
                                           [--fused-floor 1.0]
+                                          [--report report.json]
 
 Exit status 1 on regression — the benchmark-smoke CI job gates on it.
+``--report`` additionally writes a machine-readable JSON gate report
+(every gate decision + the overall verdict) that the CI lane uploads as
+an artifact, so a red gate is diagnosable from the artifact alone.
 """
 from __future__ import annotations
 
@@ -53,19 +62,32 @@ def _load_rows(path: str):
     return rows
 
 
-def _gate(rows, speedup_key: str, floor: float, what: str):
+def _gate(rows, speedup_key: str, floor: float, what: str, report):
     """Names of rows whose speedup is below the floor (prints each row)."""
     bad = []
     for r in rows:
         speedup = r[speedup_key]
         status = "ok" if speedup >= floor else "REGRESSION"
         print(f"{r['name']}: {what} {speedup:.1f}x warm [{status}]")
+        report.append({"name": r["name"], "gate": speedup_key,
+                       "value": speedup, "floor": floor, "status": status})
         if speedup < floor:
             bad.append(r["name"])
     return bad
 
 
-def _gate_fused(rows, floor: float):
+def _show_telemetry(rows, report):
+    """Telemetry twins: printed + reported, never gated."""
+    for r in rows:
+        over = r.get("overhead_vs_off")
+        print(f"{r['name']}: telemetry overhead "
+              f"{over:.2f}x vs off [informational]")
+        report.append({"name": r["name"], "gate": "overhead_vs_off",
+                       "value": over, "floor": None,
+                       "status": "informational"})
+
+
+def _gate_fused(rows, floor: float, report):
     """Gate fused twin rows on ``speedup_vs_unfused``; interpret-mode
     rows (CPU kernel emulation) are printed as exempt and not gated."""
     bad = []
@@ -75,11 +97,17 @@ def _gate_fused(rows, floor: float):
         if r.get("interpret"):
             print(f"{r['name']}: fused vs unfused {speedup:.2f}x warm "
                   "[exempt: interpret]")
+            report.append({"name": r["name"],
+                           "gate": "speedup_vs_unfused",
+                           "value": speedup, "floor": None,
+                           "status": "exempt:interpret"})
             continue
         gated += 1
         status = "ok" if speedup >= floor else "REGRESSION"
         print(f"{r['name']}: fused vs unfused {speedup:.2f}x warm "
               f"[{status}]")
+        report.append({"name": r["name"], "gate": "speedup_vs_unfused",
+                       "value": speedup, "floor": floor, "status": status})
         if speedup < floor:
             bad.append(r["name"])
     return bad, gated
@@ -97,18 +125,24 @@ def main(argv=None) -> int:
     ap.add_argument("--fused-floor", type=float, default=1.0,
                     help="minimum acceptable fused-vs-unfused warm speedup "
                          "(compiled-backend rows only; interpret exempt)")
+    ap.add_argument("--report", default="",
+                    help="write a machine-readable JSON gate report here")
     args = ap.parse_args(argv)
 
     failed = False
     fused_rows = []
+    report = []
 
     rows = _load_rows(args.path)
     if rows is None:
         failed = True
     else:
         fused_rows += [r for r in rows if r.get("fused")]
-        legacy = [r for r in rows if not r.get("fused")]
-        bad = _gate(legacy, "speedup_warm", args.floor, "scan vs host loop")
+        _show_telemetry([r for r in rows if r.get("telemetry")], report)
+        legacy = [r for r in rows
+                  if not r.get("fused") and not r.get("telemetry")]
+        bad = _gate(legacy, "speedup_warm", args.floor, "scan vs host loop",
+                    report)
         if bad:
             print(f"speedup below {args.floor:.2f}x floor for: "
                   f"{', '.join(bad)}", file=sys.stderr)
@@ -122,15 +156,17 @@ def main(argv=None) -> int:
         failed = True
     else:
         fused_rows += [r for r in rows if r.get("fused")]
+        _show_telemetry([r for r in rows if r.get("telemetry")], report)
         scan = [r for r in rows
-                if r["path"].startswith("scan-") and not r.get("fused")]
+                if r["path"].startswith("scan-") and not r.get("fused")
+                and not r.get("telemetry")]
         if not scan:
             print(f"{args.train_path} has no scan-path rows",
                   file=sys.stderr)
             failed = True
         else:
             bad = _gate(scan, "speedup_vs_host", args.floor,
-                        "epoch scan vs seed host path")
+                        "epoch scan vs seed host path", report)
             if bad:
                 print(f"train speedup below {args.floor:.2f}x floor for: "
                       f"{', '.join(bad)}", file=sys.stderr)
@@ -140,7 +176,7 @@ def main(argv=None) -> int:
                       f"{args.floor:.2f}x floor")
 
     if fused_rows:
-        bad, gated = _gate_fused(fused_rows, args.fused_floor)
+        bad, gated = _gate_fused(fused_rows, args.fused_floor, report)
         if bad:
             print(f"fused speedup below {args.fused_floor:.2f}x floor "
                   f"for: {', '.join(bad)}", file=sys.stderr)
@@ -150,6 +186,18 @@ def main(argv=None) -> int:
             print(f"all {gated} gated fused rows at or above the "
                   f"{args.fused_floor:.2f}x floor ({exempt} interpret-mode "
                   "rows exempt)")
+
+    if args.report:
+        payload = {
+            "failed": failed,
+            "floor": args.floor,
+            "fused_floor": args.fused_floor,
+            "artifacts": {"drivers": args.path, "train": args.train_path},
+            "gates": report,
+        }
+        with open(args.report, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote gate report to {args.report}")
 
     return 1 if failed else 0
 

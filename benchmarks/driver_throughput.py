@@ -102,6 +102,43 @@ def _fused_twin(base_row, spec, problem, epochs, repeat):
     }
 
 
+def _obs_twin(base_row, spec, problem):
+    """The same run with telemetry ON (``-obs`` suffix): one recorded
+    ``solve()``, with the warm cost read off the staged execute span (the
+    staged path always re-lowers/re-compiles, so repeat timing would
+    measure compilation; the span IS the blocked warm execution).  The
+    twin quantifies telemetry overhead against the telemetry-off base row
+    — ``check_regression`` prints these rows but gates only the base
+    (telemetry-off) rows, which must stay at the pre-telemetry floor."""
+    import tempfile
+
+    from repro import obs
+    from repro.obs import report as obs_report
+    from repro.obs import schema as obs_schema
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "run.jsonl")
+        with obs.recording(path):
+            res = solve(spec, problem)
+        s = obs_report.summarize(obs_schema.load_rows(path))
+    warm = s["warm_s"]
+    return {
+        "name": base_row["name"] + "-obs",
+        "telemetry": True,
+        "us_per_call": warm * 1e6,
+        "scan_warm_s": warm,
+        "obs_lower_s": s["lower_s"],
+        "obs_compile_s": s["compile_s"],
+        "overhead_vs_off": warm / base_row["scan_warm_s"],
+        "off_speedup_vs_host": base_row["speedup_warm"],
+        "n_telemetry_rows": s["n_rows"],
+        "provenance": res.provenance(),
+        "derived": (f"obs:warm={warm:.3f}s,compile={s['compile_s']:.3f}s;"
+                    f"overhead_vs_off="
+                    f"{warm / base_row['scan_warm_s']:.2f}x"),
+    }
+
+
 def run(quick: bool = False):
     n, d = (128, 16) if quick else (256, 64)
     rounds = 4 if quick else 8
@@ -136,9 +173,12 @@ def run(quick: bool = False):
             lambda: host_loop.run_async(sp, eta=eta, rounds=rounds, key=key),
             rounds, repeat))
         if p == max(WORKER_COUNTS):
-            rows.append(_fused_twin(rows[-1], spec, sp, rounds, repeat))
+            base = rows[-1]
+            rows.append(_fused_twin(base, spec, sp, rounds, repeat))
+            rows.append(_obs_twin(base, spec, sp))
 
-    p8 = [r for r in rows if r["name"].endswith("-p8")]
+    p8 = [r for r in rows
+          if r["name"].endswith("-p8") and not r.get("telemetry")]
     beats = all(r["speedup_warm"] > 1.0 for r in p8)
     payload = {
         "config": {"n_per_worker": n, "d": d, "rounds": rounds,

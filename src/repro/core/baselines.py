@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core import convex, runtime
 from repro.core.convex import Problem
 from repro.core.distributed import ShardedProblem
+from repro.obs import stage as obs_stage
 
 
 # ---------------------------------------------------------------------------
@@ -31,7 +32,7 @@ from repro.core.distributed import ShardedProblem
 @functools.partial(jax.jit, donate_argnames=("x",))
 def _sgd_scan(prob: Problem, x, g0, keys, etas):
     def one_epoch(x, xs):
-        runtime.TRACES["sgd_epoch"] += 1
+        runtime.TRACES.inc("sgd_epoch")
         k, eta_l = xs
         perm = jax.random.permutation(k, prob.n)
 
@@ -56,14 +57,15 @@ def run_sgd(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     g0 = convex.grad_norm0(prob)
     keys = jax.random.split(key, epochs)
     etas = eta / (1.0 + decay * jnp.arange(epochs))
-    return _sgd_scan(prob, x, g0, keys, etas)
+    return obs_stage.staged_call(_sgd_scan, prob, x, g0, keys, etas,
+                                 _label="solve/sgd")
 
 
 @functools.partial(jax.jit, static_argnames=("inner", "fused"),
                    donate_argnames=("x",))
 def _svrg_scan(prob: Problem, x, eta, g0, keys, inner: int, fused=None):
     def one_epoch(x, k):
-        runtime.TRACES["svrg_epoch"] += 1
+        runtime.TRACES.inc("svrg_epoch")
         xbar = x
         gbar = convex.full_grad(prob, xbar)
         idx = jax.random.randint(k, (inner,), 0, prob.n)
@@ -103,14 +105,16 @@ def run_svrg(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     g0 = convex.grad_norm0(prob)
     keys = jax.random.split(key, epochs)
     # grad evals per epoch: n + 2*inner (3n at inner=n)
-    return _svrg_scan(prob, x, eta, g0, keys, inner, fused=fused_t)
+    return obs_stage.staged_call(_svrg_scan, prob, x, eta, g0, keys,
+                                 _label="solve/svrg", inner=inner,
+                                 fused=fused_t)
 
 
 @functools.partial(jax.jit, static_argnames=("fused",),
                    donate_argnames=("carry",))
 def _saga_scan(prob: Problem, carry, eta, g0, keys, fused=None):
     def one_epoch(carry, k):
-        runtime.TRACES["saga_epoch"] += 1
+        runtime.TRACES.inc("saga_epoch")
         x, table, gbar = carry
         idx = jax.random.randint(k, (prob.n,), 0, prob.n)
 
@@ -151,8 +155,9 @@ def run_saga(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     table = convex.scalar_residual_all(prob, x)
     gbar = convex.data_grad_from_scalars(prob, table)
     keys = jax.random.split(key, epochs)
-    (x, table, gbar), rels = _saga_scan(prob, (x, table, gbar), eta, g0,
-                                        keys, fused=fused_t)
+    (x, table, gbar), rels = obs_stage.staged_call(
+        _saga_scan, prob, (x, table, gbar), eta, g0, keys,
+        _label="solve/saga", fused=fused_t)
     return x, rels
 
 
@@ -166,7 +171,7 @@ def _dist_sgd_scan(sp: ShardedProblem, x, g0, keys, etas, tau: int):
     merged = sp.merged()
 
     def round_(x, xs):
-        runtime.TRACES["dist_sgd_round"] += 1
+        runtime.TRACES.inc("dist_sgd_round")
         k, eta_l = xs
 
         def local(A, b, kk):
@@ -207,7 +212,8 @@ def run_dist_sgd(sp: ShardedProblem, *, eta: float, rounds: int,
     g0 = convex.grad_norm0(sp.merged())
     keys = jax.random.split(key, rounds)
     etas = eta / (1.0 + decay * jnp.arange(rounds) * tau) ** 0.5
-    return _dist_sgd_scan(sp, x, g0, keys, etas, tau)
+    return obs_stage.staged_call(_dist_sgd_scan, sp, x, g0, keys, etas,
+                                 _label="solve/dist_sgd", tau=tau)
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "steps_per_round"),
@@ -217,7 +223,7 @@ def _easgd_scan(sp: ShardedProblem, xc, xs, alpha, g0, keys, etas,
     merged = sp.merged()
 
     def round_(carry, ins):
-        runtime.TRACES["easgd_round"] += 1
+        runtime.TRACES.inc("easgd_round")
         xc, xs = carry
         k, eta_l = ins
 
@@ -280,8 +286,9 @@ def run_easgd(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     g0 = convex.grad_norm0(sp.merged())
     keys = jax.random.split(key, rounds)
     etas = eta / (1.0 + decay * jnp.arange(rounds) * sp.ns) ** 0.5
-    xc, _, rels = _easgd_scan(sp, xc, xs, alpha, g0, keys, etas, tau,
-                              steps_per_round)
+    xc, _, rels = obs_stage.staged_call(
+        _easgd_scan, sp, xc, xs, alpha, g0, keys, etas,
+        _label="solve/easgd", tau=tau, steps_per_round=steps_per_round)
     return xc, rels
 
 
@@ -291,7 +298,7 @@ def _ps_svrg_scan(sp: ShardedProblem, x, eta, g0, keys, inner: int):
     merged = sp.merged()
 
     def round_(x, k):
-        runtime.TRACES["ps_svrg_round"] += 1
+        runtime.TRACES.inc("ps_svrg_round")
         xbar = x
         gbar = convex.full_grad(merged, xbar)
 
@@ -336,4 +343,5 @@ def run_ps_svrg(sp: ShardedProblem, *, eta: float, rounds: int,
     g0 = convex.grad_norm0(sp.merged())
     inner = epoch_mult * sp.ns
     keys = jax.random.split(key, rounds)
-    return _ps_svrg_scan(sp, x, eta, g0, keys, inner)
+    return obs_stage.staged_call(_ps_svrg_scan, sp, x, eta, g0, keys,
+                                 _label="solve/ps_svrg", inner=inner)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 
 from repro.core import convex, runtime
 from repro.core.convex import Problem
+from repro.obs import stage as obs_stage
+from repro.obs import stream as obs_stream
 
 
 class VRState(NamedTuple):
@@ -129,25 +131,31 @@ def epoch_uniform(prob: Problem, state: VRState, eta: float, key: jax.Array,
 # Driver
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("sampling", "fused"),
+@functools.partial(jax.jit, static_argnames=("sampling", "fused", "stream"),
                    donate_argnames=("state",))
 def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str,
-              fused=None):
+              fused=None, stream: bool = False):
     """The whole Algorithm-1 run as one executable: a scan over epochs with
     the relative-grad-norm metric computed on device.  ``state`` is donated
     so the (n,) table and (d,) iterate/gbar update in place."""
 
-    def one_epoch(state, k):
-        runtime.TRACES["centralvr_epoch"] += 1
+    def one_epoch(state, xs):
+        i, k = xs if stream else (None, xs)
+        runtime.TRACES.inc("centralvr_epoch")
         if sampling == "permutation":
             order = jax.random.permutation(k, prob.n)
             new_state, _ = epoch(prob, state, eta, order, fused=fused)
         else:
             new_state, _ = epoch_uniform(prob, state, eta, k, fused=fused)
         rel = convex.rel_grad_norm(prob, new_state.x, g0)
+        if stream:
+            obs_stream.scan_metric("rel", i, rel)
         return new_state, rel
 
-    return jax.lax.scan(one_epoch, state, keys)
+    # `stream` is STATIC: telemetry off traces the exact pre-telemetry
+    # program (DESIGN.md §Observability)
+    xs = (jnp.arange(keys.shape[0]), keys) if stream else keys
+    return jax.lax.scan(one_epoch, state, xs)
 
 
 def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
@@ -180,7 +188,9 @@ def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     state = init_state(prob, eta, k_init, x0=x0)
     g0 = convex.grad_norm0(prob)
     keys = jax.random.split(k_run, epochs)
-    state, rels = _run_scan(prob, state, eta, g0, keys, sampling,
-                            fused=fused_t)
+    state, rels = obs_stage.staged_call(
+        _run_scan, prob, state, eta, g0, keys, _label="solve/centralvr",
+        sampling=sampling, fused=fused_t,
+        stream=obs_stream.stream_active())
     grad_evals = prob.n * jnp.arange(2, epochs + 2)
     return state, rels, grad_evals

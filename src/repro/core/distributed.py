@@ -39,6 +39,8 @@ import jax.numpy as jnp
 
 from repro.core import convex, runtime
 from repro.core.convex import Problem
+from repro.obs import stage as obs_stage
+from repro.obs import stream as obs_stream
 
 
 class ShardedProblem(NamedTuple):
@@ -204,18 +206,25 @@ def sync_round(sp: ShardedProblem, st: SyncState, eta: float, key: jax.Array,
     return SyncState(x=xs.mean(0), tables=tables, gbar=accs.mean(0))
 
 
-@functools.partial(jax.jit, static_argnames=("fused",),
+@functools.partial(jax.jit, static_argnames=("fused", "stream"),
                    donate_argnames=("st",))
-def _sync_scan(sp: ShardedProblem, st: SyncState, eta, g0, keys, fused=None):
+def _sync_scan(sp: ShardedProblem, st: SyncState, eta, g0, keys, fused=None,
+               stream: bool = False):
     merged = sp.merged()
 
-    def step(st, k):
-        runtime.TRACES["sync_round"] += 1
+    def step(st, xs):
+        i, k = xs if stream else (None, xs)
+        runtime.TRACES.inc("sync_round")
         st = sync_round(sp, st, eta, k, fused=fused)
         rel = convex.rel_grad_norm(merged, st.x, g0)
+        if stream:
+            obs_stream.scan_metric("rel", i, rel)
         return st, rel
 
-    return jax.lax.scan(step, st, keys)
+    # `stream` is STATIC: the telemetry-off trace below is byte-identical
+    # to the pre-telemetry program (DESIGN.md §Observability)
+    xs = (jnp.arange(keys.shape[0]), keys) if stream else keys
+    return jax.lax.scan(step, st, xs)
 
 
 def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
@@ -243,7 +252,10 @@ def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     st = sync_init(sp, eta, k_init)
     g0 = convex.grad_norm0(sp.merged())
     keys = jax.random.split(k_run, rounds)
-    return _sync_scan(sp, st, eta, g0, keys, fused=fused_t)
+    return obs_stage.staged_call(
+        _sync_scan, sp, st, eta, g0, keys,
+        _label="solve/centralvr_sync",
+        fused=fused_t, stream=obs_stream.stream_active())
 
 
 # ---------------------------------------------------------------------------
@@ -306,10 +318,10 @@ def async_event(sp: ShardedProblem, st: AsyncState, s, eta: float,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("fused",),
+@functools.partial(jax.jit, static_argnames=("fused", "stream"),
                    donate_argnames=("st",))
 def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys,
-                fused=None):
+                fused=None, stream: bool = False):
     """The full event schedule in one executable: an outer scan over rounds
     (emitting the metric every p events, as the host loop did) nests an
     inner scan over each round's p events.  The worker index is TRACED —
@@ -317,18 +329,25 @@ def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys,
     merged = sp.merged()
 
     def one_round(st, xs):
-        sched_row, key_row = xs
+        if stream:
+            i, sched_row, key_row = xs
+        else:
+            sched_row, key_row = xs
 
         def one_event(st, sk):
-            runtime.TRACES["async_event"] += 1
+            runtime.TRACES.inc("async_event")
             s, k = sk
             return async_event(sp, st, s, eta, k, fused=fused), None
 
         st, _ = jax.lax.scan(one_event, st, (sched_row, key_row))
         rel = convex.rel_grad_norm(merged, st.x_c, g0)
+        if stream:
+            obs_stream.scan_metric("rel", i, rel)
         return st, rel
 
-    return jax.lax.scan(one_round, st, (schedule, keys))
+    xs = ((jnp.arange(schedule.shape[0]), schedule, keys) if stream
+          else (schedule, keys))
+    return jax.lax.scan(one_round, st, xs)
 
 
 def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
@@ -368,21 +387,25 @@ def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     schedule = runtime.event_schedule(sp.p, rounds, spec.speeds)
     keys = jax.random.split(k_run, schedule.size)
     sched, keys = runtime.per_round(schedule, keys, sp.p)
-    return _async_scan(sp, st, eta, g0, jnp.asarray(sched), keys,
-                       fused=fused_t)
+    return obs_stage.staged_call(
+        _async_scan, sp, st, eta, g0, jnp.asarray(sched), keys,
+        _label="solve/centralvr_async",
+        fused=fused_t, stream=obs_stream.stream_active())
 
 
 # ---------------------------------------------------------------------------
 # Distributed SVRG (Algorithm 4)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("tau", "fused"),
+@functools.partial(jax.jit, static_argnames=("tau", "fused", "stream"),
                    donate_argnames=("x",))
-def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int, fused=None):
+def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int, fused=None,
+                stream: bool = False):
     merged = sp.merged()
 
-    def round_(x, k):
-        runtime.TRACES["dsvrg_round"] += 1
+    def round_(x, xs):
+        step_i, k = xs if stream else (None, xs)
+        runtime.TRACES.inc("dsvrg_round")
         xbar = x
         gbar = convex.full_grad(merged, xbar)   # sync step (line 5)
 
@@ -405,12 +428,15 @@ def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int, fused=None):
             xl, _ = jax.lax.scan(body, xbar, idx)
             return xl
 
-        xs = jax.vmap(local)(sp.A, sp.b, jax.random.split(k, sp.p))
-        x = xs.mean(0)
+        xl_all = jax.vmap(local)(sp.A, sp.b, jax.random.split(k, sp.p))
+        x = xl_all.mean(0)
         rel = convex.rel_grad_norm(merged, x, g0)
+        if stream:
+            obs_stream.scan_metric("rel", step_i, rel)
         return x, rel
 
-    return jax.lax.scan(round_, x, keys)
+    xs = (jnp.arange(keys.shape[0]), keys) if stream else keys
+    return jax.lax.scan(round_, x, xs)
 
 
 def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
@@ -437,7 +463,9 @@ def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     x = jnp.zeros((sp.d,))
     g0 = convex.grad_norm0(sp.merged())
     keys = jax.random.split(key, rounds)
-    return _dsvrg_scan(sp, x, eta, g0, keys, tau, fused=fused_t)
+    return obs_stage.staged_call(
+        _dsvrg_scan, sp, x, eta, g0, keys, _label="solve/dsvrg",
+        tau=tau, fused=fused_t, stream=obs_stream.stream_active())
 
 
 # ---------------------------------------------------------------------------
@@ -571,10 +599,11 @@ def dsaga_event_stale(sp: ShardedProblem, st: AsyncState, s, eta: float,
 
 @functools.partial(jax.jit,
                    static_argnames=("tau", "literal_scaling", "stale",
-                                    "fused"),
+                                    "fused", "stream"),
                    donate_argnames=("st",))
 def _dsaga_scan(sp: ShardedProblem, st, eta, g0, schedule, keys,
-                tau: int, literal_scaling: bool, stale: bool, fused=None):
+                tau: int, literal_scaling: bool, stale: bool, fused=None,
+                stream: bool = False):
     """One scan runner for both fetch disciplines: ``stale`` selects the
     event function (and the matching state type — DSagaState for instant,
     AsyncState for stale) at trace time."""
@@ -583,19 +612,26 @@ def _dsaga_scan(sp: ShardedProblem, st, eta, g0, schedule, keys,
     trace_key = "dsaga_event_stale" if stale else "dsaga_event"
 
     def one_round(st, xs):
-        sched_row, key_row = xs
+        if stream:
+            i, sched_row, key_row = xs
+        else:
+            sched_row, key_row = xs
 
         def one_event(st, sk):
-            runtime.TRACES[trace_key] += 1
+            runtime.TRACES.inc(trace_key)
             s, k = sk
             return event(sp, st, s, eta, tau, k, literal_scaling,
                          fused=fused), None
 
         st, _ = jax.lax.scan(one_event, st, (sched_row, key_row))
         rel = convex.rel_grad_norm(merged, st.x_c, g0)
+        if stream:
+            obs_stream.scan_metric("rel", i, rel)
         return st, rel
 
-    return jax.lax.scan(one_round, st, (schedule, keys))
+    xs = ((jnp.arange(schedule.shape[0]), schedule, keys) if stream
+          else (schedule, keys))
+    return jax.lax.scan(one_round, st, xs)
 
 
 def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
@@ -661,6 +697,8 @@ def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     keys = jax.random.split(key, schedule.size)
     sched, keys = runtime.per_round(schedule, keys, sp.p)
     st = dsaga_init_stale(sp) if fetch == "stale" else dsaga_init(sp)
-    return _dsaga_scan(sp, st, eta, g0, jnp.asarray(sched), keys, tau,
-                       literal_scaling, stale=(fetch == "stale"),
-                       fused=fused_t)
+    return obs_stage.staged_call(
+        _dsaga_scan, sp, st, eta, g0, jnp.asarray(sched), keys,
+        _label="solve/dsaga", tau=tau, literal_scaling=literal_scaling,
+        stale=(fetch == "stale"), fused=fused_t,
+        stream=obs_stream.stream_active())

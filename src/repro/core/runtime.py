@@ -24,12 +24,60 @@ jitted ``lax.scan`` instead (DESIGN.md §3):
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 from collections import Counter
 
 import numpy as np
 
-# Trace/compile probe: incremented from inside scan bodies at trace time.
-TRACES: Counter = Counter()
+
+class _TraceCounter(Counter):
+    """``Counter`` with an atomic :meth:`inc` and a consistent
+    :meth:`snapshot`.  Trace-time Python runs on whatever thread asked for
+    the executable — concurrent compiles (the spmd factories are
+    lru-cached and jit compilation can be driven from worker threads, and
+    the obs streaming callbacks fire from XLA runtime threads) must not
+    lose probe increments to the read-modify-write race of ``c[k] += 1``.
+    """
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._lock = threading.Lock()
+
+    def inc(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self[key] = self.get(key, 0) + n
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(self)
+
+    def clear(self) -> None:     # keep tests' TRACES.clear() atomic too
+        with self._lock:
+            super().clear()
+
+
+# Trace/compile probe: incremented (``TRACES.inc(name)``) from inside scan
+# bodies at trace time.
+TRACES: _TraceCounter = _TraceCounter()
+
+
+@contextlib.contextmanager
+def traces_delta():
+    """Scoped view of the trace probe: yields a dict that on exit holds
+    the per-key increments that occurred inside the block.  Replaces the
+    hand-rolled ``before = dict(TRACES)`` / subtract-after pattern in
+    ``solve()`` and the drivers' tests."""
+    before = TRACES.snapshot()
+    delta: dict = {}
+    try:
+        yield delta
+    finally:
+        after = TRACES.snapshot()
+        for k, v in after.items():
+            d = v - before.get(k, 0)
+            if d:
+                delta[k] = d
 
 
 def event_schedule(p: int, rounds: int, speeds=None) -> np.ndarray:

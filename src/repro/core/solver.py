@@ -302,6 +302,12 @@ class RunResult:
     (the first call of a fresh process includes jit compilation);
     ``traces`` is the delta of ``runtime.TRACES`` over the call — 0 on a
     jit cache hit, the exact retrace/compile probe of DESIGN.md §3.
+    ``comms`` is the analytical bytes-per-collective model of the run
+    (``obs/comms.py``, roofline result-shape convention) and
+    ``staleness`` the fetch-staleness/wave-utilization record of the
+    deterministic event schedule (``obs/staleness.py``; None for the
+    bulk-synchronous algorithms) — both derived host-side from the spec
+    and shapes, so every provenance row carries them whatever backend ran.
     """
 
     spec: RunSpec
@@ -311,6 +317,8 @@ class RunResult:
     wall_s: float
     traces: dict
     grad_evals: Optional[np.ndarray] = None
+    comms: Optional[dict] = None
+    staleness: Optional[dict] = None
 
     @property
     def final_rel(self) -> float:
@@ -318,7 +326,11 @@ class RunResult:
 
     def provenance(self, tail: int = 8) -> dict:
         """JSON-able record of exactly what configuration produced this
-        result — embedded alongside each benchmark-artifact row."""
+        result — embedded alongside each benchmark-artifact row.  The row
+        shape is golden (``obs/schema.py: PROVENANCE_KEYS``); extend both
+        together."""
+        from repro.obs.recorder import SCHEMA_VERSION
+
         rels = np.asarray(self.rels, dtype=float)
         return {
             "spec": dataclasses.asdict(self.spec),
@@ -327,6 +339,9 @@ class RunResult:
             "rounds_recorded": int(rels.size),
             "wall_s": float(self.wall_s),
             "traces": dict(self.traces),
+            "comms": dict(self.comms) if self.comms else None,
+            "staleness": dict(self.staleness) if self.staleness else None,
+            "schema_v": SCHEMA_VERSION,
         }
 
 
@@ -410,24 +425,25 @@ def solve(spec: RunSpec, problem, *, key=None, mesh=None) -> RunResult:
     import jax
 
     from repro.core import convex, distributed
+    from repro.obs import recorder as obs_recorder
 
-    problem = _coerce_problem(spec, problem)
-    eta = spec.eta
-    if eta is None:
-        merged = (problem.merged()
-                  if isinstance(problem, distributed.ShardedProblem)
-                  else problem)
-        eta = convex.auto_eta(merged)
-    if key is None:
-        key = jax.random.PRNGKey(spec.seed)
+    with obs_recorder.span("solve/build", algo=spec.algo,
+                           backend=spec.backend):
+        problem = _coerce_problem(spec, problem)
+        eta = spec.eta
+        if eta is None:
+            merged = (problem.merged()
+                      if isinstance(problem, distributed.ShardedProblem)
+                      else problem)
+            eta = convex.auto_eta(merged)
+        if key is None:
+            key = jax.random.PRNGKey(spec.seed)
 
-    before = dict(runtime.TRACES)
-    t0 = time.perf_counter()
-    state, x, rels, grad_evals = entry.call(spec, problem, eta, key, mesh)
-    rels = jax.block_until_ready(rels)
-    wall = time.perf_counter() - t0
-    traces = {k: v - before.get(k, 0) for k, v in runtime.TRACES.items()
-              if v != before.get(k, 0)}
+    with runtime.traces_delta() as traces:
+        t0 = time.perf_counter()
+        state, x, rels, grad_evals = entry.call(spec, problem, eta, key, mesh)
+        rels = jax.block_until_ready(rels)
+        wall = time.perf_counter() - t0
 
     rels = np.asarray(rels)
     if grad_evals is not None:
@@ -440,8 +456,29 @@ def solve(spec: RunSpec, problem, *, key=None, mesh=None) -> RunResult:
             # keep the two trajectories aligned (rels[i] <-> grad_evals[i])
             grad_evals = grad_evals[idx]
     resolved = dataclasses.replace(spec, eta=float(eta))
-    return RunResult(spec=resolved, rels=rels, x=np.asarray(x), state=state,
-                     wall_s=wall, traces=traces, grad_evals=grad_evals)
+    x = np.asarray(x)
+
+    # comms/staleness accounting: host-side, derived from spec + shapes,
+    # so it is cheap enough to compute for EVERY run (bench provenance
+    # rows carry it with telemetry off)
+    from repro.obs import comms as obs_comms
+    from repro.obs import staleness as obs_staleness
+
+    comms = obs_comms.comms_model(spec.algo, p=spec.p, d=int(x.shape[-1]),
+                                  rounds=spec.rounds)
+    staleness = None
+    if entry.caps.is_async:
+        staleness = obs_staleness.staleness_stats(
+            runtime.event_schedule(spec.p, spec.rounds, spec.speeds), spec.p)
+
+    res = RunResult(spec=resolved, rels=rels, x=x, state=state,
+                    wall_s=wall, traces=traces, grad_evals=grad_evals,
+                    comms=comms, staleness=staleness)
+    rec = obs_recorder.active()
+    if rec is not None:
+        rec.event("traces", **traces)
+        rec.event("provenance", **res.provenance())
+    return res
 
 
 # ---------------------------------------------------------------------------

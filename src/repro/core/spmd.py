@@ -70,6 +70,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import convex, runtime
 from repro.core.convex import Problem
+from repro.obs import stage as obs_stage
 
 WORKER_AXIS = "workers"
 
@@ -247,8 +248,9 @@ def run_sync(sp, *, eta: float, rounds: int, key: jax.Array,
     (A, b, perm0), (lam, eta, g0) = _put(
         mesh, (sp.A, sp.b, perm0), (sp.lam, jnp.asarray(eta), g0))
     (perms,), () = _put(mesh, (perms,), (), worker_dim=1)
-    x, tables, gbar, rels = _sync_runner(mesh, sp.kind, fused_t)(
-        A, b, lam, eta, g0, perm0, perms)
+    x, tables, gbar, rels = obs_stage.staged_call(
+        _sync_runner(mesh, sp.kind, fused_t),
+        A, b, lam, eta, g0, perm0, perms, _label="spmd/centralvr_sync")
     return SyncState(x=x, tables=tables, gbar=gbar), rels
 
 
@@ -305,7 +307,9 @@ def run_dsvrg(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 0,
     (A, b), (lam, eta, g0) = _put(
         mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
     (idx,), () = _put(mesh, (idx,), (), worker_dim=1)
-    return _dsvrg_runner(mesh, sp.kind, fused_t)(A, b, lam, eta, g0, idx)
+    return obs_stage.staged_call(_dsvrg_runner(mesh, sp.kind, fused_t),
+                                 A, b, lam, eta, g0, idx,
+                                 _label="spmd/dsvrg")
 
 
 # ---------------------------------------------------------------------------
@@ -351,7 +355,9 @@ def run_dist_sgd(sp, *, eta: float, rounds: int, key: jax.Array,
     (A, b), (lam, g0, etas) = _put(
         mesh, (sp.A, sp.b), (sp.lam, g0, etas))
     (idx,), () = _put(mesh, (idx,), (), worker_dim=1)
-    return _dist_sgd_runner(mesh, sp.kind)(A, b, lam, g0, idx, etas)
+    return obs_stage.staged_call(_dist_sgd_runner(mesh, sp.kind),
+                                 A, b, lam, g0, idx, etas,
+                                 _label="spmd/dist_sgd")
 
 
 @functools.lru_cache(maxsize=None)
@@ -409,8 +415,9 @@ def run_easgd(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 16,
     (A, b), (lam, alpha, g0, etas) = _put(
         mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(alpha), g0, etas))
     (idx,), () = _put(mesh, (idx,), (), worker_dim=1)
-    xc, _, rels = _easgd_runner(mesh, sp.kind)(A, b, lam, alpha, g0, idx,
-                                               etas)
+    xc, _, rels = obs_stage.staged_call(
+        _easgd_runner(mesh, sp.kind), A, b, lam, alpha, g0, idx, etas,
+        _label="spmd/easgd")
     return xc, rels
 
 
@@ -459,7 +466,9 @@ def run_ps_svrg(sp, *, eta: float, rounds: int, key: jax.Array,
     (A, b), (lam, eta, g0) = _put(
         mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
     (idx,), () = _put(mesh, (idx,), (), worker_dim=2)
-    return _ps_svrg_runner(mesh, sp.kind)(A, b, lam, eta, g0, idx)
+    return obs_stage.staged_call(_ps_svrg_runner(mesh, sp.kind),
+                                 A, b, lam, eta, g0, idx,
+                                 _label="spmd/ps_svrg")
 
 
 # ---------------------------------------------------------------------------
@@ -601,8 +610,10 @@ def run_async(sp, *, eta: float, rounds: int, key: jax.Array, speeds=None,
         mesh, (sp.A, sp.b, perm0), (sp.lam, jnp.asarray(eta), g0))
     active, rank, perms = _wave_inputs(mesh, sp, schedule, perms)
     (x_c, gbar_c, tables, x_old, gbar_old, x_fetch, gbar_fetch,
-     rels) = _async_runner(mesh, sp.kind, fused_t)(
-        A, b, lam, eta, g0, perm0, active, rank, perms)
+     rels) = obs_stage.staged_call(
+        _async_runner(mesh, sp.kind, fused_t),
+        A, b, lam, eta, g0, perm0, active, rank, perms,
+        _label="spmd/centralvr_async")
     return AsyncState(x_c=x_c, gbar_c=gbar_c, tables=tables, x_old=x_old,
                       gbar_old=gbar_old, x_fetch=x_fetch,
                       gbar_fetch=gbar_fetch), rels
@@ -697,8 +708,9 @@ def run_dsaga(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 100,
         mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
     active, rank, idx = _wave_inputs(mesh, sp, schedule, idx)
     (x_c, gbar_c, tables, x_old, gbar_old, x_fetch, gbar_fetch,
-     rels) = _dsaga_runner(mesh, sp.kind, bool(literal_scaling), fused_t)(
-        A, b, lam, eta, g0, active, rank, idx)
+     rels) = obs_stage.staged_call(
+        _dsaga_runner(mesh, sp.kind, bool(literal_scaling), fused_t),
+        A, b, lam, eta, g0, active, rank, idx, _label="spmd/dsaga")
     return AsyncState(x_c=x_c, gbar_c=gbar_c, tables=tables, x_old=x_old,
                       gbar_old=gbar_old, x_fetch=x_fetch,
                       gbar_fetch=gbar_fetch), rels

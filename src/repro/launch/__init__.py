@@ -1,3 +1,12 @@
 # NOTE: launch.dryrun must be executed as a script/module entry point so its
 # XLA_FLAGS device-count override precedes jax init; do not import it here.
-from repro.launch import mesh  # noqa: F401
+# mesh (jax-backed) is re-exported lazily: `python -m repro.launch.obs`
+# must stay importable without the toolchain (the telemetry CLI is
+# stdlib-only), and the launchers force host devices before jax init.
+
+
+def __getattr__(name):
+    if name == "mesh":
+        import importlib
+        return importlib.import_module("repro.launch.mesh")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

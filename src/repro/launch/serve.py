@@ -39,6 +39,9 @@ def parse_args(argv=None):
     ap.add_argument("--decode-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs", default="", metavar="PATH",
+                    help="record telemetry (warmup/prefill/decode spans + "
+                         "tok/s) to this JSONL file")
     return ap.parse_args(argv)
 
 
@@ -47,9 +50,13 @@ def main(argv=None):
     import jax
     import jax.numpy as jnp
 
+    from repro import obs
     from repro.config import get_arch
     from repro.data import synthetic
     from repro.models import model
+
+    if args.obs:
+        obs.enable(args.obs)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -68,33 +75,46 @@ def main(argv=None):
     step = compiled_decode_step(cfg)
     # pay the one-time compile outside both timed regions (on a throwaway
     # cache), so the prefill/decode tok/s compare throughput, not XLA
-    jax.block_until_ready(
-        step(params, prompts[:, :1], model.init_cache(cfg, B, max_len), 0))
+    with obs.span("serve/warmup", batch=B):
+        jax.block_until_ready(
+            step(params, prompts[:, :1], model.init_cache(cfg, B, max_len),
+                 0))
     t0 = time.time()
-    logits = None
-    for t in range(S):
-        logits, cache = step(params, prompts[:, t:t + 1], cache, t)
-    jax.block_until_ready(logits)
+    with obs.span("serve/prefill", tokens=S, batch=B):
+        logits = None
+        for t in range(S):
+            logits, cache = step(params, prompts[:, t:t + 1], cache, t)
+        jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
     # decode (timer covers all n_gen tokens, including the first one
     # sampled from the prefill logits)
     t0 = time.time()
-    tok = jnp.argmax(logits, -1)[:, None]
-    out_tokens = [tok]
-    for t in range(S, max_len - 1):
-        logits, cache = step(params, tok, cache, t)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / args.temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits, -1)[:, None]
-        out_tokens.append(tok)
-    gen = jnp.concatenate(out_tokens, axis=1)
-    jax.block_until_ready(gen)
+    with obs.span("serve/decode", batch=B):
+        tok = jnp.argmax(logits, -1)[:, None]
+        out_tokens = [tok]
+        for t in range(S, max_len - 1):
+            logits, cache = step(params, tok, cache, t)
+            if args.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits / args.temperature)[:, None]
+            else:
+                tok = jnp.argmax(logits, -1)[:, None]
+            out_tokens.append(tok)
+        gen = jnp.concatenate(out_tokens, axis=1)
+        jax.block_until_ready(gen)
     t_decode = time.time() - t0
     n_gen = gen.shape[1]
+    rec = obs.active()
+    if rec is not None:
+        rec.event("serve_throughput", batch=B, prefill_tokens=S,
+                  prefill_s=t_prefill,
+                  prefill_tok_s=B * S / max(t_prefill, 1e-9),
+                  decode_tokens=n_gen, decode_s=t_decode,
+                  decode_tok_s=B * n_gen / max(t_decode, 1e-9))
+        obs.disable()
+        print(f"wrote telemetry to {args.obs}")
     print(f"prefill {S} tokens x {B} seqs: {t_prefill:.2f}s "
           f"({B * S / max(t_prefill, 1e-9):.1f} tok/s); "
           f"decode {n_gen} tokens: {t_decode:.2f}s "

@@ -58,6 +58,15 @@ def parse_args(argv=None):
                     help="tiny CI-smoke sizes")
     ap.add_argument("--json", default="",
                     help="write RunResult.provenance() rows to this path")
+    ap.add_argument("--obs", default="", metavar="PATH",
+                    help="record structured run telemetry (spans, streamed "
+                         "metrics, comms/staleness) to this JSONL file; "
+                         "render with `python -m repro.launch.obs report`")
+    ap.add_argument("--stream-every", type=int, default=1,
+                    help="streamed in-scan metric cadence (with --obs)")
+    ap.add_argument("--profile", default="", metavar="DIR",
+                    help="capture a jax.profiler trace of the runs into "
+                         "this directory (open with TensorBoard/Perfetto)")
     return ap.parse_args(argv)
 
 
@@ -126,15 +135,31 @@ def main(argv=None) -> int:
 
     cfg = ConvexConfig(problem=args.problem, n=n, d=d, seed=args.seed)
     names = repro.algorithms() if args.sweep else [args.algo]
-    rows = []
-    for name in names:
-        spec, note = build_spec(args, name, workers, rounds)
-        res = repro.solve(spec, cfg)
-        rows.append(res.provenance())
-        print(f"{name:16s} backend={spec.backend:4s} p={spec.p} "
-              f"rounds={spec.rounds} eta={res.spec.eta:.3g} "
-              f"final rel-grad-norm {res.final_rel:.3e} "
-              f"[{res.wall_s:.2f}s]{note}")
+
+    from repro import obs
+
+    if args.obs:
+        obs.enable(args.obs, stream_every=args.stream_every)
+    if args.profile:
+        import jax
+        jax.profiler.start_trace(args.profile)
+    try:
+        rows = []
+        for name in names:
+            spec, note = build_spec(args, name, workers, rounds)
+            res = repro.solve(spec, cfg)
+            rows.append(res.provenance())
+            print(f"{name:16s} backend={spec.backend:4s} p={spec.p} "
+                  f"rounds={spec.rounds} eta={res.spec.eta:.3g} "
+                  f"final rel-grad-norm {res.final_rel:.3e} "
+                  f"[{res.wall_s:.2f}s]{note}")
+    finally:
+        if args.profile:
+            jax.profiler.stop_trace()
+            print(f"wrote profiler trace to {args.profile}")
+        if args.obs:
+            obs.disable()
+            print(f"wrote telemetry to {args.obs}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)

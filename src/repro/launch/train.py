@@ -53,6 +53,12 @@ def parse_args(argv=None):
     ap.add_argument("--resume", action="store_true",
                     help="scan runtime: continue from --checkpoint")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs", default="", metavar="PATH",
+                    help="record structured run telemetry (epoch spans + "
+                         "structured epoch rows) to this JSONL file")
+    ap.add_argument("--profile", default="", metavar="DIR",
+                    help="capture a jax.profiler trace of the run into "
+                         "this directory")
     return ap.parse_args(argv)
 
 
@@ -62,8 +68,15 @@ def main(argv=None):
         # must run before the first jax operation (core/spmd.py)
         from repro.core import spmd
         spmd.force_host_devices(args.num_workers)
+    from repro import obs
     from repro.config import TrainConfig, get_arch
     from repro.launch import mesh as meshlib
+
+    if args.obs:
+        obs.enable(args.obs)
+    if args.profile:
+        import jax
+        jax.profiler.start_trace(args.profile)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -112,6 +125,13 @@ def main(argv=None):
             workers=args.num_workers, backend=args.backend, mesh=mesh,
             checkpoint_path=args.checkpoint or None,
             checkpoint_every=args.checkpoint_every, resume=args.resume)
+    if args.profile:
+        import jax
+        jax.profiler.stop_trace()
+        print(f"wrote profiler trace to {args.profile}")
+    if args.obs:
+        obs.disable()
+        print(f"wrote telemetry to {args.obs}")
     print(f"done: {res.steps} steps in {res.wall_time:.1f}s; "
           f"final train loss {res.losses[-1]:.4f}; "
           f"eval loss {res.final_eval_loss:.4f}")

@@ -1,0 +1,72 @@
+"""Explicit AOT staging of the jitted scan runners, for span capture.
+
+``solve()`` (and the driver wrappers it dispatches to) normally call
+their module-level jitted runners directly: one opaque wall-clock number
+that mixes trace, lower, XLA compile, and execution.  When a recorder is
+active, :func:`staged_call` splits the same call into the explicit
+``jit(...).lower().compile()`` pipeline and emits one span per phase:
+
+    <label>/lower     tracing + StableHLO lowering
+    <label>/compile   XLA compilation of the lowered module
+    <label>/execute   running the compiled executable (blocked on, so the
+                      duration is real work, not async dispatch — this is
+                      the per-call WARM cost once an executable exists)
+
+plus a ``comms_hlo`` event with the per-collective-kind result bytes of
+the compiled module (``roofline/analysis.collective_bytes`` — the same
+result-shape convention as the roofline reports), which is the measured
+cross-check of the analytical comms model ``solve()`` embeds in
+provenance.
+
+With telemetry OFF the call goes straight through to the jitted function
+— same executable, same jit cache, zero overhead.  The staged path
+deliberately bypasses the jit cache (AOT lowering always re-lowers), so
+a telemetry-on call always observes a real, nonzero compile phase.
+
+Convention: dynamic arguments positional, static arguments as keywords.
+The compiled executable is invoked with the dynamic arguments only
+(statics are baked in at lowering; jax rejects re-passing them).
+Donation declared on the runner is honored by the compiled call exactly
+as by the jitted one.
+"""
+from __future__ import annotations
+
+from repro.obs import recorder as _recorder
+
+
+def staged_call(fn, *args, _label: str, **statics):
+    """Call jitted ``fn(*args, **statics)``; staged with spans when a
+    recorder is active, a plain (cached) call otherwise."""
+    rec = _recorder.active()
+    if rec is None:
+        return fn(*args, **statics)
+
+    import jax
+
+    try:
+        with rec.span(f"{_label}/lower"):
+            lowered = fn.lower(*args, **statics)
+        with rec.span(f"{_label}/compile"):
+            compiled = lowered.compile()
+    except (AttributeError, TypeError, NotImplementedError) as e:
+        # not AOT-stageable (plain callable, exotic closure): record why
+        # and fall back to the ordinary call so telemetry never breaks a
+        # run it is only supposed to observe
+        rec.event("stage_fallback", label=_label, reason=repr(e))
+        with rec.span(f"{_label}/execute"):
+            return jax.block_until_ready(fn(*args, **statics))
+
+    _record_hlo_comms(rec, _label, compiled)
+    with rec.span(f"{_label}/execute"):
+        return jax.block_until_ready(compiled(*args))
+
+
+def _record_hlo_comms(rec, label: str, compiled) -> None:
+    """Per-collective result bytes of the compiled module, best effort."""
+    try:
+        from repro.roofline import analysis
+
+        rec.event("comms_hlo", label=label,
+                  **analysis.collective_bytes(compiled.as_text()))
+    except Exception as e:     # telemetry must never fail the run
+        rec.event("comms_hlo_error", label=label, reason=repr(e))

@@ -1,0 +1,49 @@
+"""Streamed in-scan metrics: a cadence-gated ``jax.debug.callback`` path.
+
+The device-resident drivers compute their convergence metric INSIDE a
+jitted ``lax.scan`` (DESIGN.md §3) — without this module the whole
+trajectory only reaches the host after the last round.  When a recorder
+is active, the drivers trace their scan with ``stream=True`` (a STATIC
+argument, so the jit cache keys on it and the telemetry-off executable is
+byte-identical to the pre-telemetry program) and the scan body calls
+:func:`scan_metric`: one host callback per round carrying (step, value),
+cadence-gated host-side by the recorder's ``stream_every``.
+
+Guarantees (pinned by ``tests/test_obs.py``):
+
+  * the callback only OBSERVES the metric scalar — it never touches the
+    donated state buffers, so donation safety is unchanged;
+  * trajectories are bit-identical with telemetry on vs off
+    (``jax.debug.callback`` has no data-flow effect on the scan carry).
+
+Caveat (DESIGN.md §Observability): the spmd ``shard_map`` runners do NOT
+stream — a callback inside a shard_map program fires once per device with
+per-shard values, which is noise, not a metric.  SPMD runs record spans +
+the analytical comms/staleness models instead.
+"""
+from __future__ import annotations
+
+from repro.obs import recorder as _recorder
+
+
+def stream_active() -> bool:
+    """Trace-time switch the drivers consult: stream iff a recorder is
+    installed.  The result becomes a STATIC jit argument, so flipping
+    telemetry selects a separate, consistent executable."""
+    return _recorder.active() is not None
+
+
+def _emit(name: str, step, value) -> None:
+    rec = _recorder.active()
+    if rec is not None:     # a cached streaming executable may outlive it
+        rec.metric(name, int(step), float(value))
+
+
+def scan_metric(name: str, step, value) -> None:
+    """Emit (step, value) from inside traced code.  Call ONLY under a
+    ``stream=True`` trace; the host side re-checks the active recorder, so
+    a cached streaming executable running after ``obs.disable()`` degrades
+    to a no-op callback instead of an error."""
+    import jax
+
+    jax.debug.callback(lambda s, v: _emit(name, s, v), step, value)

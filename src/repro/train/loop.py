@@ -24,6 +24,8 @@ import jax
 from repro.checkpoint import checkpoint as ckpt
 from repro.config import ModelConfig, TrainConfig
 from repro.data import synthetic
+from repro.obs import recorder as obs_recorder
+from repro.obs import stage as obs_stage
 from repro.train import step as tstep
 
 
@@ -90,18 +92,36 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *,
         state = tstep.place_train_state(state, meta["mesh"])
 
     result = LoopResult()
+    rec = obs_recorder.active()
     t0 = time.time()
     device_losses = []
     for e in range(start_epoch, epochs):
-        state, losses = run_epoch(state)
+        if rec is None:
+            state, losses = run_epoch(state)
+        elif e == start_epoch:
+            # first epoch staged (lower/compile/execute spans split compile
+            # from warm cost; the spmd wrapper is not AOT-stageable and
+            # falls back to a plain execute span)
+            state, losses = obs_stage.staged_call(run_epoch, state,
+                                                  _label="train/epoch")
+        else:
+            # blocked on inside the span so the duration is epoch work,
+            # not async dispatch — telemetry-off keeps the pipelined loop
+            with rec.span("train/epoch", epoch=e):
+                state, losses = jax.block_until_ready(run_epoch(state))
         device_losses.append(losses)
         if log_every and ((e - start_epoch) % log_every == 0
                           or e == epochs - 1):
+            loss = float(losses[-1])
+            if rec is not None:
+                rec.event("train_epoch", epoch=e, step=(e + 1) * E,
+                          loss=loss, workers=W)
             log_fn(f"epoch {e:4d}  step {(e + 1) * E:6d}  "
-                   f"loss {float(losses[-1]):.4f}")
+                   f"loss {loss:.4f}")
         if checkpoint_path and checkpoint_every and \
                 (e + 1) % checkpoint_every == 0:
-            ckpt.save(checkpoint_path, state, step=(e + 1) * E)
+            with obs_recorder.span("train/checkpoint", epoch=e):
+                ckpt.save(checkpoint_path, state, step=(e + 1) * E)
     result.losses = [float(l) for arr in jax.device_get(device_losses)
                      for l in arr]
     result.steps = epochs * E
@@ -113,11 +133,16 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *,
     # the copies coincide, so the average IS every worker's iterate —
     # eval_params keeps that invariant explicit)
     from repro.models import model as modellib
-    ev = synthetic.eval_batch(cfg, tcfg.seed, batch=meta["microbatch"],
-                              seq=tcfg.seq_len)
-    params = tstep.eval_params(state.params, W)
-    result.final_eval_loss = float(modellib.loss_fn(
-        params, cfg, {"tokens": ev}, remat="none"))
+    with obs_recorder.span("train/eval"):
+        ev = synthetic.eval_batch(cfg, tcfg.seed, batch=meta["microbatch"],
+                                  seq=tcfg.seq_len)
+        params = tstep.eval_params(state.params, W)
+        result.final_eval_loss = float(modellib.loss_fn(
+            params, cfg, {"tokens": ev}, remat="none"))
+    if rec is not None:
+        rec.event("train_done", epochs=epochs, steps=epochs * E,
+                  eval_loss=result.final_eval_loss,
+                  wall_s=result.wall_time)
     if checkpoint_path:
         ckpt.save(checkpoint_path, state, step=epochs * E)
     return result

@@ -100,6 +100,75 @@ def test_train_without_scan_rows_fails(tmp_path):
     assert "no scan-path rows" in r.stderr
 
 
+def test_report_written_with_gate_decisions(tmp_path):
+    """--report dumps every gate decision + the verdict as JSON (the CI
+    artifact a red gate is diagnosed from)."""
+    drivers = _drivers_artifact(2.0)
+    train = _train_artifact(3.0)
+    dp, tp, rp = (str(tmp_path / n) for n in ("d.json", "t.json", "r.json"))
+    with open(dp, "w") as f:
+        json.dump(drivers, f)
+    with open(tp, "w") as f:
+        json.dump(train, f)
+    r = subprocess.run(
+        [sys.executable, SCRIPT, "--floor", "1.0", "--path", dp,
+         "--train-path", tp, "--report", rp],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    with open(rp) as f:
+        report = json.load(f)
+    assert report["failed"] is False
+    assert report["floor"] == 1.0
+    assert report["artifacts"] == {"drivers": dp, "train": tp}
+    by_name = {g["name"]: g for g in report["gates"]}
+    assert by_name["drivers/sync-p2"]["status"] == "ok"
+    assert by_name["train_throughput/scan-vmap-w2"]["status"] == "ok"
+
+
+def test_report_records_failure_verdict(tmp_path):
+    r = _run(tmp_path, _drivers_artifact(0.5), _train_artifact(3.0))
+    assert r.returncode == 1
+    dp = tmp_path / "d2.json"
+    dp.write_text(json.dumps(_drivers_artifact(0.5)))
+    tp = tmp_path / "t2.json"
+    tp.write_text(json.dumps(_train_artifact(3.0)))
+    rp = tmp_path / "r2.json"
+    r = subprocess.run(
+        [sys.executable, SCRIPT, "--floor", "1.0", "--path", str(dp),
+         "--train-path", str(tp), "--report", str(rp)],
+        capture_output=True, text=True)
+    assert r.returncode == 1
+    report = json.loads(rp.read_text())
+    assert report["failed"] is True
+    assert any(g["status"] == "REGRESSION" for g in report["gates"])
+
+
+def test_telemetry_rows_reported_but_never_gated(tmp_path):
+    """The -obs twins measure observation cost: an arbitrarily large
+    overhead must not fail the gate, but the row lands in the report as
+    informational."""
+    drivers = _drivers_artifact(2.0)
+    drivers["rows"].append({"name": "drivers/async-p8-obs",
+                            "telemetry": True, "overhead_vs_off": 50.0})
+    dp = tmp_path / "d.json"
+    dp.write_text(json.dumps(drivers))
+    tp = tmp_path / "t.json"
+    tp.write_text(json.dumps(_train_artifact(3.0)))
+    rp = tmp_path / "r.json"
+    r = subprocess.run(
+        [sys.executable, SCRIPT, "--floor", "1.0", "--path", str(dp),
+         "--train-path", str(tp), "--report", str(rp)],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "informational" in r.stdout
+    report = json.loads(rp.read_text())
+    twin = [g for g in report["gates"]
+            if g["name"] == "drivers/async-p8-obs"]
+    assert twin == [{"name": "drivers/async-p8-obs",
+                     "gate": "overhead_vs_off", "value": 50.0,
+                     "floor": None, "status": "informational"}]
+
+
 def test_committed_artifacts_pass():
     """The artifacts at the repo root (regenerated by the CI bench lane)
     satisfy the gate this repo ships with."""
