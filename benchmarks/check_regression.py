@@ -1,13 +1,21 @@
 """CI regression guard over the benchmark artifacts (DESIGN.md §7).
 
-Gates TWO artifacts (the ``--quick`` harness run regenerates both):
+Gates THREE artifacts (the ``--quick`` harness run regenerates all):
 
   * ``BENCH_drivers.json`` (``benchmarks/driver_throughput.py``) — every
     driver's warm scan-runtime speedup over the seed host loop must stay
     at or above the floor;
   * ``BENCH_train.json`` (``benchmarks/train_throughput.py``) — every
     epoch-scan path (``scan-vmap``, ``scan-spmd``) must stay at or above
-    the floor against the seed per-step host path (``speedup_vs_host``).
+    the floor against the seed per-step host path (``speedup_vs_host``);
+  * ``BENCH_serve.json`` (``benchmarks/serve_throughput.py``) — the
+    continuous-batching engine must not serve slower than the legacy
+    per-token host loop it replaces: rows carrying
+    ``decode_speedup_vs_host`` gate at the serve floor (1.0) and rows
+    carrying ``prefill_speedup_vs_host`` (the prompt-len-128 chunked
+    prefill pair) at the prefill floor (5.0).  Rows with
+    ``estimated: true`` (CPU-simulated tensor parallelism) are printed
+    but exempt, the same convention as interpret-mode fused rows.
 
 The device-resident runtimes losing to the host loops they replaced is a
 performance regression whatever absolute wall clock the runner has.  A
@@ -31,8 +39,11 @@ the floors protect (enabling telemetry must not be able to fail CI).
 
     python benchmarks/check_regression.py [--path BENCH_drivers.json]
                                           [--train-path BENCH_train.json]
+                                          [--serve-path BENCH_serve.json]
                                           [--floor 1.0]
                                           [--fused-floor 1.0]
+                                          [--serve-floor 1.0]
+                                          [--serve-prefill-floor 5.0]
                                           [--report report.json]
 
 Exit status 1 on regression — the benchmark-smoke CI job gates on it.
@@ -113,18 +124,59 @@ def _gate_fused(rows, floor: float, report):
     return bad, gated
 
 
+def _gate_serve(rows, decode_floor: float, prefill_floor: float, report):
+    """Gate engine rows on decode/prefill speedup vs the host-loop twin;
+    ``estimated: true`` rows (CPU-simulated TP) are printed as exempt."""
+    bad = []
+    gated = exempt = 0
+    checks = (("decode_speedup_vs_host", decode_floor,
+               "decode vs host loop"),
+              ("prefill_speedup_vs_host", prefill_floor,
+               "prefill vs host loop"))
+    for r in rows:
+        for key, floor, what in checks:
+            if key not in r:
+                continue
+            speedup = r[key]
+            if r.get("estimated"):
+                exempt += 1
+                print(f"{r['name']}: {what} {speedup:.2f}x "
+                      "[exempt: estimated]")
+                report.append({"name": r["name"], "gate": key,
+                               "value": speedup, "floor": None,
+                               "status": "exempt:estimated"})
+                continue
+            gated += 1
+            status = "ok" if speedup >= floor else "REGRESSION"
+            print(f"{r['name']}: {what} {speedup:.2f}x [{status}]")
+            report.append({"name": r["name"], "gate": key,
+                           "value": speedup, "floor": floor,
+                           "status": status})
+            if speedup < floor:
+                bad.append(r["name"])
+    return bad, gated, exempt
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", default="BENCH_drivers.json",
                     help="driver-throughput artifact to check")
     ap.add_argument("--train-path", default="BENCH_train.json",
                     help="train-throughput artifact to check")
+    ap.add_argument("--serve-path", default="BENCH_serve.json",
+                    help="serve-throughput artifact to check")
     ap.add_argument("--floor", type=float, default=1.0,
                     help="minimum acceptable warm speedup over the seed "
                          "host path")
     ap.add_argument("--fused-floor", type=float, default=1.0,
                     help="minimum acceptable fused-vs-unfused warm speedup "
                          "(compiled-backend rows only; interpret exempt)")
+    ap.add_argument("--serve-floor", type=float, default=1.0,
+                    help="minimum acceptable engine decode speedup over "
+                         "the legacy host-loop serving path")
+    ap.add_argument("--serve-prefill-floor", type=float, default=5.0,
+                    help="minimum acceptable chunked-prefill speedup over "
+                         "per-token prefill at prompt-len 128")
     ap.add_argument("--report", default="",
                     help="write a machine-readable JSON gate report here")
     args = ap.parse_args(argv)
@@ -175,6 +227,24 @@ def main(argv=None) -> int:
                 print(f"all {len(scan)} train scan paths at or above the "
                       f"{args.floor:.2f}x floor")
 
+    rows = _load_rows(args.serve_path)
+    if rows is None:
+        failed = True
+    else:
+        bad, gated, exempt = _gate_serve(rows, args.serve_floor,
+                                         args.serve_prefill_floor, report)
+        if bad:
+            print(f"serve speedup below floor for: {', '.join(bad)}",
+                  file=sys.stderr)
+            failed = True
+        elif not gated:
+            print(f"{args.serve_path} has no gated engine rows",
+                  file=sys.stderr)
+            failed = True
+        else:
+            print(f"all {gated} gated serve rows at or above their floors "
+                  f"({exempt} estimated rows exempt)")
+
     if fused_rows:
         bad, gated = _gate_fused(fused_rows, args.fused_floor, report)
         if bad:
@@ -192,7 +262,10 @@ def main(argv=None) -> int:
             "failed": failed,
             "floor": args.floor,
             "fused_floor": args.fused_floor,
-            "artifacts": {"drivers": args.path, "train": args.train_path},
+            "serve_floor": args.serve_floor,
+            "serve_prefill_floor": args.serve_prefill_floor,
+            "artifacts": {"drivers": args.path, "train": args.train_path,
+                          "serve": args.serve_path},
             "gates": report,
         }
         with open(args.report, "w") as f:

@@ -26,13 +26,14 @@ def main(argv=None) -> None:
                     help="reduced sizes (CI-speed)")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig2,fig3,table1,theory,tau,"
-                         "variance,drivers,spmd,train,roofline")
+                         "variance,drivers,spmd,train,serve,roofline")
     args = ap.parse_args(argv)
 
     from benchmarks import (driver_throughput, fig1_single_worker,
                             fig2_distributed, fig3_large, roofline_report,
-                            spmd_scaling, table1_accounting, tau_sweep,
-                            theory_rates, train_throughput, variance)
+                            serve_throughput, spmd_scaling,
+                            table1_accounting, tau_sweep, theory_rates,
+                            train_throughput, variance)
 
     suites = {
         "fig1": fig1_single_worker.run,
@@ -47,6 +48,7 @@ def main(argv=None) -> None:
         # platform, or — roofline — a fresh jax for the vr-traffic check)
         "spmd": spmd_scaling.run_isolated,
         "train": train_throughput.run_isolated,
+        "serve": serve_throughput.run_isolated,
         "roofline": roofline_report.run_isolated,
     }
     only = [s for s in args.only.split(",") if s]

@@ -1,47 +1,45 @@
-"""Batched serving example: prefill a batch of prompts, then decode with
-the sharded KV cache — across three architecture families (dense GQA,
-attention-free SSM, hybrid RG-LRU) to show the cache abstraction.
+"""Batched serving example, now a thin client of the repro.serve runtime:
+attention-family architectures run on the continuous-batching engine
+(paged KV cache + chunked prefill), while attention-free / hybrid stacks
+(SSM, RG-LRU) fall back to the legacy static-batch host loop — showing
+both the new engine and the dispatch seam in one script.
 
     python examples/serve_batched.py
 """
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
     __file__))))
 import repro_bootstrap  # noqa: F401,E402  (adds src/ if repro isn't installed)
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import get_arch
-from repro.data import synthetic
 from repro.models import model
+from repro.serve import ServeEngine, check_arch, run_host_loop, \
+    synthetic_trace
 
 
-def serve(arch: str, batch=4, prompt=32, gen=16):
+def serve(arch: str, requests=6, prompt=32, gen=16, width=4):
     cfg = get_arch(arch).reduced()
     params = model.init_params(cfg, jax.random.PRNGKey(0))
-    prompts = synthetic.eval_batch(cfg, 0, batch=batch, seq=prompt)
-    cache = model.init_cache(cfg, batch, prompt + gen)
-    step = jax.jit(
-        lambda p, t, c, pos: model.decode_step(p, cfg, t, c, pos))
-
-    t0 = time.time()
-    logits = None
-    for t in range(prompt):                      # prefill via decode steps
-        logits, cache = step(params, prompts[:, t:t + 1], cache, t)
-    tok = jnp.argmax(logits, -1)[:, None]
-    toks = [tok]
-    for t in range(prompt, prompt + gen - 1):    # decode
-        logits, cache = step(params, tok, cache, t)
-        tok = jnp.argmax(logits, -1)[:, None]
-        toks.append(tok)
-    dt = time.time() - t0
-    out = jnp.concatenate(toks, 1)
-    print(f"{arch:22s} [{cfg.family:6s}] {batch} seqs x {gen} new tokens "
-          f"in {dt:.2f}s -> {out[0, :8].tolist()}")
+    trace = synthetic_trace(requests, pattern="uniform", prompt_len=prompt,
+                            max_new=gen, gap=2, vary_new=True)
+    try:
+        check_arch(cfg)
+        eng = ServeEngine(cfg, params, width=width,
+                          max_seq_len=prompt + gen, chunk_buckets=(prompt,))
+        eng.warmup()
+        rep, path = eng.run(trace), "engine"
+    except ValueError:
+        rep, path = run_host_loop(cfg, trace, params=params,
+                                  width=width), "legacy"
+    s = rep.summary()
+    print(f"{arch:22s} [{cfg.family:6s}] {path:6s} {s['requests']} reqs, "
+          f"decode {s['decode_tok_s']:7.1f} tok/s, p95 "
+          f"{s['latency_p95_s'] * 1e3:6.1f}ms "
+          f"-> {rep.results[0].tokens[:8]}")
 
 
 if __name__ == "__main__":

@@ -1,125 +1,128 @@
-"""Serving launcher: batched prefill + decode with the sharded KV cache.
+"""Serving launcher: thin client of the repro.serve runtime.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
-        --batch 4 --prompt-len 32 --decode-tokens 16
+        --requests 8 --prompt-len 32 --max-new 16 --width 4 --pattern burst
+
+Attention-family architectures run on the continuous-batching engine
+(paged KV cache + chunked prefill, serve/engine.py); recurrent stacks
+(ssm / rec) and frontends fall back to the legacy static-batch host loop
+(serve/legacy.py).  ``--path legacy`` forces the old path, ``--tp N``
+shards decode over N model-parallel devices (simulated on CPU hosts via
+forced host devices when needed).
 """
 from __future__ import annotations
 
 import argparse
-import functools
-import time
-
-
-@functools.lru_cache(maxsize=None)
-def compiled_decode_step(cfg):
-    """ONE jitted token step per arch config, shared by prefill and decode
-    and cached across launches in the same process — the seed wrapped a
-    fresh unjitted lambda inside ``main`` on every launch, so each launch
-    re-traced and prefill/decode could not share the compiled executable.
-    ``cfg`` is a frozen dataclass (hashable) and is baked in as a static
-    closure; ``pos`` stays a traced scalar so every token position hits the
-    same cache entry."""
-    import jax
-
-    from repro.models import model
-
-    @jax.jit
-    def step(params, token, cache, pos):
-        return model.decode_step(params, cfg, token, cache, pos)
-
-    return step
 
 
 def parse_args(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--decode-tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--vary-new", action="store_true",
+                    help="cycle max_new over {1,3/4,1/2,1/4}x so lanes "
+                         "retire at different steps")
+    ap.add_argument("--pattern", default="burst",
+                    choices=("burst", "uniform", "poisson"))
+    ap.add_argument("--gap", type=int, default=4,
+                    help="mean decode-steps between arrivals")
+    ap.add_argument("--width", type=int, default=4,
+                    help="decode batch lanes (engine) / static batch "
+                         "size (legacy)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--kv-cache", default="paged",
+                    choices=("paged", "dense"))
+    ap.add_argument("--chunk-buckets", default="16,64,128",
+                    help="comma-separated prefill chunk sizes")
+    ap.add_argument("--path", default="auto",
+                    choices=("auto", "engine", "legacy"))
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree for engine decode")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--obs", default="", metavar="PATH",
-                    help="record telemetry (warmup/prefill/decode spans + "
-                         "tok/s) to this JSONL file")
+                    help="record telemetry (admit/prefill/decode/retire "
+                         "spans + report) to this JSONL file")
+    from repro.launch.compile_cache import add_compile_cache_arg
+    add_compile_cache_arg(ap)
     return ap.parse_args(argv)
 
 
 def main(argv=None):
     args = parse_args(argv)
+    if args.tp > 1:
+        import jax
+        if len(jax.devices()) < args.tp:
+            raise SystemExit(
+                f"--tp {args.tp} needs {args.tp} devices but only "
+                f"{len(jax.devices())} are visible; simulate with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    from repro.launch.compile_cache import enable_compile_cache
+    cache_dir = enable_compile_cache(args.compile_cache)
+
     import jax
-    import jax.numpy as jnp
 
     from repro import obs
     from repro.config import get_arch
-    from repro.data import synthetic
     from repro.models import model
+    from repro.serve import (ServeEngine, check_arch, run_host_loop,
+                             synthetic_trace)
 
     if args.obs:
         obs.enable(args.obs)
+    if cache_dir:
+        print(f"compile cache: {cache_dir}")
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init_params(cfg, key)
-    B, S = args.batch, args.prompt_len
-    max_len = S + args.decode_tokens
-    prompts = synthetic.eval_batch(cfg, args.seed, batch=B, seq=S)
+    path = args.path
+    if path == "auto":
+        try:
+            check_arch(cfg)
+            path = "engine"
+        except ValueError as e:
+            print(f"engine unavailable ({e}); using legacy host loop")
+            path = "legacy"
 
-    # prefill: run the prompt through the SAME compiled decode step that
-    # serves decode, building the cache token by token (chunked
-    # prefill-into-cache; the dry-run prefill path lowers the
-    # full-sequence forward instead)
-    cache = model.init_cache(cfg, B, max_len)
-    step = compiled_decode_step(cfg)
-    # pay the one-time compile outside both timed regions (on a throwaway
-    # cache), so the prefill/decode tok/s compare throughput, not XLA
-    with obs.span("serve/warmup", batch=B):
-        jax.block_until_ready(
-            step(params, prompts[:, :1], model.init_cache(cfg, B, max_len),
-                 0))
-    t0 = time.time()
-    with obs.span("serve/prefill", tokens=S, batch=B):
-        logits = None
-        for t in range(S):
-            logits, cache = step(params, prompts[:, t:t + 1], cache, t)
-        jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    params = model.init_params(cfg, jax.random.PRNGKey(args.seed))
+    trace = synthetic_trace(args.requests, pattern=args.pattern,
+                            prompt_len=args.prompt_len,
+                            max_new=args.max_new, gap=args.gap,
+                            vary_new=args.vary_new, seed=args.seed)
 
-    # decode (timer covers all n_gen tokens, including the first one
-    # sampled from the prefill logits)
-    t0 = time.time()
-    with obs.span("serve/decode", batch=B):
-        tok = jnp.argmax(logits, -1)[:, None]
-        out_tokens = [tok]
-        for t in range(S, max_len - 1):
-            logits, cache = step(params, tok, cache, t)
-            if args.temperature > 0:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sub, logits / args.temperature)[:, None]
-            else:
-                tok = jnp.argmax(logits, -1)[:, None]
-            out_tokens.append(tok)
-        gen = jnp.concatenate(out_tokens, axis=1)
-        jax.block_until_ready(gen)
-    t_decode = time.time() - t0
-    n_gen = gen.shape[1]
-    rec = obs.active()
-    if rec is not None:
-        rec.event("serve_throughput", batch=B, prefill_tokens=S,
-                  prefill_s=t_prefill,
-                  prefill_tok_s=B * S / max(t_prefill, 1e-9),
-                  decode_tokens=n_gen, decode_s=t_decode,
-                  decode_tok_s=B * n_gen / max(t_decode, 1e-9))
+    if path == "legacy":
+        rep = run_host_loop(cfg, trace, params=params, width=args.width)
+    else:
+        mesh = None
+        if args.tp > 1:
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh(model_axis=args.tp)
+        max_len = args.prompt_len + args.max_new
+        eng = ServeEngine(
+            cfg, params, width=args.width, block_size=args.block_size,
+            max_seq_len=max_len, kv_cache=args.kv_cache,
+            chunk_buckets=tuple(int(c) for c in
+                                args.chunk_buckets.split(",")),
+            mesh=mesh, seed=args.seed)
+        eng.warmup()
+        rep = eng.run(trace)
+
+    s = rep.summary()
+    cold = sum(rep.compile_s.values())
+    print(f"[{path}] {s['requests']} requests, {s['steps']} steps: "
+          f"prefill {s['prefill_tokens']} tok @ {s['prefill_tok_s']:.1f} "
+          f"tok/s; decode {s['decode_tokens']} tok @ "
+          f"{s['decode_tok_s']:.1f} tok/s; latency p50 "
+          f"{s['latency_p50_s'] * 1e3:.1f}ms p95 "
+          f"{s['latency_p95_s'] * 1e3:.1f}ms; compile {cold:.2f}s")
+    print("sample token ids:", rep.results[0].tokens[:16])
+    if args.obs:
         obs.disable()
         print(f"wrote telemetry to {args.obs}")
-    print(f"prefill {S} tokens x {B} seqs: {t_prefill:.2f}s "
-          f"({B * S / max(t_prefill, 1e-9):.1f} tok/s); "
-          f"decode {n_gen} tokens: {t_decode:.2f}s "
-          f"({B * n_gen / max(t_decode, 1e-9):.1f} tok/s)")
-    print("sample token ids:", gen[0, :16].tolist())
+    return rep
 
 
 if __name__ == "__main__":

@@ -234,6 +234,107 @@ def attend_decode(p, cfg: ModelConfig, x, cache, pos, *,
 
 
 # ---------------------------------------------------------------------------
+# Serving: explicit-context attention (chunked prefill / per-lane decode)
+# ---------------------------------------------------------------------------
+#
+# The serving runtime (repro/serve) batches sequences at DIFFERENT positions
+# in one program, so the lockstep ``attend_decode`` above (one scalar pos for
+# the whole batch) does not apply.  ``attend_serve`` is the shared primitive:
+# queries carry their own absolute positions and the key/value context is an
+# explicit stream with per-entry absolute positions and a validity mask —
+# which is exactly what a paged pool gather, a dense lane buffer, or a
+# sliding-window ring produces.  The online-softmax accumulation over kv
+# chunks is the same scheme as ``chunked_attention`` (and the Pallas flash
+# kernel it oracles), so peak score memory stays O(C * kv_chunk) per head.
+
+
+def ring_positions(last_pos, slots: int):
+    """Absolute position held by each slot of a sequentially-written ring.
+
+    ``last_pos``: (B,) the last absolute position written (-1 if empty).
+    Slot c holds the largest written position ≡ c (mod slots); returns
+    (pos (B, slots), valid (B, slots)) with unwritten slots invalid.
+    """
+    c = jnp.arange(slots)
+    pos = last_pos[:, None] - ((last_pos[:, None] - c[None, :]) % slots)
+    valid = (pos >= 0) & (last_pos >= 0)[:, None]
+    return pos, valid
+
+
+def attend_serve(q, q_pos, k, v, k_pos, k_valid, *, window=None,
+                 softcap=None, kv_chunk: int = 128):
+    """q: (B, C, H, hd); k, v: (B, T, KV, hd); k_pos/k_valid: (B, T).
+
+    Causal against ABSOLUTE positions (key visible iff valid and
+    ``k_pos <= q_pos``; window: ``k_pos > q_pos - window``).  Fully-masked
+    query rows return zeros (padded prefill lanes / dead decode lanes are
+    discarded by the caller).  Online softmax over kv chunks of the
+    context stream.
+    """
+    B, C, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    T = k.shape[1]
+    kv_chunk = min(kv_chunk, T)
+    n = -(-T // kv_chunk)
+    pad = n * kv_chunk - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        k_valid = jnp.pad(k_valid, ((0, 0), (0, pad)),
+                          constant_values=False)
+    acc_t = jnp.promote_types(q.dtype, jnp.float32)
+    scale = (1.0 / jnp.sqrt(hd)).astype(acc_t)
+    qh = q.reshape(B, C, KV, G, hd)
+    ks = k.reshape(B, n, kv_chunk, KV, hd).swapaxes(0, 1)
+    vs = v.reshape(B, n, kv_chunk, KV, hd).swapaxes(0, 1)
+    kps = k_pos.reshape(B, n, kv_chunk).swapaxes(0, 1)
+    oks = k_valid.reshape(B, n, kv_chunk).swapaxes(0, 1)
+
+    def kv_step(carry, inp):
+        m, l, acc = carry
+        k_blk, v_blk, kp, ok = inp
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qh, k_blk,
+                       preferred_element_type=acc_t) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = ok[:, None, :] & (kp[:, None, :] <= q_pos[:, :, None])
+        if window is not None:
+            mask &= kp[:, None, :] > (q_pos[:, :, None] - window)
+        mask = mask[:, :, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        # the explicit re-mask keeps fully-masked rows exactly zero (m_new
+        # stays NEG_INF there, so exp(s - m_new) would be 1, not 0)
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=acc_t)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, C, KV, G), NEG_INF, acc_t)
+    l0 = jnp.zeros((B, C, KV, G), acc_t)
+    a0 = jnp.zeros((B, C, KV, G, hd), acc_t)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps, oks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, C, H, hd).astype(q.dtype)
+
+
+def project_qkv_serve(p, cfg: ModelConfig, x, positions):
+    """Public spelling of the projection for the serve runtime: per-lane
+    absolute positions (B, S) drive rope, unlike the lockstep decode."""
+    return _project_qkv(p, cfg, x, positions)
+
+
+def output_proj_serve(p, cfg: ModelConfig, out):
+    """Head-masked output projection shared with the train/decode paths."""
+    return jnp.einsum("bshk,hkd->bsd", _head_mask(cfg, out), p["wo"])
+
+
+# ---------------------------------------------------------------------------
 # Naive reference (small shapes only; used by tests)
 # ---------------------------------------------------------------------------
 

@@ -206,6 +206,54 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     return {"stack": stacked, "tail": tail}
 
 
+def apply_stack_serve(p, cache, cfg: ModelConfig, x, block_fn):
+    """Generic serve-runtime stack walk: like :func:`apply_stack_decode`
+    but the per-block transform is supplied by the caller —
+    ``block_fn(block_params, block_cache, kind, layer_window, x)`` returns
+    ``(x, new_block_cache)``.  The serve runtime threads per-lane
+    positions, block tables, and paged pools through its closure; the
+    scan-over-super-blocks layout (small HLO at 80 layers) is shared with
+    the train/decode paths.  ``layer_window`` resolves the per-kind
+    sliding window (cfg.sliding_window for 'attn', cfg.local_window for
+    'local') so block_fn sees one uniform contract."""
+    pat, pat_len, n_super, tail_kinds = pattern_info(cfg)
+
+    def win(kind):
+        return cfg.local_window if kind == "local" else cfg.sliding_window
+
+    def super_body(x, inp):
+        sp, sc = inp
+        new_sc = []
+        for j, kind in enumerate(pat):
+            x, c = block_fn(sp[j], sc[j], kind, win(kind), x)
+            new_sc.append(c)
+        return x, new_sc
+
+    x, new_stack = jax.lax.scan(super_body, x, (p["stack"], cache["stack"]))
+    new_tail = []
+    for tp, tc, kind in zip(p["tail"], cache["tail"], tail_kinds):
+        x, c = block_fn(tp, tc, kind, win(kind), x)
+        new_tail.append(c)
+    return x, {"stack": new_stack, "tail": new_tail}
+
+
+def init_stack_serve_cache(cfg: ModelConfig, make_block_cache):
+    """Serve-cache pytree with the stack/tail structure of
+    :func:`init_stack_cache`; ``make_block_cache(kind, layer_window)``
+    builds one layer's cache (paged pool / ring / dense lane buffer)."""
+    pat, pat_len, n_super, tail_kinds = pattern_info(cfg)
+
+    def win(kind):
+        return cfg.local_window if kind == "local" else cfg.sliding_window
+
+    def one_super(_):
+        return [make_block_cache(kind, win(kind)) for kind in pat]
+
+    stacked = jax.vmap(one_super)(jnp.arange(n_super))
+    tail = [make_block_cache(kind, win(kind)) for kind in tail_kinds]
+    return {"stack": stacked, "tail": tail}
+
+
 def apply_stack_decode(p, cache, cfg: ModelConfig, x, pos):
     """x: (B, 1, d) -> (x, new_cache)."""
     pat, pat_len, n_super, tail_kinds = pattern_info(cfg)

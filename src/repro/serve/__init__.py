@@ -1,0 +1,28 @@
+"""Production serving runtime: paged KV cache, chunked prefill,
+continuous batching, and (optional) tensor-parallel decode.
+
+Layering:
+  * ``cache``   — block-pool geometry + host-side allocator;
+  * ``trace``   — deterministic synthetic request traces;
+  * ``runtime`` — the two jitted programs (batched decode_step, bucketed
+                  prefill_chunk) over paged / dense / ring layer caches;
+  * ``engine``  — the continuous-batching scheduler (ServeEngine);
+  * ``legacy``  — the old static-batch per-token host loop, kept as the
+                  non-attention-arch fallback and the bench twin.
+
+See DESIGN.md §Serving.
+"""
+from repro.serve.cache import BlockAllocator, Geometry
+from repro.serve.engine import (RequestResult, ServeEngine, ServeReport,
+                                serve_trace)
+from repro.serve.legacy import run_host_loop
+from repro.serve.runtime import SERVE_KINDS, check_arch
+from repro.serve.trace import (ARRIVAL_PATTERNS, Request, prompt_tokens,
+                               synthetic_trace)
+
+__all__ = [
+    "ARRIVAL_PATTERNS", "BlockAllocator", "Geometry", "Request",
+    "RequestResult", "SERVE_KINDS", "ServeEngine", "ServeReport",
+    "check_arch", "prompt_tokens", "run_host_loop", "serve_trace",
+    "synthetic_trace",
+]

@@ -1,0 +1,120 @@
+"""The pre-engine serving path: static batching + per-token host loop.
+
+Kept as (a) the fallback for architectures the engine does not serve
+(ssm / rec caches, frontend embeds) and (b) the OLD-PATH twin in
+BENCH_serve.json — every engine gate row is paired with a host-loop row
+at the same workload, so the "new decode tok/s >= old" regression gate
+has a measured baseline rather than a remembered one.
+
+Semantics (unchanged from the original launch/serve.py): requests are
+grouped in arrival order into static batches of ``width``; each group
+prefily runs S per-token ``model.decode_step`` launches against a dense
+fully-preallocated cache, then decodes in lockstep to the group's LARGEST
+max_new (lanes that finish early ride along as pure padding waste — the
+cost continuous batching removes).
+
+One fix vs the original: warmup no longer allocates a second full-size
+throwaway cache (``model.init_cache`` used to be built twice, doubling
+peak KV memory for large configs).  The first jitted step IS the warmup —
+it runs on the real, donated cache and its (compile-dominated) time is
+reported as ``compile_s`` instead of being folded into throughput.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Sequence
+
+import numpy as np
+
+import jax
+
+from repro import obs
+from repro.config import ModelConfig
+from repro.models import model
+from repro.serve.engine import RequestResult, ServeReport
+from repro.serve.trace import Request, prompt_tokens
+
+
+def run_host_loop(cfg: ModelConfig, reqs: Sequence[Request], *, params=None,
+                  width: int = 4, seed: int = 0) -> ServeReport:
+    """Serve ``reqs`` with the legacy path; returns the same ServeReport
+    shape as the engine so bench rows are directly comparable."""
+    prompt_lens = {r.prompt_len for r in reqs}
+    if len(prompt_lens) != 1:
+        raise ValueError("legacy host loop batches lockstep: all requests "
+                         f"must share one prompt_len, got {prompt_lens}")
+    if params is None:
+        params = model.init_params(cfg, jax.random.PRNGKey(seed))
+
+    def step_fn(p, tok, cache, pos):
+        return model.decode_step(p, cfg, tok, cache, pos)
+
+    step = jax.jit(step_fn, donate_argnums=(2,))
+
+    ordered = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+    results = {r.rid: RequestResult(rid=r.rid, prompt_len=r.prompt_len,
+                                    max_new=r.max_new,
+                                    arrival_step=r.arrival,
+                                    t_seen=time.time())
+               for r in reqs}
+    rep = ServeReport(results=[])
+    compile_s: Dict[str, float] = {}
+    wall0 = time.perf_counter()
+    cold = True
+    with obs.span("serve/legacy_run", requests=len(reqs), width=width):
+        for g0 in range(0, len(ordered), width):
+            group = ordered[g0:g0 + width]
+            B, S = len(group), group[0].prompt_len
+            gmax = max(r.max_new for r in group)
+            prompts = np.stack([prompt_tokens(r, cfg.vocab_size)
+                                for r in group])
+            # ONE cache per group; the first step below doubles as warmup
+            cache = model.init_cache(cfg, B, S + gmax)
+            t_start = 0
+            if cold:
+                t0 = time.perf_counter()
+                logits, cache = step(params, prompts[:, :1], cache,
+                                     np.int32(0))
+                jax.block_until_ready(logits)
+                compile_s["decode"] = time.perf_counter() - t0
+                cold = False
+                t_start = 1
+            with obs.span("serve/legacy_prefill", batch=B, tokens=B * S):
+                t0 = time.perf_counter()
+                for t in range(t_start, S):
+                    logits, cache = step(params, prompts[:, t:t + 1], cache,
+                                         np.int32(t))
+                cur = np.argmax(np.asarray(logits), axis=-1)
+                rep.prefill_s += time.perf_counter() - t0
+            rep.prefill_tokens += B * (S - t_start)
+            rep.steps += S
+            now = time.time()
+            gen = np.zeros((B, gmax), np.int64)
+            gen[:, 0] = cur
+            for r in group:
+                results[r.rid].t_first = now
+            with obs.span("serve/legacy_decode", batch=B, steps=gmax - 1):
+                t0 = time.perf_counter()
+                for g in range(1, gmax):
+                    tok = cur[:, None].astype(np.int32)
+                    logits, cache = step(params, tok, cache,
+                                         np.int32(S + g - 1))
+                    cur = np.argmax(np.asarray(logits), axis=-1)
+                    gen[:, g] = cur
+                rep.decode_s += time.perf_counter() - t0
+            rep.steps += gmax - 1
+            rep.decode_tokens += sum(r.max_new - 1 for r in group)
+            now = time.time()
+            for i, r in enumerate(group):
+                res = results[r.rid]
+                res.tokens = [int(x) for x in gen[i, :r.max_new]]
+                res.t_finish = now
+                res.finish_step = rep.steps
+            del cache
+    rep.wall_s = time.perf_counter() - wall0
+    rep.compile_s = compile_s
+    rep.results = [results[r.rid] for r in sorted(reqs, key=lambda q: q.rid)]
+    rec = obs.active()
+    if rec:
+        rec.event("serve_report", path="legacy", **rep.summary())
+    return rep

@@ -1,0 +1,278 @@
+"""Jitted serving programs: chunked prefill and fixed-width batched decode
+over a paged (or dense-oracle) KV cache.
+
+Two programs per (config, geometry), built by :func:`build_programs`:
+
+``decode_step(params, cache, tokens, lens, alive, tables)``
+    One token for every lane of a fixed decode batch of ``width`` lanes,
+    each lane at its OWN position ``lens[lane]`` (unlike the lockstep
+    ``model.decode_step``).  Dead lanes (``alive=False``) run padded
+    compute whose KV writes land in the trash block / are dropped, so a
+    lane's output stream is bitwise independent of what the other lanes
+    are doing — the property the batched-vs-sequential equivalence test
+    pins.  Cache is donated.
+
+``prefill_chunk(params, cache, tokens, len0, n_valid, lane, table_row)``
+    Writes one chunk of ``C = tokens.shape[0]`` prompt tokens (``n_valid``
+    real, rest padding) into lane ``lane``'s cache starting at absolute
+    position ``len0``, and returns the logits at the LAST valid position
+    (the first generated token when the final chunk lands).  One jit
+    executable per chunk bucket C; the engine pads to its bucket list so
+    the executable count stays bounded.  Cache is donated.
+
+Per-layer cache modes (decided by layer kind + geometry):
+  * windowed layers ("local" always; "attn" with cfg.sliding_window) keep
+    per-lane RING buffers of ``min(context, window)`` slots — already
+    bounded, nothing to page;
+  * full-attention layers use the paged POOL ``(num_blocks, block_size,
+    KV, hd)`` + shared block tables, or per-lane dense buffers of the
+    same padded context width when ``geometry.kv_cache == "dense"``.
+
+Both full-attention modes feed :func:`attention.attend_serve` a context
+of identical width T = context with identical validity masks, and masked
+entries contribute an exact 0.0 to the online softmax — so paged and
+dense greedy decode are bit-identical, which is what makes the dense
+path a usable oracle.
+
+Ring prefill subtlety: a chunk may overwrite ring slots that EARLIER
+queries of the same chunk still need, so the ring path attends over the
+concatenated stream ``[old ring, chunk]`` and only afterwards folds the
+chunk into the ring via a deterministic gather (slot c takes the newest
+chunk position ≡ c mod slots) — write-then-attend would be wrong there.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention, layers, moe, transformer
+from repro.serve.cache import Geometry
+
+SERVE_KINDS = ("attn", "local")
+
+
+def check_arch(cfg: ModelConfig) -> None:
+    """The engine serves attention-family stacks; recurrent caches (ssm /
+    rec) and frontend embeds keep the legacy per-token path."""
+    bad = sorted(set(cfg.layer_kinds()) - set(SERVE_KINDS))
+    if bad:
+        raise ValueError(
+            f"{cfg.name}: serve runtime handles attention-family layers "
+            f"only, found {bad}; use the legacy host-loop path "
+            f"(serve/legacy.py)")
+    if cfg.frontend is not None:
+        raise ValueError(f"{cfg.name}: frontend embeds are not servable by "
+                         "the engine; use the legacy host-loop path")
+
+
+def init_cache(cfg: ModelConfig, geo: Geometry):
+    """Serve cache pytree: per-layer paged pools / dense lane buffers /
+    rings, in the stack/tail structure every stack walker expects."""
+    dtype = jnp.dtype(cfg.dtype)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def make(kind, window):
+        if window:
+            slots = min(geo.context, window)
+            shape = (geo.width, slots, KV, hd)
+        elif geo.kv_cache == "paged":
+            shape = (geo.num_blocks, geo.block_size, KV, hd)
+        else:
+            shape = (geo.width, geo.context, KV, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    return transformer.init_stack_serve_cache(cfg, make)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer attention: decode
+# ---------------------------------------------------------------------------
+
+def _decode_attend(p, cfg, geo, x, kv, window, lens, alive, tables):
+    D = geo.width
+    positions = lens[:, None]                       # (D, 1) per-lane rope
+    q, k_new, v_new = attention.project_qkv_serve(p, cfg, x, positions)
+    lane = jnp.arange(D)
+
+    if window:
+        slots = kv["k"].shape[1]
+        slot = lens % slots
+        keep = ~alive[:, None, None]
+        k_c = kv["k"].at[lane, slot].set(
+            jnp.where(keep, kv["k"][lane, slot], k_new[:, 0]))
+        v_c = kv["v"].at[lane, slot].set(
+            jnp.where(keep, kv["v"][lane, slot], v_new[:, 0]))
+        k_pos, k_valid = attention.ring_positions(lens, slots)
+        out = attention.attend_serve(q, positions, k_c, v_c, k_pos, k_valid,
+                                     window=window,
+                                     softcap=cfg.attn_logit_softcap)
+        return attention.output_proj_serve(p, cfg, out), {"k": k_c, "v": v_c}
+
+    t = jnp.arange(geo.context)
+    k_pos = jnp.broadcast_to(t[None, :], (D, geo.context))
+    k_valid = t[None, :] <= lens[:, None]
+
+    if geo.kv_cache == "paged":
+        # dead lanes write the trash block 0 (never table-reachable)
+        phys = jnp.where(alive, tables[lane, lens // geo.block_size], 0)
+        off = lens % geo.block_size
+        k_pool = kv["k"].at[phys, off].set(k_new[:, 0])
+        v_pool = kv["v"].at[phys, off].set(v_new[:, 0])
+        k_c = k_pool[tables].reshape(D, geo.context, *k_pool.shape[2:])
+        v_c = v_pool[tables].reshape(D, geo.context, *v_pool.shape[2:])
+        new_kv = {"k": k_pool, "v": v_pool}
+    else:
+        # dense oracle: dead-lane writes dropped via OOB slot
+        slot = jnp.where(alive, lens, geo.context)
+        k_c = kv["k"].at[lane, slot].set(k_new[:, 0], mode="drop")
+        v_c = kv["v"].at[lane, slot].set(v_new[:, 0], mode="drop")
+        new_kv = {"k": k_c, "v": v_c}
+
+    out = attention.attend_serve(q, positions, k_c, v_c, k_pos, k_valid,
+                                 window=None, softcap=cfg.attn_logit_softcap)
+    return attention.output_proj_serve(p, cfg, out), new_kv
+
+
+# ---------------------------------------------------------------------------
+# Per-layer attention: prefill (single lane, one chunk)
+# ---------------------------------------------------------------------------
+
+def _prefill_attend(p, cfg, geo, x, kv, window, len0, n_valid, lane,
+                    table_row):
+    C = x.shape[1]
+    i = jnp.arange(C)
+    pos_i = len0 + i                                # (C,) absolute positions
+    positions = pos_i[None, :]
+    q, k_new, v_new = attention.project_qkv_serve(p, cfg, x, positions)
+    chunk_valid = i < n_valid
+
+    if window:
+        slots = kv["k"].shape[1]
+        ring_k, ring_v = kv["k"][lane], kv["v"][lane]
+        r_pos, r_valid = attention.ring_positions(
+            jnp.reshape(len0 - 1, (1,)), slots)
+        k_s = jnp.concatenate([ring_k[None], k_new], axis=1)
+        v_s = jnp.concatenate([ring_v[None], v_new], axis=1)
+        k_pos = jnp.concatenate([r_pos, positions], axis=1)
+        k_valid = jnp.concatenate([r_valid, chunk_valid[None]], axis=1)
+        out = attention.attend_serve(q, positions, k_s, v_s, k_pos, k_valid,
+                                     window=window,
+                                     softcap=cfg.attn_logit_softcap)
+        # fold the chunk into the ring: slot c takes the newest valid chunk
+        # position ≡ c (mod slots), else keeps its old entry
+        last = len0 + n_valid - 1
+        c = jnp.arange(slots)
+        p_c = last - ((last - c) % slots)
+        take = (p_c >= len0) & (n_valid > 0)
+        idx = jnp.clip(p_c - len0, 0, C - 1)
+        new_k = jnp.where(take[:, None, None], k_new[0, idx], ring_k)
+        new_v = jnp.where(take[:, None, None], v_new[0, idx], ring_v)
+        new_kv = {"k": kv["k"].at[lane].set(new_k),
+                  "v": kv["v"].at[lane].set(new_v)}
+        return attention.output_proj_serve(p, cfg, out), new_kv
+
+    t = jnp.arange(geo.context)
+    k_pos = t[None, :]
+    k_valid = (t < len0 + n_valid)[None, :]
+
+    if geo.kv_cache == "paged":
+        phys = jnp.where(chunk_valid, table_row[pos_i // geo.block_size], 0)
+        off = pos_i % geo.block_size
+        k_pool = kv["k"].at[phys, off].set(k_new[0])
+        v_pool = kv["v"].at[phys, off].set(v_new[0])
+        k_c = k_pool[table_row].reshape(geo.context, *k_pool.shape[2:])[None]
+        v_c = v_pool[table_row].reshape(geo.context, *v_pool.shape[2:])[None]
+        new_kv = {"k": k_pool, "v": v_pool}
+    else:
+        wr = jnp.where(chunk_valid, pos_i, geo.context)
+        k_buf = kv["k"].at[lane, wr].set(k_new[0], mode="drop")
+        v_buf = kv["v"].at[lane, wr].set(v_new[0], mode="drop")
+        k_c, v_c = k_buf[lane][None], v_buf[lane][None]
+        new_kv = {"k": k_buf, "v": v_buf}
+
+    out = attention.attend_serve(q, positions, k_c, v_c, k_pos, k_valid,
+                                 window=None, softcap=cfg.attn_logit_softcap)
+    return attention.output_proj_serve(p, cfg, out), new_kv
+
+
+# ---------------------------------------------------------------------------
+# Block + full-model programs
+# ---------------------------------------------------------------------------
+
+def _apply_block(bp, bc, cfg, x, mixer_fn):
+    bp = transformer._cast_params(bp, jnp.dtype(cfg.dtype))
+    h = layers.apply_norm(bp["norm1"], x, cfg.norm_type)
+    mix, bc = mixer_fn(bp["mixer"], h, bc)
+    x = x + mix
+    h = layers.apply_norm(bp["norm2"], x, cfg.norm_type)
+    if cfg.is_moe:
+        y, _ = moe.apply_moe(bp["ffn"], cfg, h)
+    else:
+        y = layers.apply_mlp(bp["ffn"], h, cfg.mlp_type)
+    return x + y, bc
+
+
+def decode_step(params, cfg: ModelConfig, geo: Geometry, cache,
+                tokens, lens, alive, tables):
+    """tokens/lens/alive: (width,); tables: (width, blocks_per_seq)
+    -> (logits (width, vocab) f32, new_cache)."""
+    compute = jnp.dtype(cfg.dtype)
+    x = layers.embed_tokens(params["embed"], tokens[:, None]).astype(compute)
+
+    def block_fn(bp, bc, kind, window, x):
+        return _apply_block(
+            bp, bc, cfg, x,
+            lambda mp, h, kv: _decode_attend(mp, cfg, geo, h, kv, window,
+                                             lens, alive, tables))
+
+    x, cache = transformer.apply_stack_serve(params["layers"], cache, cfg,
+                                             x, block_fn)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = layers.lm_logits(params["head"], params["embed"], x,
+                              cfg.tie_embeddings)
+    return logits[:, 0].astype(jnp.float32), cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, geo: Geometry, cache,
+                  tokens, len0, n_valid, lane, table_row):
+    """tokens: (C,); len0/n_valid/lane scalars; table_row: (blocks_per_seq,)
+    -> (logits (vocab,) f32 at the last valid position, new_cache)."""
+    compute = jnp.dtype(cfg.dtype)
+    x = layers.embed_tokens(params["embed"], tokens[None, :]).astype(compute)
+
+    def block_fn(bp, bc, kind, window, x):
+        return _apply_block(
+            bp, bc, cfg, x,
+            lambda mp, h, kv: _prefill_attend(mp, cfg, geo, h, kv, window,
+                                              len0, n_valid, lane, table_row))
+
+    x, cache = transformer.apply_stack_serve(params["layers"], cache, cfg,
+                                             x, block_fn)
+    x_last = x[:, jnp.clip(n_valid - 1, 0, tokens.shape[0] - 1)][:, None]
+    x_last = layers.apply_norm(params["final_norm"], x_last, cfg.norm_type)
+    logits = layers.lm_logits(params["head"], params["embed"], x_last,
+                              cfg.tie_embeddings)
+    return logits[0, 0].astype(jnp.float32), cache
+
+
+@functools.lru_cache(maxsize=None)
+def build_programs(cfg: ModelConfig, geo: Geometry):
+    """Returns (decode, prefill) jitted with the cache donated.  ``prefill``
+    specializes per chunk length C (the engine buckets C, keeping the
+    executable count = len(chunk_buckets)).  Memoized per (cfg, geometry)
+    — both frozen dataclasses — so every engine over the same shapes
+    shares one set of executables (placement still follows the argument
+    shardings, so TP and single-device engines coexist)."""
+    def _decode(params, cache, tokens, lens, alive, tables):
+        return decode_step(params, cfg, geo, cache, tokens, lens, alive,
+                           tables)
+
+    def _prefill(params, cache, tokens, len0, n_valid, lane, table_row):
+        return prefill_chunk(params, cfg, geo, cache, tokens, len0, n_valid,
+                             lane, table_row)
+
+    return (jax.jit(_decode, donate_argnums=(1,)),
+            jax.jit(_prefill, donate_argnums=(1,)))

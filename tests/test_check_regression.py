@@ -23,10 +23,24 @@ def _train_artifact(speedup):
     ]}
 
 
-def _run(tmp_path, drivers, train):
+def _serve_artifact(decode=1.5, prefill=8.0, extra=()):
+    return {"rows": [
+        {"name": "serve_throughput/host-loop-w4", "path": "host-loop"},
+        {"name": "serve_throughput/engine-paged-w4", "path": "engine-paged",
+         "decode_speedup_vs_host": decode},
+        {"name": "serve_throughput/engine-prefill128",
+         "path": "engine-paged", "prefill_speedup_vs_host": prefill},
+        *extra,
+    ]}
+
+
+def _run(tmp_path, drivers, train, serve="default"):
+    if serve == "default":
+        serve = _serve_artifact()
     args = [sys.executable, SCRIPT, "--floor", "1.0"]
     for flag, payload, fname in (("--path", drivers, "drv.json"),
-                                 ("--train-path", train, "trn.json")):
+                                 ("--train-path", train, "trn.json"),
+                                 ("--serve-path", serve, "srv.json")):
         p = tmp_path / fname
         if payload is not None:
             p.write_text(json.dumps(payload))
@@ -55,20 +69,23 @@ def test_train_regression_fails(tmp_path):
     assert "train speedup below" in r.stderr
 
 
+def _write(tmp_path, name, payload):
+    p = os.path.join(tmp_path, name)
+    with open(p, "w") as f:
+        json.dump(payload, f)
+    return p
+
+
 def test_host_rows_not_gated(tmp_path):
     """The host reference row is 1.0x by construction and must not trip
     the gate when the floor rises."""
-    drivers = _drivers_artifact(5.0)
-    train = _train_artifact(5.0)
-    args = [sys.executable, SCRIPT, "--floor", "2.0"]
-    dp, tp = os.path.join(tmp_path, "d.json"), os.path.join(tmp_path,
-                                                            "t.json")
-    with open(dp, "w") as f:
-        json.dump(drivers, f)
-    with open(tp, "w") as f:
-        json.dump(train, f)
-    r = subprocess.run(args + ["--path", dp, "--train-path", tp],
-                       capture_output=True, text=True)
+    dp = _write(tmp_path, "d.json", _drivers_artifact(5.0))
+    tp = _write(tmp_path, "t.json", _train_artifact(5.0))
+    sp = _write(tmp_path, "s.json", _serve_artifact(5.0))
+    r = subprocess.run(
+        [sys.executable, SCRIPT, "--floor", "2.0", "--path", dp,
+         "--train-path", tp, "--serve-path", sp],
+        capture_output=True, text=True)
     assert r.returncode == 0, r.stdout + r.stderr
 
 
@@ -103,39 +120,37 @@ def test_train_without_scan_rows_fails(tmp_path):
 def test_report_written_with_gate_decisions(tmp_path):
     """--report dumps every gate decision + the verdict as JSON (the CI
     artifact a red gate is diagnosed from)."""
-    drivers = _drivers_artifact(2.0)
-    train = _train_artifact(3.0)
-    dp, tp, rp = (str(tmp_path / n) for n in ("d.json", "t.json", "r.json"))
-    with open(dp, "w") as f:
-        json.dump(drivers, f)
-    with open(tp, "w") as f:
-        json.dump(train, f)
+    dp = _write(tmp_path, "d.json", _drivers_artifact(2.0))
+    tp = _write(tmp_path, "t.json", _train_artifact(3.0))
+    sp = _write(tmp_path, "s.json", _serve_artifact())
+    rp = str(tmp_path / "r.json")
     r = subprocess.run(
         [sys.executable, SCRIPT, "--floor", "1.0", "--path", dp,
-         "--train-path", tp, "--report", rp],
+         "--train-path", tp, "--serve-path", sp, "--report", rp],
         capture_output=True, text=True)
     assert r.returncode == 0, r.stdout + r.stderr
     with open(rp) as f:
         report = json.load(f)
     assert report["failed"] is False
     assert report["floor"] == 1.0
-    assert report["artifacts"] == {"drivers": dp, "train": tp}
+    assert report["artifacts"] == {"drivers": dp, "train": tp, "serve": sp}
     by_name = {g["name"]: g for g in report["gates"]}
     assert by_name["drivers/sync-p2"]["status"] == "ok"
     assert by_name["train_throughput/scan-vmap-w2"]["status"] == "ok"
+    assert by_name["serve_throughput/engine-paged-w4"]["status"] == "ok"
+    assert by_name["serve_throughput/engine-prefill128"]["status"] == "ok"
 
 
 def test_report_records_failure_verdict(tmp_path):
     r = _run(tmp_path, _drivers_artifact(0.5), _train_artifact(3.0))
     assert r.returncode == 1
-    dp = tmp_path / "d2.json"
-    dp.write_text(json.dumps(_drivers_artifact(0.5)))
-    tp = tmp_path / "t2.json"
-    tp.write_text(json.dumps(_train_artifact(3.0)))
+    dp = _write(tmp_path, "d2.json", _drivers_artifact(0.5))
+    tp = _write(tmp_path, "t2.json", _train_artifact(3.0))
+    sp = _write(tmp_path, "s2.json", _serve_artifact())
     rp = tmp_path / "r2.json"
     r = subprocess.run(
-        [sys.executable, SCRIPT, "--floor", "1.0", "--path", str(dp),
-         "--train-path", str(tp), "--report", str(rp)],
+        [sys.executable, SCRIPT, "--floor", "1.0", "--path", dp,
+         "--train-path", tp, "--serve-path", sp, "--report", str(rp)],
         capture_output=True, text=True)
     assert r.returncode == 1
     report = json.loads(rp.read_text())
@@ -150,14 +165,13 @@ def test_telemetry_rows_reported_but_never_gated(tmp_path):
     drivers = _drivers_artifact(2.0)
     drivers["rows"].append({"name": "drivers/async-p8-obs",
                             "telemetry": True, "overhead_vs_off": 50.0})
-    dp = tmp_path / "d.json"
-    dp.write_text(json.dumps(drivers))
-    tp = tmp_path / "t.json"
-    tp.write_text(json.dumps(_train_artifact(3.0)))
+    dp = _write(tmp_path, "d.json", drivers)
+    tp = _write(tmp_path, "t.json", _train_artifact(3.0))
+    sp = _write(tmp_path, "s.json", _serve_artifact())
     rp = tmp_path / "r.json"
     r = subprocess.run(
-        [sys.executable, SCRIPT, "--floor", "1.0", "--path", str(dp),
-         "--train-path", str(tp), "--report", str(rp)],
+        [sys.executable, SCRIPT, "--floor", "1.0", "--path", dp,
+         "--train-path", tp, "--serve-path", sp, "--report", str(rp)],
         capture_output=True, text=True)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "informational" in r.stdout
@@ -167,6 +181,53 @@ def test_telemetry_rows_reported_but_never_gated(tmp_path):
     assert twin == [{"name": "drivers/async-p8-obs",
                      "gate": "overhead_vs_off", "value": 50.0,
                      "floor": None, "status": "informational"}]
+
+
+def test_serve_decode_regression_fails(tmp_path):
+    """The engine decoding slower than the legacy host loop it replaces
+    is a gated regression."""
+    r = _run(tmp_path, _drivers_artifact(2.0), _train_artifact(3.0),
+             serve=_serve_artifact(decode=0.8))
+    assert r.returncode == 1
+    assert "serve speedup below floor" in r.stderr
+    assert "engine-paged-w4" in r.stderr
+
+
+def test_serve_prefill_regression_fails(tmp_path):
+    """Chunked prefill must stay >= 5x per-token prefill at prompt 128."""
+    r = _run(tmp_path, _drivers_artifact(2.0), _train_artifact(3.0),
+             serve=_serve_artifact(prefill=3.0))
+    assert r.returncode == 1
+    assert "engine-prefill128" in r.stderr
+
+
+def test_serve_estimated_rows_exempt(tmp_path):
+    """CPU-simulated TP rows carry estimated:true and are informational,
+    same convention as interpret-mode fused rows."""
+    tp_row = {"name": "serve_throughput/engine-tp2", "path": "engine-tp",
+              "estimated": True, "decode_speedup_vs_host": 0.1}
+    r = _run(tmp_path, _drivers_artifact(2.0), _train_artifact(3.0),
+             serve=_serve_artifact(extra=[tp_row]))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "exempt: estimated" in r.stdout
+
+
+def test_serve_missing_artifact_fails(tmp_path):
+    r = _run(tmp_path, _drivers_artifact(2.0), _train_artifact(3.0),
+             serve=None)
+    assert r.returncode == 1
+    assert "unreadable bench artifact" in r.stderr
+
+
+def test_serve_without_gated_rows_fails(tmp_path):
+    """An artifact holding only host-loop / estimated rows guards
+    nothing and must fail loudly."""
+    serve = {"rows": [{"name": "serve_throughput/host-loop-w4",
+                       "path": "host-loop"}]}
+    r = _run(tmp_path, _drivers_artifact(2.0), _train_artifact(3.0),
+             serve=serve)
+    assert r.returncode == 1
+    assert "no gated engine rows" in r.stderr
 
 
 def test_committed_artifacts_pass():
