@@ -44,7 +44,13 @@ the floors protect (enabling telemetry must not be able to fail CI).
                                           [--fused-floor 1.0]
                                           [--serve-floor 1.0]
                                           [--serve-prefill-floor 5.0]
+                                          [--compile-floor 0]
                                           [--report report.json]
+
+``--compile-floor SECONDS`` additionally gates every row's ``cold_s``
+(first-invocation wall clock, jit compile included) across all three
+artifacts — 0 (the default) disables the gate; rows without a
+``cold_s`` field are printed as exempt.
 
 Exit status 1 on regression — the benchmark-smoke CI job gates on it.
 ``--report`` additionally writes a machine-readable JSON gate report
@@ -124,6 +130,31 @@ def _gate_fused(rows, floor: float, report):
     return bad, gated
 
 
+def _gate_compile(rows, ceiling: float, report):
+    """Gate every row carrying ``cold_s`` (first-invocation wall clock,
+    compile included) against the compile-time ceiling; rows without the
+    field (older twins, derived rows) are printed as exempt.  A compile
+    blow-up is a regression even when warm throughput holds — it is the
+    cost every fresh CI job and every elastic rejoin pays."""
+    bad = []
+    for r in rows:
+        cold = r.get("cold_s")
+        if cold is None:
+            print(f"{r['name']}: no cold_s recorded [exempt: no-cold]")
+            report.append({"name": r["name"], "gate": "cold_s",
+                           "value": None, "floor": None,
+                           "status": "exempt:no-cold"})
+            continue
+        status = "ok" if cold <= ceiling else "REGRESSION"
+        print(f"{r['name']}: cold {cold:.2f}s vs {ceiling:.0f}s compile "
+              f"ceiling [{status}]")
+        report.append({"name": r["name"], "gate": "cold_s", "value": cold,
+                       "floor": ceiling, "status": status})
+        if cold > ceiling:
+            bad.append(r["name"])
+    return bad
+
+
 def _gate_serve(rows, decode_floor: float, prefill_floor: float, report):
     """Gate engine rows on decode/prefill speedup vs the host-loop twin;
     ``estimated: true`` rows (CPU-simulated TP) are printed as exempt."""
@@ -177,18 +208,24 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-prefill-floor", type=float, default=5.0,
                     help="minimum acceptable chunked-prefill speedup over "
                          "per-token prefill at prompt-len 128")
+    ap.add_argument("--compile-floor", type=float, default=0.0,
+                    help="maximum allowed cold_s (first invocation, "
+                         "compile included) for any bench row; 0 disables "
+                         "the gate; rows without cold_s are exempt")
     ap.add_argument("--report", default="",
                     help="write a machine-readable JSON gate report here")
     args = ap.parse_args(argv)
 
     failed = False
     fused_rows = []
+    compile_rows = []
     report = []
 
     rows = _load_rows(args.path)
     if rows is None:
         failed = True
     else:
+        compile_rows += rows
         fused_rows += [r for r in rows if r.get("fused")]
         _show_telemetry([r for r in rows if r.get("telemetry")], report)
         legacy = [r for r in rows
@@ -207,6 +244,7 @@ def main(argv=None) -> int:
     if rows is None:
         failed = True
     else:
+        compile_rows += rows
         fused_rows += [r for r in rows if r.get("fused")]
         _show_telemetry([r for r in rows if r.get("telemetry")], report)
         scan = [r for r in rows
@@ -231,6 +269,7 @@ def main(argv=None) -> int:
     if rows is None:
         failed = True
     else:
+        compile_rows += rows
         bad, gated, exempt = _gate_serve(rows, args.serve_floor,
                                          args.serve_prefill_floor, report)
         if bad:
@@ -257,10 +296,21 @@ def main(argv=None) -> int:
                   f"{args.fused_floor:.2f}x floor ({exempt} interpret-mode "
                   "rows exempt)")
 
+    if args.compile_floor > 0 and compile_rows:
+        bad = _gate_compile(compile_rows, args.compile_floor, report)
+        if bad:
+            print(f"cold_s above the {args.compile_floor:.0f}s compile "
+                  f"ceiling for: {', '.join(bad)}", file=sys.stderr)
+            failed = True
+        else:
+            print(f"all cold_s rows within the {args.compile_floor:.0f}s "
+                  "compile ceiling")
+
     if args.report:
         payload = {
             "failed": failed,
             "floor": args.floor,
+            "compile_floor": args.compile_floor,
             "fused_floor": args.fused_floor,
             "serve_floor": args.serve_floor,
             "serve_prefill_floor": args.serve_prefill_floor,

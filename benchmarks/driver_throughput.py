@@ -60,6 +60,7 @@ def _bench_pair(name, spec, problem, loop_fn, epochs, repeat):
     return {
         "name": name,
         "us_per_call": scan_warm * 1e6,
+        "cold_s": scan_cold,
         "scan_cold_s": scan_cold,
         "scan_warm_s": scan_warm,
         "scan_compile_s": max(scan_cold - scan_warm, 0.0),
@@ -89,6 +90,7 @@ def _fused_twin(base_row, spec, problem, epochs, repeat):
         "us_per_call": warm * 1e6,
         "fused": True,
         "interpret": interpret,
+        "cold_s": cold,
         "scan_cold_s": cold,
         "scan_warm_s": warm,
         "scan_compile_s": max(cold - warm, 0.0),

@@ -1,1 +1,1 @@
-from repro.checkpoint import checkpoint  # noqa: F401
+from repro.checkpoint import checkpoint, elastic  # noqa: F401

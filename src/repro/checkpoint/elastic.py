@@ -1,0 +1,103 @@
+"""Mesh-shape-portable checkpoints for the elastic async runtime
+(DESIGN.md §Multi-host & elasticity).
+
+A checkpoint taken at a wave boundary carries BOTH representations of the
+CentralVR-Async state:
+
+  * the full per-worker ``AsyncState`` at the shape it was saved at —
+    restoring at the SAME worker count is exact (bit-equal continuation);
+  * the shape-portable core — central ``(x_c, gbar_c)`` plus the merged
+    ``(n,)`` VR table — restoring at a DIFFERENT worker count re-shards
+    the table contiguously and RESYNCS the per-worker fetch/old vectors
+    to the central values (``core.elastic.resync_state``), the same
+    handover a live repartition performs.  The trajectory from a resumed
+    checkpoint is therefore pinned against an uninterrupted run at the
+    new shape (``tests/test_checkpoint_roundtrip.py``).
+
+Format matches ``checkpoint/checkpoint.py``'s conventions: one ``.npz``
+of host arrays plus a ``.json`` manifest (round, shape, live worker ids).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def _norm(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def save_elastic(path: str, st, *, round_: int, live: Sequence[int],
+                 p0: int) -> None:
+    """Persist an ``AsyncState`` at a wave boundary.  ``live`` are the
+    ORIGINAL worker ids of the current shape; ``p0`` the fleet size the
+    run started with."""
+    path = _norm(path)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {k: np.asarray(v) for k, v in st._asdict().items()}
+    np.savez(path, **arrays)
+    p, ns = arrays["tables"].shape
+    manifest = {
+        "kind": "elastic_async", "round": int(round_), "p": int(p),
+        "ns": int(ns), "n": int(p * ns), "d": int(arrays["x_c"].shape[0]),
+        "live": [int(s) for s in live], "p0": int(p0),
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_manifest(path: str) -> dict:
+    with open(_norm(path) + ".json") as f:
+        return json.load(f)
+
+
+def restore_elastic(path: str, p_new: Optional[int] = None) -> Tuple:
+    """Rebuild an ``AsyncState`` from a wave-boundary checkpoint.
+
+    ``p_new=None`` (or the saved shape) restores the full per-worker
+    state exactly; any other shape goes through the merged-table resync
+    handover.  Returns ``(state, manifest)``."""
+    from repro.core.distributed import AsyncState
+    from repro.core.elastic import resync_state
+
+    import jax.numpy as jnp
+
+    path = _norm(path)
+    manifest = load_manifest(path)
+    data = np.load(path)
+    if p_new is None or p_new == manifest["p"]:
+        st = AsyncState(**{k: jnp.asarray(data[k])
+                           for k in AsyncState._fields})
+        return st, manifest
+    if manifest["n"] % p_new:
+        raise ValueError(
+            f"restore_elastic: checkpoint has n={manifest['n']} samples, "
+            f"which does not divide over p={p_new} workers")
+    st = resync_state(data["x_c"], data["gbar_c"],
+                      data["tables"].reshape(-1), p_new)
+    return st, manifest
+
+
+def latest_elastic(dirpath: str) -> Optional[str]:
+    """Path (sans extension) of the highest-round elastic checkpoint in
+    ``dirpath``, or None."""
+    best, best_round = None, -1
+    try:
+        names = os.listdir(dirpath)
+    except FileNotFoundError:
+        return None
+    for name in names:
+        if not (name.startswith("elastic_") and name.endswith(".npz.json")):
+            continue
+        stem = os.path.join(dirpath, name[:-len(".npz.json")])
+        try:
+            r = load_manifest(stem)["round"]
+        except (OSError, KeyError, json.JSONDecodeError):
+            continue
+        if r > best_round:
+            best, best_round = stem, r
+    return best

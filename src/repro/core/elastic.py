@@ -1,0 +1,307 @@
+"""Elastic execution for the asynchronous wave runtime (DESIGN.md
+§Multi-host & elasticity).
+
+The paper's schedule machinery already models workers that run at
+different *speeds*; this module models workers that *disappear* (and come
+back).  Membership changes take effect only at wave boundaries — a
+metric round of p events is the coarsest wave group, and every round
+boundary is a wave boundary — so a dropped worker's last completed wave
+is fully applied and its unstarted events are simply never scheduled.
+
+Determinism contract under repartition (pinned by ``tests/test_elastic.py``
+and re-implemented process-parallel by ``core/procmesh.py``):
+
+  * **survivor schedule** — the remaining rounds are re-planned with
+    ``runtime.event_schedule(p_new, rounds_left, survivor speeds)`` over
+    the surviving workers in ascending original-id order (the k-th
+    smallest survivor becomes compact slot k;
+    ``runtime.repartition_schedule``).  Nothing about the new schedule
+    depends on *when* the failure was detected, only on the boundary
+    round at which it took effect.
+  * **state handover** — the central pair ``(x_c, gbar_c)`` is retained;
+    the VR tables are re-sharded through their merged ``(n,)`` layout
+    (global sample order is invariant under contiguous resharding); every
+    per-worker fetch/old vector is RESYNCED to the central values —
+    exactly the ``async_init`` construction, so the first post-change
+    event of each worker contributes ``x_new - x_c`` and nothing is
+    double-counted.  ``resync_state`` is that construction in one place.
+  * **continuation RNG** — the shape segment beginning at round r draws
+    its event keys from ``fold_in(fold_in(k_run, r), p_new)``
+    (``segment_plan``), so an elastic run and a fresh run started at the
+    new shape from the handed-over state consume identical randomness:
+    the post-dropout trajectory of ``run_async_elastic`` is bit-equal to
+    ``continue_async`` at the surviving worker count.
+
+Telemetry: membership transitions emit ``worker_lost`` /
+``worker_joined`` / ``repartition`` events against the active
+``repro.obs`` recorder (required fields pinned in ``obs/schema.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import convex, runtime
+from repro.core.distributed import (AsyncState, ShardedProblem, _async_scan,
+                                    async_init, shard_problem)
+from repro.obs import recorder as obs_recorder
+
+
+# ---------------------------------------------------------------------------
+# Membership as data
+# ---------------------------------------------------------------------------
+
+class PlannedMembership:
+    """Deterministic membership: ``{round: live original worker ids}``.
+
+    The simulation analogue of the heartbeat layer in ``core/procmesh.py``
+    — tests and the launcher's ``--verify`` reference replay an observed
+    fault plan through this class.  Round 0 must start with the full
+    fleet; every planned shape is validated (non-empty, ids in range,
+    no duplicates) before any JAX work.
+    """
+
+    def __init__(self, p: int,
+                 plan: Optional[Dict[int, Sequence[int]]] = None):
+        self.p = int(p)
+        full = tuple(range(self.p))
+        entries = {0: full}
+        for r, live in (plan or {}).items():
+            live_t = tuple(sorted(int(s) for s in live))
+            if not live_t:
+                raise ValueError(
+                    f"PlannedMembership: round {r} leaves no live workers")
+            if len(set(live_t)) != len(live_t):
+                raise ValueError(
+                    f"PlannedMembership: duplicate worker ids at round {r}: "
+                    f"{live}")
+            if live_t[0] < 0 or live_t[-1] >= self.p:
+                raise ValueError(
+                    f"PlannedMembership: worker ids at round {r} out of "
+                    f"range for p={self.p}: {live}")
+            entries[int(r)] = live_t
+        if entries[0] != full:
+            raise ValueError(
+                "PlannedMembership: round 0 must start with the full fleet "
+                f"(0..{self.p - 1}); drop/rejoin at later boundaries")
+        self._plan = dict(sorted(entries.items()))
+
+    def live(self, round_: int) -> Tuple[int, ...]:
+        """Live original worker ids in effect at ``round_``."""
+        out = self._plan[0]
+        for r, live in self._plan.items():
+            if r <= round_:
+                out = live
+            else:
+                break
+        return out
+
+    def change_rounds(self) -> Tuple[int, ...]:
+        return tuple(self._plan)
+
+
+# ---------------------------------------------------------------------------
+# Reshard / resync — the state-handover algebra
+# ---------------------------------------------------------------------------
+
+def reshard_problem(sp: ShardedProblem, p_new: int) -> ShardedProblem:
+    """Contiguously re-shard the GLOBAL dataset over ``p_new`` workers.
+
+    The merged sample order is invariant, so the global objective (and the
+    rel-grad-norm metric) is unchanged; ``n`` must divide evenly — a
+    silent truncation would change the objective mid-run."""
+    merged = sp.merged()
+    if merged.n % p_new:
+        raise ValueError(
+            f"elastic reshard: n={merged.n} samples do not divide over "
+            f"p={p_new} workers; pick worker counts that divide n")
+    return shard_problem(merged, p_new)
+
+
+def merge_tables(tables) -> np.ndarray:
+    """Per-worker ``(p, ns)`` VR tables -> the merged ``(n,)`` layout in
+    global sample order (contiguous shards concatenate in worker order)."""
+    return np.asarray(tables).reshape(-1)
+
+
+def resync_state(x_c, gbar_c, table, p_new: int) -> AsyncState:
+    """The wave-boundary handover state at a new shape: central pair
+    retained, merged table re-sharded, per-worker fetch/old vectors reset
+    to the central values (the ``async_init`` construction — the workers'
+    "previous contribution" equals the current central state, so the
+    first post-change events do not double-count it)."""
+    table = jnp.asarray(table).reshape(-1)
+    if table.shape[0] % p_new:
+        raise ValueError(
+            f"elastic reshard: n={table.shape[0]} table entries do not "
+            f"divide over p={p_new} workers")
+    x_c = jnp.asarray(x_c)
+    gbar_c = jnp.asarray(gbar_c)
+    return AsyncState(
+        x_c=x_c, gbar_c=gbar_c, tables=table.reshape(p_new, -1),
+        x_old=jnp.tile(x_c, (p_new, 1)),
+        gbar_old=jnp.tile(gbar_c, (p_new, 1)),
+        x_fetch=jnp.tile(x_c, (p_new, 1)),
+        gbar_fetch=jnp.tile(gbar_c, (p_new, 1)))
+
+
+def survivor_speeds(speeds, live: Sequence[int]):
+    """Compact per-slot speeds for the surviving fleet (speeds stay
+    indexed by ORIGINAL worker id so a rejoining worker gets its own speed
+    back)."""
+    if speeds is None:
+        return None
+    return tuple(float(speeds[s]) for s in live)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic continuation plan
+# ---------------------------------------------------------------------------
+
+def segment_plan(k_run, start_round: int, rounds: int, p: int, speeds=None):
+    """``(sched_rows, key_rows)`` for the shape segment beginning at
+    ``start_round``: the event schedule over the remaining rounds at width
+    p, with per-event keys drawn from the continuation stream
+    ``fold_in(fold_in(k_run, start_round), p)`` (round 0 consumes
+    ``k_run`` itself, so a never-interrupted elastic run is bit-identical
+    to ``run_async``)."""
+    if start_round == 0:
+        k_seg = k_run
+    else:
+        k_seg = jax.random.fold_in(jax.random.fold_in(k_run, start_round), p)
+    schedule = runtime.event_schedule(p, rounds - start_round, speeds)
+    keys = jax.random.split(k_seg, schedule.size)
+    return runtime.per_round(schedule, keys, p)
+
+
+def continue_async(sp: ShardedProblem, st: AsyncState, *, eta: float,
+                   g0, start_round: int, rounds: int, k_run,
+                   speeds=None):
+    """The UNINTERRUPTED run at the (possibly new) shape from a
+    handed-over state — the trajectory every elastic/dropout pin compares
+    against.  ``speeds`` are the compact per-slot speeds of this shape.
+    Returns ``(state, rels)`` for rounds ``start_round..rounds``."""
+    sched_rows, key_rows = segment_plan(k_run, start_round, rounds, sp.p,
+                                        speeds)
+    # _async_scan donates its state; keep the caller's copy intact
+    st = jax.tree_util.tree_map(jnp.array, st)
+    return _async_scan(sp, st, eta, g0, jnp.asarray(sched_rows), key_rows)
+
+
+# ---------------------------------------------------------------------------
+# The elastic event-serial engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ElasticResult:
+    """Uniform elastic return: full metric trajectory (one entry per
+    round, across every shape), final state + live set, and the
+    membership transitions that actually took effect."""
+
+    rels: np.ndarray
+    state: AsyncState
+    live: Tuple[int, ...]
+    transitions: List[dict]
+
+    @property
+    def final_rel(self) -> float:
+        return float(self.rels[-1])
+
+
+def _emit_transition(rec, r: int, live_old, live_new, detect_s: float):
+    lost = sorted(set(live_old) - set(live_new))
+    joined = sorted(set(live_new) - set(live_old))
+    if rec is not None:
+        for s in lost:
+            rec.event("worker_lost", worker=int(s), round=int(r),
+                      detect_s=float(detect_s))
+        for s in joined:
+            rec.event("worker_joined", worker=int(s), round=int(r))
+        rec.event("repartition", round=int(r), p_old=len(live_old),
+                  p_new=len(live_new), survivors=[int(s) for s in live_new])
+    return {"round": int(r), "p_old": len(live_old), "p_new": len(live_new),
+            "lost": [int(s) for s in lost],
+            "joined": [int(s) for s in joined],
+            "live": [int(s) for s in live_new]}
+
+
+def run_async_elastic(sp: ShardedProblem, *, eta: float, rounds: int, key,
+                      membership: Optional[PlannedMembership] = None,
+                      speeds=None, checkpoint_dir: Optional[str] = None,
+                      checkpoint_every: int = 0) -> ElasticResult:
+    """CentralVR-Async (Algorithm 3) under a deterministic membership
+    plan: the event-serial reference for elastic execution.
+
+    With the default (constant) membership this is bit-identical to
+    ``run_async(..., backend="vmap")``; at each planned change the engine
+    re-partitions per the module contract above.  ``checkpoint_dir``
+    saves a mesh-shape-portable checkpoint (``checkpoint/elastic.py``) at
+    every repartition boundary and, when ``checkpoint_every`` is set, at
+    that round cadence too."""
+    p0 = sp.p
+    membership = membership or PlannedMembership(p0)
+    if membership.p != p0:
+        raise ValueError(
+            f"membership plan is for p={membership.p}, problem has p={p0}")
+    if speeds is not None and len(speeds) != p0:
+        raise ValueError(
+            f"speeds must have one entry per original worker (p={p0}), "
+            f"got {len(speeds)}")
+    # pre-JAX validation of every planned shape
+    n = p0 * sp.ns
+    for r in membership.change_rounds():
+        reshard_ok = n % len(membership.live(r)) == 0
+        if not reshard_ok:
+            raise ValueError(
+                f"elastic reshard: membership at round {r} has "
+                f"p={len(membership.live(r))}, which does not divide "
+                f"n={n}")
+
+    k_init, k_run = jax.random.split(key)
+    merged = sp.merged()
+    g0 = convex.grad_norm0(merged)
+    st = async_init(sp, eta, k_init)
+    live = tuple(range(p0))
+    sp_cur = sp
+
+    stops = {rounds}
+    stops.update(c for c in membership.change_rounds() if 0 < c < rounds)
+    if checkpoint_dir and checkpoint_every:
+        stops.update(range(checkpoint_every, rounds, checkpoint_every))
+    rec = obs_recorder.active()
+    transitions: List[dict] = []
+    rels_out: List[np.ndarray] = []
+    sched_rows = key_rows = None
+    seg_start = 0
+    r = 0
+    for stop in sorted(stops):
+        new_live = membership.live(r)
+        if new_live != live:
+            transitions.append(
+                _emit_transition(rec, r, live, new_live, 0.0))
+            table = merge_tables(st.tables)
+            sp_cur = reshard_problem(sp, len(new_live))
+            st = resync_state(st.x_c, st.gbar_c, table, len(new_live))
+            live = new_live
+            seg_start = r
+            sched_rows = None
+        if sched_rows is None:
+            sched_rows, key_rows = segment_plan(
+                k_run, seg_start, rounds, len(live),
+                survivor_speeds(speeds, live))
+        lo, hi = r - seg_start, stop - seg_start
+        st, rels = _async_scan(sp_cur, st, eta, g0,
+                               jnp.asarray(sched_rows[lo:hi]),
+                               key_rows[lo:hi])
+        rels_out.append(np.asarray(rels))
+        r = stop
+        if checkpoint_dir and r < rounds:
+            from repro.checkpoint import elastic as ckpt
+            ckpt.save_elastic(f"{checkpoint_dir}/elastic_{r:05d}", st,
+                              round_=r, live=live, p0=p0)
+    return ElasticResult(rels=np.concatenate(rels_out), state=st,
+                         live=live, transitions=transitions)

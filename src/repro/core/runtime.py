@@ -123,6 +123,26 @@ def event_schedule(p: int, rounds: int, speeds=None) -> np.ndarray:
     return np.ascontiguousarray(workers.ravel()[order[:total]])
 
 
+def repartition_schedule(survivors, rounds: int, speeds=None):
+    """The deterministic survivor schedule after an elastic membership
+    change (DESIGN.md §Multi-host & elasticity): the k-th smallest
+    surviving ORIGINAL worker id becomes compact slot k, and the
+    remaining ``rounds`` are re-planned as a fresh ``event_schedule`` at
+    the new width from the survivors' own speeds (``speeds`` stays
+    indexed by original id).  Returns ``(schedule, id_map)`` where
+    ``schedule`` is over compact slots and ``id_map[slot]`` is the
+    original worker id — nothing depends on when the failure was
+    detected, only on the boundary it took effect at."""
+    id_map = np.asarray(sorted(int(s) for s in survivors), dtype=np.int32)
+    if id_map.size == 0:
+        raise ValueError("repartition_schedule: no survivors")
+    if np.unique(id_map).size != id_map.size:
+        raise ValueError(f"repartition_schedule: duplicate survivor ids "
+                         f"{survivors}")
+    sub = None if speeds is None else [float(speeds[s]) for s in id_map]
+    return event_schedule(id_map.size, rounds, sub), id_map
+
+
 def _event_schedule_loop(p: int, rounds: int, speeds) -> np.ndarray:
     """Seed implementation of the speed-weighted schedule, kept verbatim as
     the byte-identical reference for the vectorized merge above."""

@@ -139,11 +139,23 @@ class RunSpec:
                     hot-path): False (unfused oracle, default), True
                     (force; interpret mode off-TPU), or "auto" (fused
                     iff a compiled Pallas backend is present)
+      topology      "local" (one process, default) or "process" (a
+                    ``jax.distributed`` process mesh — the run must be
+                    launched through ``repro.launch.distributed``;
+                    CentralVR-Sync/Async only, DESIGN.md §Multi-host &
+                    elasticity)
+      elastic       tolerate worker dropout/rejoin at wave boundaries
+                    (CentralVR-Async only): under topology="process" the
+                    heartbeat/membership protocol runs at every round
+                    boundary; under topology="local" the run replays a
+                    deterministic ``membership=`` plan passed to
+                    :func:`solve`
 
     All cross-field validation happens here: asking for an impossible
     combination (spmd on a serial algorithm, speeds on a synchronous one,
-    fetch="instant" under spmd, ...) raises at construction with the
-    offending field named, before any JAX work.
+    fetch="instant" under spmd, elastic on a synchronous algorithm, ...)
+    raises at construction with the offending field named, before any JAX
+    work.
     """
 
     algo: str
@@ -159,6 +171,8 @@ class RunSpec:
     sampling: str = "permutation"
     decay: float = 0.0
     fused: Any = False
+    topology: str = "local"
+    elastic: bool = False
 
     def __post_init__(self):
         if self.algo not in REGISTRY:
@@ -278,6 +292,37 @@ class RunSpec:
                 "centralvr_sync, centralvr_async, dsvrg, dsaga, svrg, "
                 "saga) exposes fused=")
 
+        # multi-host topology + elasticity (DESIGN.md §Multi-host &
+        # elasticity) — validated before any JAX work, like everything
+        # else here, so a bad launch fails in the parent, not the fleet
+        if self.topology not in ("local", "process"):
+            raise ValueError(
+                f"RunSpec.topology: unknown topology {self.topology!r}: "
+                "expected 'local' or 'process'")
+        _set("elastic", bool(self.elastic))
+        if self.topology == "process":
+            if self.algo not in ("centralvr_sync", "centralvr_async"):
+                raise ValueError(
+                    f"RunSpec.topology: algorithm {self.algo!r} has no "
+                    "process-mesh program; topology='process' supports "
+                    "centralvr_sync and centralvr_async")
+            if self.backend != "vmap":
+                raise ValueError(
+                    "RunSpec.backend: topology='process' runs each "
+                    "process's workers as local jitted programs; set "
+                    "backend='vmap' (the per-process spmd tier is the "
+                    "accelerator path, DESIGN.md §Multi-host & elasticity)")
+            if self.fused:
+                raise ValueError(
+                    "RunSpec.fused: the process-mesh engines pin "
+                    "bit-exactness against the unfused event-serial "
+                    "reference; fused= is not supported under "
+                    "topology='process'")
+        if self.elastic and self.algo != "centralvr_async":
+            raise ValueError(
+                f"RunSpec.elastic: only centralvr_async has wave "
+                f"boundaries to repartition at; got algo={self.algo!r}")
+
     @property
     def epochs(self) -> int:
         """Alias: the single-worker algorithms call rounds 'epochs'."""
@@ -319,6 +364,7 @@ class RunResult:
     grad_evals: Optional[np.ndarray] = None
     comms: Optional[dict] = None
     staleness: Optional[dict] = None
+    transitions: Optional[list] = None   # elastic membership changes
 
     @property
     def final_rel(self) -> float:
@@ -397,7 +443,8 @@ def _coerce_problem(spec: RunSpec, problem):
         f"{type(problem).__name__}")
 
 
-def solve(spec: RunSpec, problem, *, key=None, mesh=None) -> RunResult:
+def solve(spec: RunSpec, problem, *, key=None, mesh=None,
+          membership=None) -> RunResult:
     """Run ``spec`` against ``problem`` (a ``ConvexConfig``, ``Problem``,
     or ``ShardedProblem``) and return the uniform :class:`RunResult`.
 
@@ -416,8 +463,21 @@ def solve(spec: RunSpec, problem, *, key=None, mesh=None) -> RunResult:
         it; all drivers precompute their draws on the host (DESIGN.md §2);
       * the driver's return tuple is normalized to
         (state, final iterate, rels, grad_evals).
+
+    ``topology="process"`` routes to the process-mesh engines
+    (``core/procmesh.py``; requires a ``repro.launch.distributed`` world).
+    ``elastic=True`` under topology="local" replays the deterministic
+    ``membership=`` plan (a ``core.elastic.PlannedMembership``) through
+    ``run_async_elastic`` — the event-serial elastic reference.
     """
     entry = REGISTRY[spec.algo]
+    if membership is not None and not (spec.elastic
+                                       and spec.topology == "local"):
+        raise ValueError(
+            "solve(membership=...) is the deterministic dropout plan of a "
+            "LOCAL elastic run; it needs spec.elastic=True and "
+            "spec.topology='local' (process topology discovers membership "
+            "through heartbeats)")
     if spec.backend == "spmd":
         from repro.core import spmd
         spmd.force_host_devices(max(spec.p, 1))
@@ -441,7 +501,22 @@ def solve(spec: RunSpec, problem, *, key=None, mesh=None) -> RunResult:
 
     with runtime.traces_delta() as traces:
         t0 = time.perf_counter()
-        state, x, rels, grad_evals = entry.call(spec, problem, eta, key, mesh)
+        if spec.topology == "process":
+            from repro.core import procmesh
+            state, x, rels, transitions = procmesh.solve_process(
+                spec, problem, eta, key)
+            grad_evals = None
+        elif spec.elastic:
+            from repro.core import elastic as elasticmod
+            eres = elasticmod.run_async_elastic(
+                problem, eta=eta, rounds=spec.rounds, key=key,
+                membership=membership, speeds=spec.speeds)
+            state, x, rels = eres.state, eres.state.x_c, eres.rels
+            transitions, grad_evals = eres.transitions, None
+        else:
+            state, x, rels, grad_evals = entry.call(spec, problem, eta, key,
+                                                    mesh)
+            transitions = None
         rels = jax.block_until_ready(rels)
         wall = time.perf_counter() - t0
 
@@ -473,7 +548,8 @@ def solve(spec: RunSpec, problem, *, key=None, mesh=None) -> RunResult:
 
     res = RunResult(spec=resolved, rels=rels, x=x, state=state,
                     wall_s=wall, traces=traces, grad_evals=grad_evals,
-                    comms=comms, staleness=staleness)
+                    comms=comms, staleness=staleness,
+                    transitions=transitions)
     rec = obs_recorder.active()
     if rec is not None:
         rec.event("traces", **traces)

@@ -124,6 +124,36 @@ def worker_mesh(p: int) -> Mesh:
     return Mesh(np.asarray(devs[:p]), (WORKER_AXIS,))
 
 
+def process_worker_mesh(p: int) -> Mesh:
+    """A GLOBAL 1-D worker mesh spanning every process of a
+    ``jax.distributed`` world (DESIGN.md §Multi-host & elasticity).
+
+    The execution model has three tiers: single-process vmap (the
+    event-serial reference), single-process spmd (this module's
+    ``worker_mesh`` over local simulated host devices), and the
+    multi-process tier, where each process owns a contiguous block of the
+    p workers (``procmesh.worker_blocks``).  On accelerator backends the
+    block maps onto this global mesh and the runners here execute it
+    under ``shard_map``; on CPU, XLA cannot compile cross-process
+    computations, so ``core/procmesh.py`` runs the blocks as local jitted
+    programs and exchanges wave-boundary deltas through the coordination
+    service instead — this helper then only validates the world shape.
+    """
+    devs = jax.devices()
+    if len(devs) < p:
+        raise RuntimeError(
+            f"process mesh needs {p} devices across the world, found "
+            f"{len(devs)} over {jax.process_count()} process(es); grow "
+            "the world or lower p")
+    if jax.process_count() > 1 and p % jax.process_count():
+        raise RuntimeError(
+            f"process mesh: p={p} workers do not divide evenly over "
+            f"{jax.process_count()} processes; shard_map needs equal "
+            "per-process blocks (the KV-store engines in core/procmesh.py "
+            "accept uneven blocks)")
+    return Mesh(np.asarray(devs[:p]), (WORKER_AXIS,))
+
+
 def _check_mesh(mesh: Optional[Mesh], p: int) -> Mesh:
     mesh = mesh if mesh is not None else worker_mesh(p)
     if mesh.devices.size != p:

@@ -29,10 +29,30 @@ def make_worker_mesh(p: int, *, simulate_host_devices: bool = False):
     forces the CPU host platform to present p devices through the shared
     ``spmd.force_host_devices`` helper — call it before the first jax
     operation (the helper errors once the backend is initialized)."""
+    from jax._src import xla_bridge
+
     from repro.core import spmd
 
     if simulate_host_devices:
         spmd.force_host_devices(p)
+        # force_host_devices validates against the GLOBAL device count,
+        # which in a jax.distributed world can satisfy p while THIS
+        # process holds fewer — worker_mesh would then build a mesh over
+        # devices it cannot address and fail much later with an opaque
+        # shard_map shape error.  Catch the mismatch here, with the
+        # remediation options spelled out (DESIGN.md §2).
+        if (xla_bridge.backends_are_initialized()
+                and jax.local_device_count() < p):
+            raise RuntimeError(
+                f"make_worker_mesh(p={p}, simulate_host_devices=True): jax "
+                f"is already initialized and this process has only "
+                f"{jax.local_device_count()} local device(s) "
+                f"(global count: {jax.device_count()}).  Simulated host "
+                "devices must be configured before the first jax "
+                "operation.  Either start a fresh process, call "
+                "spmd.force_host_devices(p) before any jax op, export "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={p}, "
+                "or use backend='vmap' (DESIGN.md §2)")
     return spmd.worker_mesh(p)
 
 

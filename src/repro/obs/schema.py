@@ -33,7 +33,16 @@ PROVENANCE_KEYS = ("spec", "final_rel", "rels_tail", "rounds_recorded",
                    "wall_s", "traces", "comms", "staleness", "schema_v")
 PROVENANCE_SPEC_KEYS = ("algo", "p", "eta", "rounds", "backend", "fetch",
                         "speeds", "tau", "seed", "metric_every", "sampling",
-                        "decay", "fused")
+                        "decay", "fused", "topology", "elastic")
+
+# Elastic membership events (DESIGN.md §Multi-host & elasticity): the
+# required payload of each named event, pinned so the multihost-smoke CI
+# lane can validate a captured dropout run structurally.
+EVENT_FIELDS = {
+    "worker_lost": ("worker", "round", "detect_s"),
+    "worker_joined": ("worker", "round"),
+    "repartition": ("round", "p_old", "p_new", "survivors"),
+}
 
 
 class SchemaError(ValueError):
@@ -62,6 +71,12 @@ def validate_row(row: dict) -> dict:
         raise SchemaError(f"span dur_s is not a number: {row!r}")
     if kind == "metric" and not isinstance(row["value"], (int, float)):
         raise SchemaError(f"metric value is not a number: {row!r}")
+    if kind == "event" and row["name"] in EVENT_FIELDS:
+        missing = [k for k in EVENT_FIELDS[row["name"]] if k not in row]
+        if missing:
+            raise SchemaError(
+                f"{row['name']} event missing required fields {missing}: "
+                f"{row!r}")
     return row
 
 

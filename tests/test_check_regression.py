@@ -230,9 +230,49 @@ def test_serve_without_gated_rows_fails(tmp_path):
     assert "no gated engine rows" in r.stderr
 
 
+def _run_compile(tmp_path, cold_s, ceiling):
+    drivers = {"rows": [dict(_drivers_artifact(2.0)["rows"][0],
+                             **({} if cold_s is None
+                                else {"cold_s": cold_s}))]}
+    args = [sys.executable, SCRIPT, "--floor", "1.0",
+            "--compile-floor", str(ceiling)]
+    for flag, payload, fname in (("--path", drivers, "drv.json"),
+                                 ("--train-path", _train_artifact(3.0),
+                                  "trn.json"),
+                                 ("--serve-path", _serve_artifact(),
+                                  "srv.json")):
+        p = tmp_path / fname
+        p.write_text(json.dumps(payload))
+        args += [flag, str(p)]
+    return subprocess.run(args, capture_output=True, text=True)
+
+
+def test_compile_floor_gates_cold_s(tmp_path):
+    r = _run_compile(tmp_path, cold_s=45.0, ceiling=10)
+    assert r.returncode == 1
+    assert "compile ceiling" in r.stdout
+    assert "drivers/sync-p2" in r.stderr
+
+
+def test_compile_floor_passes_within_ceiling(tmp_path):
+    r = _run_compile(tmp_path, cold_s=45.0, ceiling=100)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "within the 100s compile ceiling" in r.stdout
+
+
+def test_compile_floor_exempts_rows_without_cold_s(tmp_path):
+    """Rows predating the cold_s field (or derived twins that never
+    measure a cold call) are printed as exempt, not failed."""
+    r = _run_compile(tmp_path, cold_s=None, ceiling=10)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "exempt: no-cold" in r.stdout
+
+
 def test_committed_artifacts_pass():
     """The artifacts at the repo root (regenerated by the CI bench lane)
-    satisfy the gate this repo ships with."""
-    r = subprocess.run([sys.executable, SCRIPT, "--floor", "1.0"],
+    satisfy the gate this repo ships with — including the compile-time
+    ceiling the bench-smoke lane passes."""
+    r = subprocess.run([sys.executable, SCRIPT, "--floor", "1.0",
+                        "--compile-floor", "120"],
                        capture_output=True, text=True, cwd=ROOT)
     assert r.returncode == 0, r.stdout + r.stderr

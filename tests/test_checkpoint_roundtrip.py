@@ -81,6 +81,53 @@ def test_lm_epoch_scan_resume_continues_trajectory(tmp_path):
                                full.final_eval_loss, **TOL)
 
 
+def test_elastic_roundtrip_across_mesh_shapes(tmp_path):
+    """Elastic checkpoint portability (DESIGN.md §Multi-host &
+    elasticity): a p=4 checkpoint restored at p=3 and p=2 re-shards the
+    VR tables losslessly, and the continued trajectory is bit-identical
+    (x64, conftest) to the elastic run that dropped to that shape at the
+    same wave boundary — the checkpoint round-trip adds nothing."""
+    from repro.checkpoint import elastic as eckpt
+    from repro.core import elastic
+
+    cfg = ConvexConfig(problem="logistic", n=48, d=8, seed=0, workers=4)
+    sp = distributed.make_distributed(jax.random.PRNGKey(0), cfg)
+    eta = convex.auto_eta(sp.merged())
+    g0 = convex.grad_norm0(sp.merged())
+    key = jax.random.PRNGKey(0)
+    k_run = jax.random.split(key)[1]
+    speeds = (1.0, 1.0, 2.0, 4.0)
+    rounds = 6
+
+    elastic.run_async_elastic(sp, eta=eta, rounds=rounds, key=key,
+                              speeds=speeds, checkpoint_dir=str(tmp_path),
+                              checkpoint_every=3)
+    path = str(tmp_path / "elastic_00003")
+    man = eckpt.load_manifest(path)
+    assert man["p"] == 4 and man["round"] == 3
+
+    for live in ((0, 2, 3), (0, 3)):
+        p_new = len(live)
+        st_new, _ = eckpt.restore_elastic(path, p_new)
+        # cfg.n is per-worker: 4 * 48 = 192 total samples re-shard
+        assert st_new.tables.shape == (p_new, 4 * 48 // p_new)
+        # re-sharding permutes nothing: the merged table is invariant
+        st_same, _ = eckpt.restore_elastic(path)
+        np.testing.assert_array_equal(
+            elastic.merge_tables(st_new.tables),
+            elastic.merge_tables(st_same.tables))
+
+        _, rels_cont = elastic.continue_async(
+            elastic.reshard_problem(sp, p_new), st_new, eta=eta, g0=g0,
+            start_round=3, rounds=rounds, k_run=k_run,
+            speeds=elastic.survivor_speeds(speeds, live))
+        res_drop = elastic.run_async_elastic(
+            sp, eta=eta, rounds=rounds, key=key, speeds=speeds,
+            membership=elastic.PlannedMembership(4, {3: live}))
+        np.testing.assert_array_equal(np.asarray(rels_cont),
+                                      res_drop.rels[3:])
+
+
 def test_sync_state_roundtrip(tmp_path):
     """Distributed driver state (stacked per-worker tables) survives the
     flat-npz round-trip with structure and values intact."""

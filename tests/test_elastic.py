@@ -1,0 +1,173 @@
+"""Elastic wave execution (DESIGN.md §Multi-host & elasticity).
+
+The elastic engine runs CentralVR-Async under a membership plan whose
+changes take effect only at round (wave) boundaries.  Its determinism
+contract is pinned here in x64 (conftest):
+
+  * constant membership is bit-identical to ``distributed.run_async``;
+  * a post-dropout trajectory equals a checkpoint of the SAME run
+    restored at the survivor count and continued with the segment key
+    stream — the elastic run is exactly "save + reshard + resume";
+  * repeated runs are bit-identical (no wall-clock in the math);
+  * membership transitions emit ``worker_lost`` / ``worker_joined`` /
+    ``repartition`` telemetry that validates against the pinned schema.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import elastic as ckpt
+from repro.config import ConvexConfig
+from repro.core import convex, distributed, elastic
+from repro.obs import recorder, schema
+
+
+@pytest.fixture(scope="module")
+def prob4():
+    cfg = ConvexConfig(problem="logistic", n=48, d=8, seed=0, workers=4)
+    sp = distributed.make_distributed(jax.random.PRNGKey(0), cfg)
+    return sp, convex.auto_eta(sp.merged())
+
+
+SPEEDS = (1.0, 1.0, 2.0, 4.0)
+ROUNDS = 6
+KEY = jax.random.PRNGKey(0)
+
+
+def test_constant_membership_matches_run_async(prob4):
+    sp, eta = prob4
+    _, rels_ref = distributed.run_async(sp, eta=eta, rounds=ROUNDS,
+                                        key=KEY, speeds=SPEEDS)
+    res = elastic.run_async_elastic(sp, eta=eta, rounds=ROUNDS, key=KEY,
+                                    speeds=SPEEDS)
+    np.testing.assert_array_equal(np.asarray(rels_ref), res.rels)
+    assert res.transitions == []
+    assert tuple(res.live) == tuple(range(4))
+
+
+def test_chunked_checkpointing_matches_whole_run(prob4, tmp_path):
+    sp, eta = prob4
+    res_whole = elastic.run_async_elastic(sp, eta=eta, rounds=ROUNDS,
+                                          key=KEY, speeds=SPEEDS)
+    res_chunk = elastic.run_async_elastic(sp, eta=eta, rounds=ROUNDS,
+                                          key=KEY, speeds=SPEEDS,
+                                          checkpoint_dir=str(tmp_path),
+                                          checkpoint_every=2)
+    np.testing.assert_array_equal(res_whole.rels, res_chunk.rels)
+    latest = ckpt.latest_elastic(str(tmp_path))
+    assert latest is not None
+    man = ckpt.load_manifest(latest)
+    # boundaries are interior: with checkpoint_every=2 the last save
+    # happens at round 4, not at the run's end
+    assert man["p"] == 4 and man["round"] == 4
+
+
+def test_dropout_prefix_and_determinism(prob4):
+    sp, eta = prob4
+    _, rels_ref = distributed.run_async(sp, eta=eta, rounds=ROUNDS,
+                                        key=KEY, speeds=SPEEDS)
+    plan = elastic.PlannedMembership(4, {3: (0, 2, 3)})
+    res = elastic.run_async_elastic(sp, eta=eta, rounds=ROUNDS, key=KEY,
+                                    speeds=SPEEDS, membership=plan)
+    # before the drop the trajectory is the uninterrupted one, bit-exact
+    np.testing.assert_array_equal(np.asarray(rels_ref)[:3], res.rels[:3])
+    assert [t["round"] for t in res.transitions] == [3]
+    assert res.transitions[0]["lost"] == [1]
+    assert res.transitions[0]["live"] == [0, 2, 3]
+    # deterministic across repeats
+    res2 = elastic.run_async_elastic(sp, eta=eta, rounds=ROUNDS, key=KEY,
+                                     speeds=SPEEDS, membership=plan)
+    np.testing.assert_array_equal(res.rels, res2.rels)
+    assert res.transitions == res2.transitions
+
+
+@pytest.mark.parametrize("live", [(0, 2, 3), (0, 3)])
+def test_ckpt_resume_at_new_shape_matches_elastic_run(prob4, tmp_path, live):
+    """The acceptance pin: save p=4 at the boundary, restore at the
+    survivor count, continue — must equal the elastic dropout run."""
+    sp, eta = prob4
+    g0 = convex.grad_norm0(sp.merged())
+    k_run = jax.random.split(KEY)[1]
+    p_new = len(live)
+
+    plan = elastic.PlannedMembership(4, {3: live})
+    res_drop = elastic.run_async_elastic(sp, eta=eta, rounds=ROUNDS,
+                                         key=KEY, speeds=SPEEDS,
+                                         membership=plan)
+
+    elastic.run_async_elastic(sp, eta=eta, rounds=ROUNDS, key=KEY,
+                              speeds=SPEEDS, checkpoint_dir=str(tmp_path),
+                              checkpoint_every=3)
+    path = str(tmp_path / "elastic_00003")
+    st_new, man = ckpt.restore_elastic(path, p_new)
+    assert man["p"] == 4
+    assert st_new.tables.shape[0] == p_new
+    _, rels_cont = elastic.continue_async(
+        elastic.reshard_problem(sp, p_new), st_new, eta=eta, g0=g0,
+        start_round=3, rounds=ROUNDS, k_run=k_run,
+        speeds=elastic.survivor_speeds(SPEEDS, live))
+    np.testing.assert_array_equal(np.asarray(rels_cont), res_drop.rels[3:])
+
+
+def test_rejoin_plan_runs_and_reports_transitions(prob4):
+    sp, eta = prob4
+    plan = elastic.PlannedMembership(4, {2: (0, 1, 3), 4: (0, 1, 2, 3)})
+    res = elastic.run_async_elastic(sp, eta=eta, rounds=ROUNDS, key=KEY,
+                                    speeds=SPEEDS, membership=plan)
+    assert [t["round"] for t in res.transitions] == [2, 4]
+    assert res.transitions[0]["lost"] == [2]
+    assert res.transitions[1]["joined"] == [2]
+    assert np.isfinite(res.rels).all()
+    assert res.final_rel < 1.0
+
+
+def test_transitions_emit_schema_valid_events(prob4, tmp_path):
+    sp, eta = prob4
+    plan = elastic.PlannedMembership(4, {2: (0, 1, 3), 4: (0, 1, 2, 3)})
+    path = str(tmp_path / "elastic.jsonl")
+    recorder.enable(path, run_id="test-elastic")
+    try:
+        elastic.run_async_elastic(sp, eta=eta, rounds=ROUNDS, key=KEY,
+                                  speeds=SPEEDS, membership=plan)
+    finally:
+        recorder.disable()
+    rows = schema.load_rows(path)
+    assert schema.validate_rows(rows) == len(rows)
+    names = [r["name"] for r in rows if r["kind"] == "event"]
+    assert names.count("worker_lost") == 1
+    assert names.count("worker_joined") == 1
+    assert names.count("repartition") == 2
+    lost = next(r for r in rows if r["name"] == "worker_lost")
+    assert lost["worker"] == 2 and lost["round"] == 2
+    repart = [r for r in rows if r["name"] == "repartition"]
+    assert [(r["p_old"], r["p_new"]) for r in repart] == [(4, 3), (3, 4)]
+    assert repart[0]["survivors"] == [0, 1, 3]
+
+
+def test_membership_and_reshard_validation(prob4):
+    sp, eta = prob4
+    with pytest.raises(ValueError, match="full fleet"):
+        elastic.PlannedMembership(4, {0: (0, 1)})
+    with pytest.raises(ValueError, match="no live workers"):
+        elastic.PlannedMembership(4, {2: ()})
+    with pytest.raises(ValueError, match="duplicate"):
+        elastic.PlannedMembership(4, {2: (1, 1)})
+    with pytest.raises(ValueError, match="out of"):
+        elastic.PlannedMembership(4, {2: (0, 7)})
+    # n=44 shards over 4 and 2 but not over 3 survivors: validated
+    # up front, before any jax work
+    cfg = ConvexConfig(problem="ridge", n=44, d=4, seed=1, workers=4)
+    sp44 = distributed.make_distributed(jax.random.PRNGKey(1), cfg)
+    with pytest.raises(ValueError, match="does not divide"):
+        elastic.run_async_elastic(
+            sp44, eta=eta, rounds=ROUNDS, key=KEY,
+            membership=elastic.PlannedMembership(4, {2: (0, 1, 2)}))
+    with pytest.raises(ValueError, match="plan is for"):
+        elastic.run_async_elastic(
+            sp, eta=eta, rounds=ROUNDS, key=KEY,
+            membership=elastic.PlannedMembership(3))
+    with pytest.raises(ValueError, match="do not divide"):
+        elastic.reshard_problem(sp, 5)
+    with pytest.raises(ValueError, match="do not divide"):
+        elastic.resync_state(np.zeros(8), np.zeros(8), np.zeros(48), 5)
