@@ -37,6 +37,15 @@ with their overhead-vs-off ratio but never gated: they measure the
 recorder's observation cost, and the telemetry-OFF base rows are what
 the floors protect (enabling telemetry must not be able to fail CI).
 
+PROX rows (``prox`` set, the ``-l1``/``-elasticnet`` twins) are printed
+with their overhead-vs-smooth ratio but never gated, and are excluded
+from the legacy scan-vs-host gates (the seed host loops predate
+composite objectives).  The SPARSE row (``speedup_sparse_vs_dense``)
+gates the lazy CSR driver against the dense prox'd oracle at the sparse
+floor (1.0) whenever its ``nnz_frac <= 0.05`` — the low-density regime
+the lazy catch-up exists for; denser or ``estimated: true`` rows are
+printed as exempt.
+
     python benchmarks/check_regression.py [--path BENCH_drivers.json]
                                           [--train-path BENCH_train.json]
                                           [--serve-path BENCH_serve.json]
@@ -130,6 +139,53 @@ def _gate_fused(rows, floor: float, report):
     return bad, gated
 
 
+def _show_prox(rows, report):
+    """Prox twins: overhead vs the smooth configuration, printed and
+    reported but never gated — the host loops they would gate against
+    predate composite objectives, and the smooth base rows already hold
+    the floor."""
+    for r in rows:
+        over = r.get("overhead_vs_smooth")
+        if over is None:
+            continue
+        print(f"{r['name']}: prox overhead {over:.2f}x vs smooth "
+              "[informational]")
+        report.append({"name": r["name"], "gate": "overhead_vs_smooth",
+                       "value": over, "floor": None,
+                       "status": "informational"})
+
+
+def _gate_sparse(rows, floor: float, report):
+    """Gate sparse-lazy rows on ``speedup_sparse_vs_dense`` at the floor
+    when the density qualifies (``nnz_frac <= 0.05`` — the regime the
+    lazy catch-up exists for); denser rows and ``estimated: true`` rows
+    are printed as exempt."""
+    bad = []
+    gated = 0
+    for r in rows:
+        speedup = r["speedup_sparse_vs_dense"]
+        frac = r.get("nnz_frac", 1.0)
+        if r.get("estimated") or frac > 0.05:
+            why = "estimated" if r.get("estimated") else "dense"
+            print(f"{r['name']}: sparse vs dense {speedup:.2f}x warm "
+                  f"@nnz/d={frac:.2%} [exempt: {why}]")
+            report.append({"name": r["name"],
+                           "gate": "speedup_sparse_vs_dense",
+                           "value": speedup, "floor": None,
+                           "status": f"exempt:{why}"})
+            continue
+        gated += 1
+        status = "ok" if speedup >= floor else "REGRESSION"
+        print(f"{r['name']}: sparse vs dense {speedup:.2f}x warm "
+              f"@nnz/d={frac:.2%} [{status}]")
+        report.append({"name": r["name"],
+                       "gate": "speedup_sparse_vs_dense",
+                       "value": speedup, "floor": floor, "status": status})
+        if speedup < floor:
+            bad.append(r["name"])
+    return bad, gated
+
+
 def _gate_compile(rows, ceiling: float, report):
     """Gate every row carrying ``cold_s`` (first-invocation wall clock,
     compile included) against the compile-time ceiling; rows without the
@@ -208,6 +264,10 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-prefill-floor", type=float, default=5.0,
                     help="minimum acceptable chunked-prefill speedup over "
                          "per-token prefill at prompt-len 128")
+    ap.add_argument("--sparse-floor", type=float, default=1.0,
+                    help="minimum acceptable sparse-lazy speedup over the "
+                         "dense prox'd oracle at nnz/d <= 5% (denser and "
+                         "estimated rows exempt)")
     ap.add_argument("--compile-floor", type=float, default=0.0,
                     help="maximum allowed cold_s (first invocation, "
                          "compile included) for any bench row; 0 disables "
@@ -228,8 +288,13 @@ def main(argv=None) -> int:
         compile_rows += rows
         fused_rows += [r for r in rows if r.get("fused")]
         _show_telemetry([r for r in rows if r.get("telemetry")], report)
+        _show_prox([r for r in rows
+                    if r.get("prox") and not r.get("sparse")], report)
+        sparse_rows = [r for r in rows
+                       if "speedup_sparse_vs_dense" in r]
         legacy = [r for r in rows
-                  if not r.get("fused") and not r.get("telemetry")]
+                  if not r.get("fused") and not r.get("telemetry")
+                  and not r.get("prox") and not r.get("sparse")]
         bad = _gate(legacy, "speedup_warm", args.floor, "scan vs host loop",
                     report)
         if bad:
@@ -239,6 +304,17 @@ def main(argv=None) -> int:
         else:
             print(f"all {len(legacy)} drivers at or above the "
                   f"{args.floor:.2f}x floor")
+        if sparse_rows:
+            bad, gated = _gate_sparse(sparse_rows, args.sparse_floor,
+                                      report)
+            if bad:
+                print(f"sparse-vs-dense speedup below "
+                      f"{args.sparse_floor:.2f}x floor for: "
+                      f"{', '.join(bad)}", file=sys.stderr)
+                failed = True
+            elif gated:
+                print(f"all {gated} gated sparse rows at or above the "
+                      f"{args.sparse_floor:.2f}x floor")
 
     rows = _load_rows(args.train_path)
     if rows is None:

@@ -25,6 +25,16 @@ For each worker count p we measure, on CPU:
     module-level jit cache; the host loop compiles again);
   * epochs/sec derived from warm wall clock.
 
+Selected rows also get a PROX TWIN (``-l1``/``-elasticnet`` suffix): the
+same spec with a composite objective, measuring the prox epilogue's
+overhead vs the smooth twin (informational — prox rows are excluded from
+the legacy scan-vs-host gates, which pin pre-prox configurations). One
+SPARSE row (``centralvr-sparse``) runs the lazy CSR driver against the
+dense prox'd oracle on the same low-density problem;
+``speedup_sparse_vs_dense`` is gated at the 1.0x floor whenever
+``nnz_frac <= 0.05`` (lazy catch-up must not lose to the dense
+O(d)-per-step path it skips).
+
 Writes ``BENCH_drivers.json`` at the repo root (the acceptance artifact:
 scan beats host loop on wall clock at p=8) plus the standard results CSV.
 
@@ -104,6 +114,73 @@ def _fused_twin(base_row, spec, problem, epochs, repeat):
     }
 
 
+def _prox_twin(base_row, spec, problem, epochs, repeat, prox):
+    """The same run with a composite objective (``-l1``/``-elasticnet``
+    suffix): measures the prox epilogue's cost against the smooth twin.
+    Prox rows have no seed host-loop counterpart (the host loop predates
+    composite objectives), so ``check_regression`` prints their overhead
+    but excludes them from the legacy scan-vs-host gate."""
+    pspec = dataclasses.replace(spec, prox=prox)
+    cold, warm, res = timed_cold_warm(
+        lambda: solve(pspec, problem), repeat=repeat)
+    name = prox.split(":")[0]
+    return {
+        "name": base_row["name"] + "-" + name,
+        "prox": res.spec.prox,
+        "us_per_call": warm * 1e6,
+        "cold_s": cold,
+        "scan_cold_s": cold,
+        "scan_warm_s": warm,
+        "scan_compile_s": max(cold - warm, 0.0),
+        "smooth_warm_s": base_row["scan_warm_s"],
+        "scan_epochs_per_s": epochs / warm,
+        "overhead_vs_smooth": warm / base_row["scan_warm_s"],
+        "provenance": res.provenance(),
+        "derived": (f"prox:cold={cold:.3f}s,warm={warm:.3f}s;"
+                    f"vs_smooth={warm / base_row['scan_warm_s']:.2f}x"),
+    }
+
+
+def _sparse_row(quick: bool, repeat: int):
+    """Sparse lazy driver vs the dense prox'd oracle on the same problem
+    (``sampling="sparse"`` vs ``"permutation"``, identical trajectories):
+    the lazy catch-up must not lose to the dense O(d)-per-step path at
+    low density.  ``check_regression`` gates ``speedup_sparse_vs_dense``
+    at the 1.0x floor whenever ``nnz_frac <= 0.05``."""
+    from repro.prox import lazy
+
+    n, d, nnz = (96, 8192, 16) if quick else (128, 16384, 32)
+    rounds = 3 if quick else 4
+    prob = lazy.make_sparse_data(jax.random.PRNGKey(2), n, d, nnz)
+    eta = 0.05
+    dense_spec = RunSpec(algo="centralvr", eta=eta, rounds=rounds,
+                         prox="l1:0.001")
+    sparse_spec = dataclasses.replace(dense_spec, sampling="sparse")
+    d_cold, d_warm, _ = timed_cold_warm(
+        lambda: solve(dense_spec, prob), repeat=repeat)
+    s_cold, s_warm, res = timed_cold_warm(
+        lambda: solve(sparse_spec, prob), repeat=repeat)
+    speedup = d_warm / s_warm
+    return {
+        "name": "drivers/centralvr-sparse",
+        "sparse": True,
+        "prox": res.spec.prox,
+        "nnz_frac": nnz / d,
+        "n": n, "d": d, "nnz": nnz,
+        "us_per_call": s_warm * 1e6,
+        "cold_s": s_cold,
+        "scan_cold_s": s_cold,
+        "scan_warm_s": s_warm,
+        "scan_compile_s": max(s_cold - s_warm, 0.0),
+        "dense_warm_s": d_warm,
+        "scan_epochs_per_s": rounds / s_warm,
+        "speedup_sparse_vs_dense": speedup,
+        "provenance": res.provenance(),
+        "derived": (f"sparse:warm={s_warm:.3f}s;dense:warm={d_warm:.3f}s;"
+                    f"speedup={speedup:.2f}x@nnz/d={nnz / d:.2%}"),
+    }
+
+
 def _obs_twin(base_row, spec, problem):
     """The same run with telemetry ON (``-obs`` suffix): one recorded
     ``solve()``, with the warm cost read off the staged execute span (the
@@ -157,7 +234,10 @@ def run(quick: bool = False):
                 "drivers/centralvr-p1", spec, prob,
                 lambda: host_loop.run(prob, eta=eta, epochs=rounds, key=key),
                 rounds, repeat))
-            rows.append(_fused_twin(rows[-1], spec, prob, rounds, repeat))
+            base = rows[-1]
+            rows.append(_fused_twin(base, spec, prob, rounds, repeat))
+            rows.append(_prox_twin(base, spec, prob, rounds, repeat,
+                                   "l1:0.001"))
             continue
         cfg = ConvexConfig(problem="logistic", n=n, d=d, workers=p)
         sp = distributed.make_distributed(jax.random.PRNGKey(2), cfg)
@@ -168,7 +248,10 @@ def run(quick: bool = False):
             lambda: host_loop.run_sync(sp, eta=eta, rounds=rounds, key=key),
             rounds, repeat))
         if p == max(WORKER_COUNTS):
-            rows.append(_fused_twin(rows[-1], spec, sp, rounds, repeat))
+            base = rows[-1]
+            rows.append(_fused_twin(base, spec, sp, rounds, repeat))
+            rows.append(_prox_twin(base, spec, sp, rounds, repeat,
+                                   "elasticnet:0.001:0.0001"))
         spec = RunSpec(algo="centralvr_async", p=p, eta=eta, rounds=rounds)
         rows.append(_bench_pair(
             f"drivers/async-p{p}", spec, sp,
@@ -179,8 +262,11 @@ def run(quick: bool = False):
             rows.append(_fused_twin(base, spec, sp, rounds, repeat))
             rows.append(_obs_twin(base, spec, sp))
 
+    rows.append(_sparse_row(quick, repeat))
+
     p8 = [r for r in rows
-          if r["name"].endswith("-p8") and not r.get("telemetry")]
+          if r["name"].endswith("-p8") and not r.get("telemetry")
+          and not r.get("prox")]
     beats = all(r["speedup_warm"] > 1.0 for r in p8)
     payload = {
         "config": {"n_per_worker": n, "d": d, "rounds": rounds,

@@ -270,10 +270,12 @@ class MeshConfig:
 
 @dataclass(frozen=True)
 class ConvexConfig:
-    problem: str = "logistic"        # "logistic" | "ridge"
+    problem: str = "logistic"        # "logistic" | "ridge" | "huber" | ...
     n: int = 5000                    # samples (per worker in distributed runs)
     d: int = 20
     lam: float = 1e-4                # l2 regularizer (paper value)
+    outlier_frac: float = 0.0        # label corruption rate (robust runs)
+    huber_delta: float = 1.0         # Huber/pseudo-Huber transition scale
     learning_rate: float = 0.1
     epochs: int = 30
     seed: int = 0

@@ -23,6 +23,7 @@ from repro.core import convex, runtime
 from repro.core.convex import Problem
 from repro.core.distributed import ShardedProblem
 from repro.obs import stage as obs_stage
+from repro.prox import operators as proxops
 
 
 # ---------------------------------------------------------------------------
@@ -61,36 +62,55 @@ def run_sgd(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
                                  _label="solve/sgd")
 
 
-@functools.partial(jax.jit, static_argnames=("inner", "fused"),
+@functools.partial(jax.jit,
+                   static_argnames=("inner", "fused", "prox", "snapshot"),
                    donate_argnames=("x",))
-def _svrg_scan(prob: Problem, x, eta, g0, keys, inner: int, fused=None):
-    def one_epoch(x, k):
+def _svrg_scan(prob: Problem, x, eta, g0, keys, inner: int, fused=None,
+               prox=None, snapshot: str = "last", snap_idx=None):
+    """``snapshot`` picks the next epoch's anchor from the inner
+    trajectory — ``last`` (historical program, byte-identical), ``avg``
+    (mean of inner iterates), or ``rand`` (uniform inner iterate, index
+    host-precomputed in ``snap_idx``): the snapshot options of SVRG [17].
+    ``prox`` applies per inner step (proximal SVRG, Xiao & Zhang)."""
+    def one_epoch(x, xs):
+        if snapshot == "rand":
+            k, r = xs
+        else:
+            k = xs
         runtime.TRACES.inc("svrg_epoch")
         xbar = x
         gbar = convex.full_grad(prob, xbar)
         idx = jax.random.randint(k, (inner,), 0, prob.n)
 
         if fused is not None:
+            # snapshot=="last" here (run_svrg falls back to unfused for
+            # avg/rand); the fused tuple carries its own prox copy
             from repro.core import fused as fusedmod
             sbar = convex.scalar_residual_all(prob, xbar)
             x = fusedmod.svrg_steps(prob.A, prob.b, prob.kind, xbar, sbar,
                                     gbar, idx, fused)
-            return x, convex.rel_grad_norm(prob, x, g0)
+            return x, convex.rel_grad_norm(prob, x, g0, prox=prox, eta=eta)
 
         def body(x, i):
             g = ((convex.scalar_residual(prob, x, i)
                   - convex.scalar_residual(prob, xbar, i)) * prob.A[i]
                  + gbar + 2.0 * prob.lam * (x - xbar))
-            return x - eta * g, None
+            x = proxops.apply_prox(prox, x - eta * g, eta)
+            return x, (x if snapshot != "last" else None)
 
-        x, _ = jax.lax.scan(body, x, idx)
-        return x, convex.rel_grad_norm(prob, x, g0)
+        x, traj = jax.lax.scan(body, x, idx)
+        if snapshot == "avg":
+            x = traj.mean(0)
+        elif snapshot == "rand":
+            x = traj[r]
+        return x, convex.rel_grad_norm(prob, x, g0, prox=prox, eta=eta)
 
-    return jax.lax.scan(one_epoch, x, keys)
+    xs = (keys, snap_idx) if snapshot == "rand" else keys
+    return jax.lax.scan(one_epoch, x, xs)
 
 
 def run_svrg(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
-             inner: int = 0, fused=False):
+             inner: int = 0, fused=False, prox=None, snapshot: str = "last"):
     """SVRG [17]: snapshot + full gradient every epoch; update (3).
     Gradient evaluations per outer epoch: n (full grad) + 2*inner.
     Validation is a ``solver.RunSpec`` build (``inner`` maps onto the
@@ -98,21 +118,28 @@ def run_svrg(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(algo="svrg", eta=float(eta), rounds=epochs,
-                          tau=inner or None, fused=fused)
-    fused_t = fusedmod.make_params(spec.fused, eta, prob.lam)
+                          tau=inner or None, fused=fused,
+                          prox=proxops.canonical(prox), snapshot=snapshot)
+    px = proxops.parse(spec.prox) if spec.prox is not None else None
+    fused_t = (fusedmod.make_params(spec.fused, eta, prob.lam, prox=px)
+               if snapshot == "last" else None)
     inner = inner or prob.n
     x = jnp.zeros((prob.d,))
-    g0 = convex.grad_norm0(prob)
+    g0 = convex.grad_norm0(prob, prox=px, eta=eta)
     keys = jax.random.split(key, epochs)
+    snap_idx = (jax.random.randint(jax.random.fold_in(key, 1), (epochs,),
+                                   0, inner)
+                if snapshot == "rand" else None)
     # grad evals per epoch: n + 2*inner (3n at inner=n)
     return obs_stage.staged_call(_svrg_scan, prob, x, eta, g0, keys,
                                  _label="solve/svrg", inner=inner,
-                                 fused=fused_t)
+                                 fused=fused_t, prox=px, snapshot=snapshot,
+                                 snap_idx=snap_idx)
 
 
-@functools.partial(jax.jit, static_argnames=("fused",),
+@functools.partial(jax.jit, static_argnames=("fused", "prox"),
                    donate_argnames=("carry",))
-def _saga_scan(prob: Problem, carry, eta, g0, keys, fused=None):
+def _saga_scan(prob: Problem, carry, eta, g0, keys, fused=None, prox=None):
     def one_epoch(carry, k):
         runtime.TRACES.inc("saga_epoch")
         x, table, gbar = carry
@@ -123,7 +150,8 @@ def _saga_scan(prob: Problem, carry, eta, g0, keys, fused=None):
             x, table, gbar = fusedmod.saga_steps(
                 prob.A, prob.b, prob.kind, x, table, gbar, prob.n, idx,
                 fused)
-            return (x, table, gbar), convex.rel_grad_norm(prob, x, g0)
+            return (x, table, gbar), convex.rel_grad_norm(prob, x, g0,
+                                                          prox=prox, eta=eta)
 
         def body(carry, i):
             x, table, gbar = carry
@@ -131,33 +159,35 @@ def _saga_scan(prob: Problem, carry, eta, g0, keys, fused=None):
             v = (s_new - table[i]) * prob.A[i] + gbar + 2.0 * prob.lam * x
             gbar = gbar + (s_new - table[i]) * prob.A[i] / prob.n
             table = table.at[i].set(s_new)
-            return (x - eta * v, table, gbar), None
+            return (proxops.apply_prox(prox, x - eta * v, eta),
+                    table, gbar), None
 
         (x, table, gbar), _ = jax.lax.scan(body, (x, table, gbar), idx)
-        rel = convex.rel_grad_norm(prob, x, g0)
+        rel = convex.rel_grad_norm(prob, x, g0, prox=prox, eta=eta)
         return (x, table, gbar), rel
 
     return jax.lax.scan(one_epoch, carry, keys)
 
 
 def run_saga(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
-             fused=False):
+             fused=False, prox=None):
     """SAGA [12]: update (4), table mean refreshed every iteration.
     1 gradient evaluation per iteration; table init at x0.
     Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
     from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(algo="saga", eta=float(eta), rounds=epochs,
-                          fused=fused)
-    fused_t = fusedmod.make_params(spec.fused, eta, prob.lam)
+                          fused=fused, prox=proxops.canonical(prox))
+    px = proxops.parse(spec.prox) if spec.prox is not None else None
+    fused_t = fusedmod.make_params(spec.fused, eta, prob.lam, prox=px)
     x = jnp.zeros((prob.d,))
-    g0 = convex.grad_norm0(prob)
+    g0 = convex.grad_norm0(prob, prox=px, eta=eta)
     table = convex.scalar_residual_all(prob, x)
     gbar = convex.data_grad_from_scalars(prob, table)
     keys = jax.random.split(key, epochs)
     (x, table, gbar), rels = obs_stage.staged_call(
         _saga_scan, prob, (x, table, gbar), eta, g0, keys,
-        _label="solve/saga", fused=fused_t)
+        _label="solve/saga", fused=fused_t, prox=px)
     return x, rels
 
 

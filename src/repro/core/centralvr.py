@@ -29,6 +29,7 @@ from repro.core import convex, runtime
 from repro.core.convex import Problem
 from repro.obs import stage as obs_stage
 from repro.obs import stream as obs_stream
+from repro.prox import operators as proxops
 
 
 class VRState(NamedTuple):
@@ -41,9 +42,9 @@ class VRState(NamedTuple):
 # Initialization (Algorithm 1, line 2: one epoch of plain SGD)
 # ---------------------------------------------------------------------------
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("prox",))
 def init_state(prob: Problem, eta: float, key: jax.Array,
-               x0: Optional[jax.Array] = None) -> VRState:
+               x0: Optional[jax.Array] = None, prox=None) -> VRState:
     x0 = jnp.zeros((prob.d,)) if x0 is None else x0
     perm = jax.random.permutation(key, prob.n)
 
@@ -53,7 +54,8 @@ def init_state(prob: Problem, eta: float, key: jax.Array,
         g = s * prob.A[i] + 2.0 * prob.lam * x
         table = table.at[i].set(s)
         acc = acc + s * prob.A[i] / prob.n
-        return (x - eta * g, table, acc), None
+        x_next = proxops.apply_prox(prox, x - eta * g, eta)
+        return (x_next, table, acc), None
 
     init = (x0, jnp.zeros((prob.n,)), jnp.zeros((prob.d,)))
     (x, table, acc), _ = jax.lax.scan(body, init, perm)
@@ -65,7 +67,7 @@ def init_state(prob: Problem, eta: float, key: jax.Array,
 # ---------------------------------------------------------------------------
 
 def epoch(prob: Problem, state: VRState, eta: float, order: jax.Array,
-          *, track_iterates: bool = False, fused=None):
+          *, track_iterates: bool = False, fused=None, prox=None):
     """Run n CentralVR updates visiting ``order`` (a permutation for the
     practical variant, i.i.d. uniform draws for the Theorem-1 variant).
 
@@ -75,7 +77,9 @@ def epoch(prob: Problem, state: VRState, eta: float, order: jax.Array,
     ``fused``: static kernel params from :func:`fused.make_params`, or
     ``None`` for the unfused oracle body.  The fused path runs the
     correction + step + accumulator write as one ``vr_update`` launch per
-    step (DESIGN.md §Fused kernels hot-path); eta rides in the params.
+    step (DESIGN.md §Fused kernels hot-path); eta — and the prox epilogue,
+    when one is configured — ride in the params, so ``prox`` here only
+    shapes the unfused body.
     """
     if fused is not None:
         from repro.core import fused as fusedmod
@@ -89,7 +93,7 @@ def epoch(prob: Problem, state: VRState, eta: float, order: jax.Array,
         s_new = convex.scalar_residual(prob, x, i)
         # v = (s_new - s_old) a_i + gbar + 2 lam x   (Eq. 6, scalar form)
         v = (s_new - table[i]) * prob.A[i] + state.gbar + 2.0 * prob.lam * x
-        x_next = x - eta * v
+        x_next = proxops.apply_prox(prox, x - eta * v, eta)
         table = table.at[i].set(s_new)
         acc = acc + s_new * prob.A[i] / prob.n
         return (x_next, table, acc), (x if track_iterates else None)
@@ -103,7 +107,7 @@ def epoch(prob: Problem, state: VRState, eta: float, order: jax.Array,
 
 
 def epoch_uniform(prob: Problem, state: VRState, eta: float, key: jax.Array,
-                  *, track_iterates: bool = False, fused=None):
+                  *, track_iterates: bool = False, fused=None, prox=None):
     """Theorem-1 regime: i.i.d. uniform sampling, gbar refreshed from table."""
     idx = jax.random.randint(key, (prob.n,), 0, prob.n)
     if fused is not None:
@@ -118,7 +122,7 @@ def epoch_uniform(prob: Problem, state: VRState, eta: float, key: jax.Array,
         x, table = carry
         s_new = convex.scalar_residual(prob, x, i)
         v = (s_new - table[i]) * prob.A[i] + state.gbar + 2.0 * prob.lam * x
-        x_next = x - eta * v
+        x_next = proxops.apply_prox(prox, x - eta * v, eta)
         table = table.at[i].set(s_new)
         return (x_next, table), (x if track_iterates else None)
 
@@ -131,10 +135,11 @@ def epoch_uniform(prob: Problem, state: VRState, eta: float, key: jax.Array,
 # Driver
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("sampling", "fused", "stream"),
+@functools.partial(jax.jit,
+                   static_argnames=("sampling", "fused", "stream", "prox"),
                    donate_argnames=("state",))
 def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str,
-              fused=None, stream: bool = False):
+              fused=None, stream: bool = False, prox=None):
     """The whole Algorithm-1 run as one executable: a scan over epochs with
     the relative-grad-norm metric computed on device.  ``state`` is donated
     so the (n,) table and (d,) iterate/gbar update in place."""
@@ -144,10 +149,12 @@ def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str,
         runtime.TRACES.inc("centralvr_epoch")
         if sampling == "permutation":
             order = jax.random.permutation(k, prob.n)
-            new_state, _ = epoch(prob, state, eta, order, fused=fused)
+            new_state, _ = epoch(prob, state, eta, order, fused=fused,
+                                 prox=prox)
         else:
-            new_state, _ = epoch_uniform(prob, state, eta, k, fused=fused)
-        rel = convex.rel_grad_norm(prob, new_state.x, g0)
+            new_state, _ = epoch_uniform(prob, state, eta, k, fused=fused,
+                                         prox=prox)
+        rel = convex.rel_grad_norm(prob, new_state.x, g0, prox=prox, eta=eta)
         if stream:
             obs_stream.scan_metric("rel", i, rel)
         return new_state, rel
@@ -160,7 +167,7 @@ def _run_scan(prob: Problem, state: VRState, eta, g0, keys, sampling: str,
 
 def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
         sampling: str = "permutation", x0: Optional[jax.Array] = None,
-        backend: str = "vmap", mesh=None, fused=False):
+        backend: str = "vmap", mesh=None, fused=False, prox=None):
     """Full Algorithm 1. Returns (final state, per-epoch relative grad norms,
     gradient-evaluation counts). 1 gradient evaluation per iteration
     (Table 1 row 'CentralVR'), plus the n initialization evaluations.
@@ -177,20 +184,29 @@ def run(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(algo="centralvr", eta=float(eta), rounds=epochs,
-                          backend=backend, sampling=sampling, fused=fused)
+                          backend=backend, sampling=sampling, fused=fused,
+                          prox=proxops.canonical(prox))
+    px = proxops.parse(spec.prox) if spec.prox is not None else None
+    if spec.sampling == "sparse":
+        from repro.prox import lazy
+        return lazy.run_sparse(prob, eta=eta, epochs=epochs, key=key,
+                               x0=x0, prox=px)
     if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_centralvr(prob, eta=eta, epochs=epochs, key=key,
                                   sampling=sampling, x0=x0, mesh=mesh,
-                                  fused=fused)
-    fused_t = fusedmod.make_params(spec.fused, eta, prob.lam)
+                                  fused=fused, prox=spec.prox)
+    # the fused tuple carries its own copy of the (elementwise) prox for
+    # the kernel epilogue; ``px`` still shapes the init epoch, the metric,
+    # and the unfused body — the epoch dispatcher ignores it when fused
+    fused_t = fusedmod.make_params(spec.fused, eta, prob.lam, prox=px)
     k_init, k_run = jax.random.split(key)
-    state = init_state(prob, eta, k_init, x0=x0)
-    g0 = convex.grad_norm0(prob)
+    state = init_state(prob, eta, k_init, x0=x0, prox=px)
+    g0 = convex.grad_norm0(prob, prox=px, eta=eta)
     keys = jax.random.split(k_run, epochs)
     state, rels = obs_stage.staged_call(
         _run_scan, prob, state, eta, g0, keys, _label="solve/centralvr",
-        sampling=sampling, fused=fused_t,
+        sampling=sampling, fused=fused_t, prox=px,
         stream=obs_stream.stream_active())
     grad_evals = prob.n * jnp.arange(2, epochs + 2)
     return state, rels, grad_evals

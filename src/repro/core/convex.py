@@ -1,5 +1,7 @@
 """The paper's experimental substrate (§6): l2-regularized logistic and
-ridge regression, with the GLM scalar-residual structure that makes the
+ridge regression — plus the robust-regression family (Huber,
+pseudo-Huber, logistic with label outliers) that the composite/prox
+drivers exercise — with the GLM scalar-residual structure that makes the
 SAGA/CentralVR gradient table O(n) scalars instead of O(n·d) vectors
 (the storage observation in §2.3 of the paper).
 
@@ -28,9 +30,12 @@ class Problem(NamedTuple):
     """A finite-sum convex problem; a pytree safe to close over in jit."""
 
     A: jax.Array          # (n, d) features
-    b: jax.Array          # (n,) labels (+-1 for logistic, real for ridge)
+    b: jax.Array          # (n,) labels (+-1 for logistic, real otherwise)
     lam: jnp.float32      # l2 coefficient
-    kind: str             # "logistic" | "ridge"  (static)
+    kind: str             # "logistic" | "ridge" | "huber[@delta]" |
+                          # "pseudo_huber[@delta]"  (static; the robust
+                          # losses encode delta in the kind string so the
+                          # pytree structure never varies)
 
     @property
     def n(self) -> int:
@@ -53,8 +58,14 @@ jax.tree_util.register_pytree_node(
 # Data generators (paper §6.1)
 # ---------------------------------------------------------------------------
 
-def make_logistic_data(key, n: int, d: int, lam: float = 1e-4) -> Problem:
-    """Two unit-variance normals with means separated by one unit."""
+def make_logistic_data(key, n: int, d: int, lam: float = 1e-4,
+                       outliers: float = 0.0) -> Problem:
+    """Two unit-variance normals with means separated by one unit.
+
+    ``outliers`` flips that fraction of labels (adversarial label noise —
+    the robust-logistic setting). ``outliers=0`` leaves the RNG stream
+    and the generated data bit-identical to the original generator.
+    """
     k1, k2 = jax.random.split(key)
     half = n // 2
     mu = jnp.zeros((d,)).at[0].set(0.5)
@@ -62,6 +73,9 @@ def make_logistic_data(key, n: int, d: int, lam: float = 1e-4) -> Problem:
     a_neg = jax.random.normal(k2, (n - half, d)) - mu
     A = jnp.concatenate([a_pos, a_neg])
     b = jnp.concatenate([jnp.ones((half,)), -jnp.ones((n - half,))])
+    if outliers:
+        flip = jax.random.uniform(jax.random.fold_in(key, 3), (n,)) < outliers
+        b = jnp.where(flip, -b, b)
     return Problem(A, b, jnp.float32(lam), "logistic")
 
 
@@ -74,10 +88,47 @@ def make_ridge_data(key, n: int, d: int, lam: float = 1e-4) -> Problem:
     return Problem(A, b, jnp.float32(lam), "ridge")
 
 
+def make_huber_data(key, n: int, d: int, lam: float = 1e-4,
+                    delta: float = 1.0, outliers: float = 0.1,
+                    kind: str = "huber") -> Problem:
+    """Linear regression with a corrupted label fraction (robust setting).
+
+    ``b = A x_true + eps`` with ``outliers`` of the labels shifted by a
+    10-sigma heavy tail — the regime where the Huber loss beats L2
+    (EXPERIMENTS.md §Robust regression). ``kind`` may also be
+    ``"pseudo_huber"``; ``delta != 1`` is encoded as ``"huber@<delta>"``.
+    """
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    A = jax.random.normal(k1, (n, d))
+    x_true = jax.random.normal(k2, (d,))
+    b = A @ x_true + jax.random.normal(k3, (n,))
+    if outliers:
+        mask = jax.random.uniform(k4, (n,)) < outliers
+        b = jnp.where(mask, b + 10.0 * jax.random.normal(k5, (n,)), b)
+    tag = kind if delta == 1.0 else f"{kind}@{delta:g}"
+    return Problem(A, b, jnp.float32(lam), tag)
+
+
+def loss_params(kind: str):
+    """Split a kind string into (base, delta): ``"huber@0.5"`` ->
+    ``("huber", 0.5)``; kinds without a ``@`` tag get delta = 1.0."""
+    base, _, tail = kind.partition("@")
+    return base, (float(tail) if tail else 1.0)
+
+
 def make_problem(key, cfg) -> Problem:
     """From a :class:`repro.config.ConvexConfig`."""
-    fn = make_logistic_data if cfg.problem == "logistic" else make_ridge_data
-    return fn(key, cfg.n, cfg.d, cfg.lam)
+    outliers = getattr(cfg, "outlier_frac", 0.0)
+    if cfg.problem == "logistic":
+        return make_logistic_data(key, cfg.n, cfg.d, cfg.lam,
+                                  outliers=outliers)
+    if cfg.problem == "ridge":
+        return make_ridge_data(key, cfg.n, cfg.d, cfg.lam)
+    if cfg.problem in ("huber", "pseudo_huber"):
+        return make_huber_data(key, cfg.n, cfg.d, cfg.lam,
+                               delta=getattr(cfg, "huber_delta", 1.0),
+                               outliers=outliers, kind=cfg.problem)
+    raise ValueError(f"unknown problem kind {cfg.problem!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -88,12 +139,41 @@ def _margins(prob: Problem, x: jax.Array) -> jax.Array:
     return prob.A @ x
 
 
+def _pointwise_loss(z, bb, kind: str):
+    """l(z; b) per sample, from an already-formed margin z = a^T x."""
+    base, delta = loss_params(kind)
+    if base == "logistic":
+        return jnp.logaddexp(0.0, -bb * z)
+    if base == "ridge":
+        return (z - bb) ** 2
+    r = z - bb
+    if base == "huber":
+        return jnp.where(jnp.abs(r) <= delta,
+                         0.5 * r * r,
+                         delta * (jnp.abs(r) - 0.5 * delta))
+    if base == "pseudo_huber":
+        return delta * delta * (jnp.sqrt(1.0 + (r / delta) ** 2) - 1.0)
+    raise ValueError(f"unknown problem kind {kind!r}")
+
+
+def _pointwise_residual(z, bb, kind: str):
+    """s = l'(z; b) per sample — the scalar the VR tables store."""
+    base, delta = loss_params(kind)
+    if base == "logistic":
+        return -bb * jax.nn.sigmoid(-bb * z)
+    if base == "ridge":
+        return 2.0 * (z - bb)
+    r = z - bb
+    if base == "huber":
+        return jnp.clip(r, -delta, delta)
+    if base == "pseudo_huber":
+        return r / jnp.sqrt(1.0 + (r / delta) ** 2)
+    raise ValueError(f"unknown problem kind {kind!r}")
+
+
 def full_loss(prob: Problem, x: jax.Array) -> jax.Array:
     z = _margins(prob, x)
-    if prob.kind == "logistic":
-        data = jnp.mean(jnp.logaddexp(0.0, -prob.b * z))
-    else:
-        data = jnp.mean((z - prob.b) ** 2)
+    data = jnp.mean(_pointwise_loss(z, prob.b, prob.kind))
     return data + prob.lam * jnp.sum(x * x)
 
 
@@ -101,17 +181,11 @@ def scalar_residual(prob: Problem, x: jax.Array, idx) -> jax.Array:
     """s_i(x) = l'(a_i^T x; b_i) for the given indices (vectorized)."""
     a = prob.A[idx]
     bb = prob.b[idx]
-    z = a @ x
-    if prob.kind == "logistic":
-        return -bb * jax.nn.sigmoid(-bb * z)
-    return 2.0 * (z - bb)
+    return _pointwise_residual(a @ x, bb, prob.kind)
 
 
 def scalar_residual_all(prob: Problem, x: jax.Array) -> jax.Array:
-    z = _margins(prob, x)
-    if prob.kind == "logistic":
-        return -prob.b * jax.nn.sigmoid(-prob.b * z)
-    return 2.0 * (z - prob.b)
+    return _pointwise_residual(_margins(prob, x), prob.b, prob.kind)
 
 
 def sample_grad(prob: Problem, x: jax.Array, i) -> jax.Array:
@@ -136,12 +210,16 @@ def full_grad(prob: Problem, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def constants(prob: Problem):
-    """(mu, L) such that every f_i is mu-strongly convex, L-smooth."""
+    """(mu, L) such that every f_i is mu-strongly convex, L-smooth.
+
+    Per-loss curvature bounds sup l'': logistic 1/4, ridge 2, Huber and
+    pseudo-Huber 1 (both have |l''| <= 1 for every delta).
+    """
     row_sq = jnp.sum(prob.A * prob.A, axis=1)
-    if prob.kind == "logistic":
-        L = 0.25 * jnp.max(row_sq) + 2.0 * prob.lam
-    else:
-        L = 2.0 * jnp.max(row_sq) + 2.0 * prob.lam
+    base, _ = loss_params(prob.kind)
+    curv = {"logistic": 0.25, "ridge": 2.0,
+            "huber": 1.0, "pseudo_huber": 1.0}[base]
+    L = curv * jnp.max(row_sq) + 2.0 * prob.lam
     mu = 2.0 * prob.lam
     return mu, L
 
@@ -155,12 +233,39 @@ def auto_eta(prob: Problem, c: float = 0.3) -> float:
 
 
 def solve_exact(prob: Problem, iters: int = 100) -> jax.Array:
-    """x*: closed form for ridge, Newton for logistic (d is small)."""
+    """x*: closed form for ridge, Newton for logistic, IRLS for the
+    robust losses (d is small).
+
+    Huber/pseudo-Huber use iteratively-reweighted least squares with the
+    majorization weights w = l'(r)/r (min(1, delta/|r|) for Huber) —
+    each step solves the weighted normal equations exactly and
+    monotonically decreases the objective, unlike raw Newton on Huber,
+    whose piecewise-constant curvature can cycle between active sets.
+    The fixed point satisfies A^T l'(r)/n + 2*lam*x = 0, i.e. it is the
+    exact stationary point of :func:`full_loss`.
+    """
     n, d = prob.A.shape
-    if prob.kind == "ridge":
+    base, delta = loss_params(prob.kind)
+    if base == "ridge":
         H = 2.0 * (prob.A.T @ prob.A) / n + 2.0 * prob.lam * jnp.eye(d)
         g = 2.0 * (prob.A.T @ prob.b) / n
         return jnp.linalg.solve(H, g)
+
+    if base in ("huber", "pseudo_huber"):
+        def irls_step(x, _):
+            r = prob.A @ x - prob.b
+            if base == "huber":
+                w = jnp.minimum(1.0, delta / jnp.maximum(jnp.abs(r), 1e-300))
+            else:
+                w = 1.0 / jnp.sqrt(1.0 + (r / delta) ** 2)
+            Aw = prob.A * w[:, None]
+            H = Aw.T @ prob.A / n + 2.0 * prob.lam * jnp.eye(d)
+            g = Aw.T @ prob.b / n
+            return jnp.linalg.solve(H, g), None
+
+        x0 = jnp.zeros((d,))
+        x, _ = jax.lax.scan(irls_step, x0, None, length=max(iters, 400))
+        return x
 
     def newton_step(x, _):
         z = prob.A @ x
@@ -175,16 +280,37 @@ def solve_exact(prob: Problem, iters: int = 100) -> jax.Array:
     return x
 
 
-def rel_grad_norm(prob: Problem, x: jax.Array, g0: jax.Array | None = None):
-    """The paper's y-axis: ||grad f(x)|| / ||grad f(x0)||."""
-    g = jnp.linalg.norm(full_grad(prob, x))
+def rel_grad_norm(prob: Problem, x: jax.Array, g0: jax.Array | None = None,
+                  *, prox=None, eta: float | None = None):
+    """The paper's y-axis: ||grad f(x)|| / ||grad f(x0)||.
+
+    For composite runs (``prox`` a ProxSpec) the numerator becomes the
+    gradient-mapping residual ``||x - prox_{eta*g}(x - eta*grad f(x))||``
+    — the quantity that vanishes at minimizers of f + g. The 1/eta scale
+    cancels against the matching :func:`grad_norm0`, so the smooth path
+    (prox=None) stays bit-identical to the original metric.
+    """
+    if prox is None:
+        g = jnp.linalg.norm(full_grad(prob, x))
+    else:
+        from repro.prox import operators as proxops
+        g = jnp.linalg.norm(
+            proxops.grad_map(prox, x, full_grad(prob, x), eta))
     if g0 is None:
         return g
     return g / g0
 
 
-def grad_norm0(prob: Problem) -> jax.Array:
-    """||grad f(0)|| — the normalizer of the paper's y-axis.  Stays on
-    device: the scan-based drivers divide by it inside the scan instead of
-    fetching it to the host (DESIGN.md §3)."""
-    return jnp.linalg.norm(full_grad(prob, jnp.zeros((prob.d,))))
+def grad_norm0(prob: Problem, *, prox=None, eta: float | None = None):
+    """||grad f(0)|| — the normalizer of the paper's y-axis (the
+    gradient-mapping residual at 0 for composite runs).  Stays on device:
+    the scan-based drivers divide by it inside the scan instead of
+    fetching it to the host (DESIGN.md §3).
+
+    Degenerate composite configs can make x0 = 0 an exact fixed point of
+    the prox-gradient map (a threshold ``eta*lam1`` larger than every
+    coordinate of ``eta*grad f(0)`` zeroes the whole step); dividing by
+    that zero would turn every rel into NaN, so the normalizer falls back
+    to 1 and the trajectory reports raw residuals instead."""
+    g0 = rel_grad_norm(prob, jnp.zeros((prob.d,)), prox=prox, eta=eta)
+    return jnp.where(g0 == 0.0, jnp.ones_like(g0), g0)

@@ -41,6 +41,7 @@ from repro.core import convex, runtime
 from repro.core.convex import Problem
 from repro.obs import stage as obs_stage
 from repro.obs import stream as obs_stream
+from repro.prox import operators as proxops
 
 
 class ShardedProblem(NamedTuple):
@@ -113,12 +114,10 @@ def make_distributed(key, cfg) -> ShardedProblem:
     """Paper §6.2: each worker gets its OWN toy dataset of size cfg.n
     (total data scales linearly with workers — the weak-scaling setup)."""
     keys = jax.random.split(key, cfg.workers)
-    gen = (convex.make_logistic_data if cfg.problem == "logistic"
-           else convex.make_ridge_data)
-    probs = [gen(k, cfg.n, cfg.d, cfg.lam) for k in keys]
+    probs = [convex.make_problem(k, cfg) for k in keys]
     return ShardedProblem(jnp.stack([q.A for q in probs]),
                           jnp.stack([q.b for q in probs]),
-                          jnp.float32(cfg.lam), cfg.problem)
+                          jnp.float32(cfg.lam), probs[0].kind)
 
 
 # ---------------------------------------------------------------------------
@@ -126,12 +125,16 @@ def make_distributed(key, cfg) -> ShardedProblem:
 # ---------------------------------------------------------------------------
 
 def _local_centralvr_epoch(A, b, lam, kind, x, table, gbar, eta, perm,
-                           fused=None):
+                           fused=None, prox=None):
     """One CentralVR epoch on one worker's shard (Alg 2 lines 6-12).
 
     ``fused``: static kernel params from ``fused.make_params`` — routes
     the per-step update through the ``vr_update`` Pallas kernel (one
-    launch per step) instead of the unfused oracle body."""
+    launch per step) instead of the unfused oracle body.  ``prox``: a
+    static ProxSpec (or None) — the proximal step is applied per local
+    step, ``x <- prox_{eta*g}(x - eta*v)`` (DESIGN.md §Composite
+    objectives); when ``fused`` is set the prox rides inside the kernel
+    params and this argument is ignored (the tuple carries its own copy)."""
     if fused is not None:
         from repro.core import fused as fusedmod
         x, table, acc, _ = fusedmod.centralvr_epoch(
@@ -146,13 +149,13 @@ def _local_centralvr_epoch(A, b, lam, kind, x, table, gbar, eta, perm,
         v = (s_new - table[i]) * A[i] + gbar + 2.0 * lam * x
         table = table.at[i].set(s_new)
         acc = acc + s_new * A[i] / ns
-        return (x - eta * v, table, acc), None
+        return (proxops.apply_prox(prox, x - eta * v, eta), table, acc), None
 
     (x, table, acc), _ = jax.lax.scan(body, (x, table, jnp.zeros_like(x)), perm)
     return x, table, acc   # acc = local gtilde (data term)
 
 
-def _local_sgd_epoch(A, b, lam, kind, x, eta, perm):
+def _local_sgd_epoch(A, b, lam, kind, x, eta, perm, prox=None):
     prob = Problem(A, b, lam, kind)
     ns = A.shape[0]
 
@@ -162,7 +165,7 @@ def _local_sgd_epoch(A, b, lam, kind, x, eta, perm):
         g = s * A[i] + 2.0 * lam * x
         table = table.at[i].set(s)
         acc = acc + s * A[i] / ns
-        return (x - eta * g, table, acc), None
+        return (proxops.apply_prox(prox, x - eta * g, eta), table, acc), None
 
     init = (x, jnp.zeros((ns,)), jnp.zeros_like(x))
     (x, table, acc), _ = jax.lax.scan(body, init, perm)
@@ -179,44 +182,54 @@ class SyncState(NamedTuple):
 # CentralVR-Sync (Algorithm 2)
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def sync_init(sp: ShardedProblem, eta: float, key: jax.Array) -> SyncState:
-    """Init with one plain-SGD epoch per worker, then average (line 2)."""
+@functools.partial(jax.jit, static_argnames=("prox",))
+def sync_init(sp: ShardedProblem, eta: float, key: jax.Array,
+              prox=None) -> SyncState:
+    """Init with one plain-SGD epoch per worker, then average (line 2).
+    With a prox, locals take prox'd SGD steps and the central average gets
+    one more prox (the wave-boundary ordering, DESIGN.md §2)."""
     keys = jax.random.split(key, sp.p)
     perms = jax.vmap(lambda k: jax.random.permutation(k, sp.ns))(keys)
     x0 = jnp.zeros((sp.d,))
     xs, tables, accs = jax.vmap(
-        lambda A, b, perm: _local_sgd_epoch(A, b, sp.lam, sp.kind, x0, eta, perm)
+        lambda A, b, perm: _local_sgd_epoch(A, b, sp.lam, sp.kind, x0, eta,
+                                            perm, prox=prox)
     )(sp.A, sp.b, perms)
-    return SyncState(x=xs.mean(0), tables=tables, gbar=accs.mean(0))
+    return SyncState(x=proxops.apply_prox(prox, xs.mean(0), eta),
+                     tables=tables, gbar=accs.mean(0))
 
 
 def sync_round(sp: ShardedProblem, st: SyncState, eta: float, key: jax.Array,
-               fused=None) -> SyncState:
+               fused=None, prox=None) -> SyncState:
     """One communication round: a full local epoch everywhere, then the
-    central average of (x, gbar) — Algorithm 2 lines 4-18."""
+    central average of (x, gbar) — Algorithm 2 lines 4-18.  Composite
+    objectives apply the prox per local step AND once more after the
+    central average: the averaged iterate of prox'd locals is not itself
+    a prox output (mean of sparse vectors is dense), so the wave boundary
+    re-projects it (DESIGN.md §2 ordering note)."""
     keys = jax.random.split(key, sp.p)
     perms = jax.vmap(lambda k: jax.random.permutation(k, sp.ns))(keys)
     xs, tables, accs = jax.vmap(
         lambda A, b, table, perm: _local_centralvr_epoch(
             A, b, sp.lam, sp.kind, st.x, table, st.gbar, eta, perm,
-            fused=fused)
+            fused=fused, prox=prox)
     )(sp.A, sp.b, st.tables, perms)
     # central node: average x and gbar (lines 16-18); on a pod: pmean
-    return SyncState(x=xs.mean(0), tables=tables, gbar=accs.mean(0))
+    return SyncState(x=proxops.apply_prox(prox, xs.mean(0), eta),
+                     tables=tables, gbar=accs.mean(0))
 
 
-@functools.partial(jax.jit, static_argnames=("fused", "stream"),
+@functools.partial(jax.jit, static_argnames=("fused", "stream", "prox"),
                    donate_argnames=("st",))
 def _sync_scan(sp: ShardedProblem, st: SyncState, eta, g0, keys, fused=None,
-               stream: bool = False):
+               stream: bool = False, prox=None):
     merged = sp.merged()
 
     def step(st, xs):
         i, k = xs if stream else (None, xs)
         runtime.TRACES.inc("sync_round")
-        st = sync_round(sp, st, eta, k, fused=fused)
-        rel = convex.rel_grad_norm(merged, st.x, g0)
+        st = sync_round(sp, st, eta, k, fused=fused, prox=prox)
+        rel = convex.rel_grad_norm(merged, st.x, g0, prox=prox, eta=eta)
         if stream:
             obs_stream.scan_metric("rel", i, rel)
         return st, rel
@@ -228,7 +241,7 @@ def _sync_scan(sp: ShardedProblem, st: SyncState, eta, g0, keys, fused=None,
 
 
 def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-             backend: str = "vmap", mesh=None, fused=False):
+             backend: str = "vmap", mesh=None, fused=False, prox=None):
     """Algorithm 2 end to end: one jitted scan over communication rounds,
     metric on device, state donated (DESIGN.md §3).
 
@@ -242,20 +255,22 @@ def run_sync(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(algo="centralvr_sync", p=sp.p, eta=float(eta),
-                          rounds=rounds, backend=backend, fused=fused)
+                          rounds=rounds, backend=backend, fused=fused,
+                          prox=proxops.canonical(prox))
     if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_sync(sp, eta=eta, rounds=rounds, key=key, mesh=mesh,
-                             fused=fused)
-    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam)
+                             fused=fused, prox=spec.prox)
+    px = proxops.parse(spec.prox) if spec.prox is not None else None
+    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam, prox=px)
     k_init, k_run = jax.random.split(key)
-    st = sync_init(sp, eta, k_init)
-    g0 = convex.grad_norm0(sp.merged())
+    st = sync_init(sp, eta, k_init, prox=px)
+    g0 = convex.grad_norm0(sp.merged(), prox=px, eta=eta)
     keys = jax.random.split(k_run, rounds)
     return obs_stage.staged_call(
         _sync_scan, sp, st, eta, g0, keys,
         _label="solve/centralvr_sync",
-        fused=fused_t, stream=obs_stream.stream_active())
+        fused=fused_t, stream=obs_stream.stream_active(), prox=px)
 
 
 # ---------------------------------------------------------------------------
@@ -272,8 +287,9 @@ class AsyncState(NamedTuple):
     gbar_fetch: jax.Array # (p, d)
 
 
-def async_init(sp: ShardedProblem, eta: float, key: jax.Array) -> AsyncState:
-    st = sync_init(sp, eta, key)
+def async_init(sp: ShardedProblem, eta: float, key: jax.Array,
+               prox=None) -> AsyncState:
+    st = sync_init(sp, eta, key, prox=prox)
     p = sp.p
     # Algorithm 3 line 2 sets x_old = gbar_old = 0 with x_c = x0; starting
     # instead from the SGD-init iterate requires the workers' "previous
@@ -288,10 +304,17 @@ def async_init(sp: ShardedProblem, eta: float, key: jax.Array) -> AsyncState:
 
 
 def async_event(sp: ShardedProblem, st: AsyncState, s, eta: float,
-                key: jax.Array, fused=None) -> AsyncState:
+                key: jax.Array, fused=None, prox=None) -> AsyncState:
     """Worker s completes one local epoch computed from its stale fetch,
     sends (dx, dgbar); the central node applies x += dx/p (Alg 3 l.18-21);
     the worker then fetches the fresh central state.
+
+    Composite objectives: the central accumulator x_c must stay LINEAR in
+    the pushed deltas (the spmd wave backend reconstructs fetches by
+    prefix sums over them), so the prox is never applied to x_c itself —
+    each worker prox's its FETCHED copy at epoch start instead, and the
+    metric/final iterate evaluate at ``prox(x_c)`` (DESIGN.md §Composite
+    objectives).
 
     ``s`` may be a concrete int or a TRACED index: the stacked (p, ns)
     tables are read with dynamic gathers (``sp.A[s]``) and written with
@@ -302,8 +325,8 @@ def async_event(sp: ShardedProblem, st: AsyncState, s, eta: float,
     perm = jax.random.permutation(key, sp.ns)
     x_new, table, gtilde = _local_centralvr_epoch(
         sp.A[s], sp.b[s], sp.lam, sp.kind,
-        st.x_fetch[s], st.tables[s], st.gbar_fetch[s], eta, perm,
-        fused=fused)
+        proxops.apply_prox(prox, st.x_fetch[s], eta), st.tables[s],
+        st.gbar_fetch[s], eta, perm, fused=fused, prox=prox)
     dx = x_new - st.x_old[s]
     dg = gtilde - st.gbar_old[s]
     x_c = st.x_c + alpha * dx
@@ -318,10 +341,10 @@ def async_event(sp: ShardedProblem, st: AsyncState, s, eta: float,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("fused", "stream"),
+@functools.partial(jax.jit, static_argnames=("fused", "stream", "prox"),
                    donate_argnames=("st",))
 def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys,
-                fused=None, stream: bool = False):
+                fused=None, stream: bool = False, prox=None):
     """The full event schedule in one executable: an outer scan over rounds
     (emitting the metric every p events, as the host loop did) nests an
     inner scan over each round's p events.  The worker index is TRACED —
@@ -337,10 +360,14 @@ def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys,
         def one_event(st, sk):
             runtime.TRACES.inc("async_event")
             s, k = sk
-            return async_event(sp, st, s, eta, k, fused=fused), None
+            return async_event(sp, st, s, eta, k, fused=fused,
+                               prox=prox), None
 
         st, _ = jax.lax.scan(one_event, st, (sched_row, key_row))
-        rel = convex.rel_grad_norm(merged, st.x_c, g0)
+        # metric at the feasible point prox(x_c) — x_c itself stays linear
+        rel = convex.rel_grad_norm(
+            merged, proxops.apply_prox(prox, st.x_c, eta), g0,
+            prox=prox, eta=eta)
         if stream:
             obs_stream.scan_metric("rel", i, rel)
         return st, rel
@@ -351,7 +378,8 @@ def _async_scan(sp: ShardedProblem, st: AsyncState, eta, g0, schedule, keys,
 
 
 def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              speeds=None, backend: str = "vmap", mesh=None, fused=False):
+              speeds=None, backend: str = "vmap", mesh=None, fused=False,
+              prox=None):
     """``rounds`` epochs per worker. ``speeds``: optional per-worker relative
     speeds; faster workers fire proportionally more events (heterogeneous
     cluster simulation). Default: round-robin (staleness p-1).
@@ -375,35 +403,51 @@ def run_async(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     spec = solver.RunSpec(
         algo="centralvr_async", p=sp.p, eta=float(eta), rounds=rounds,
         backend=backend, fused=fused,
-        speeds=None if speeds is None else tuple(float(s) for s in speeds))
+        speeds=None if speeds is None else tuple(float(s) for s in speeds),
+        prox=proxops.canonical(prox))
     if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_async(sp, eta=eta, rounds=rounds, key=key,
-                              speeds=spec.speeds, mesh=mesh, fused=fused)
-    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam)
+                              speeds=spec.speeds, mesh=mesh, fused=fused,
+                              prox=spec.prox)
+    px = proxops.parse(spec.prox) if spec.prox is not None else None
+    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam, prox=px)
     k_init, k_run = jax.random.split(key)
-    st = async_init(sp, eta, k_init)
-    g0 = convex.grad_norm0(sp.merged())
+    st = async_init(sp, eta, k_init, prox=px)
+    g0 = convex.grad_norm0(sp.merged(), prox=px, eta=eta)
     schedule = runtime.event_schedule(sp.p, rounds, spec.speeds)
     keys = jax.random.split(k_run, schedule.size)
     sched, keys = runtime.per_round(schedule, keys, sp.p)
     return obs_stage.staged_call(
         _async_scan, sp, st, eta, g0, jnp.asarray(sched), keys,
         _label="solve/centralvr_async",
-        fused=fused_t, stream=obs_stream.stream_active())
+        fused=fused_t, stream=obs_stream.stream_active(), prox=px)
 
 
 # ---------------------------------------------------------------------------
 # Distributed SVRG (Algorithm 4)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("tau", "fused", "stream"),
+@functools.partial(jax.jit,
+                   static_argnames=("tau", "fused", "stream", "prox",
+                                    "snapshot"),
                    donate_argnames=("x",))
 def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int, fused=None,
-                stream: bool = False):
+                stream: bool = False, prox=None, snapshot: str = "last",
+                snap_idx=None):
+    """``snapshot`` selects the next-round anchor each worker contributes
+    (then averaged across workers): ``last`` = final inner iterate (the
+    historical program, byte-identical), ``avg`` = mean of the tau inner
+    iterates, ``rand`` = the inner iterate at a host-precomputed uniform
+    index (``snap_idx``, one shared draw per round so vmap and spmd pick
+    the same one) — the SVRG options of Johnson & Zhang.  ``prox`` applies
+    per inner step and once more after the cross-worker average."""
     merged = sp.merged()
 
     def round_(x, xs):
+        if snapshot == "rand":
+            xs, r = xs[:-1], xs[-1]
+            xs = xs[0] if len(xs) == 1 else xs
         step_i, k = xs if stream else (None, xs)
         runtime.TRACES.inc("dsvrg_round")
         xbar = x
@@ -414,6 +458,8 @@ def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int, fused=None,
             idx = jax.random.randint(kk, (tau,), 0, sp.ns)
 
             if fused is not None:
+                # snapshot=="last" here: run_dsvrg falls back to unfused
+                # for avg/rand (and RunSpec refuses an explicit fused=True)
                 from repro.core import fused as fusedmod
                 sbar = convex.scalar_residual_all(prob, xbar)
                 return fusedmod.svrg_steps(A, b, sp.kind, xbar, sbar, gbar,
@@ -423,24 +469,32 @@ def _dsvrg_scan(sp: ShardedProblem, x, eta, g0, keys, tau: int, fused=None,
                 g = (convex.scalar_residual(prob, xl, i) * A[i]
                      - convex.scalar_residual(prob, xbar, i) * A[i]
                      + gbar + 2.0 * sp.lam * (xl - xbar))
-                return xl - eta * g, None
+                xl = proxops.apply_prox(prox, xl - eta * g, eta)
+                return xl, (xl if snapshot != "last" else None)
 
-            xl, _ = jax.lax.scan(body, xbar, idx)
+            xl, traj = jax.lax.scan(body, xbar, idx)
+            if snapshot == "avg":
+                return traj.mean(0)
+            if snapshot == "rand":
+                return traj[r]
             return xl
 
         xl_all = jax.vmap(local)(sp.A, sp.b, jax.random.split(k, sp.p))
-        x = xl_all.mean(0)
-        rel = convex.rel_grad_norm(merged, x, g0)
+        x = proxops.apply_prox(prox, xl_all.mean(0), eta)
+        rel = convex.rel_grad_norm(merged, x, g0, prox=prox, eta=eta)
         if stream:
             obs_stream.scan_metric("rel", step_i, rel)
         return x, rel
 
     xs = (jnp.arange(keys.shape[0]), keys) if stream else keys
+    if snapshot == "rand":
+        xs = (xs + (snap_idx,)) if isinstance(xs, tuple) else (xs, snap_idx)
     return jax.lax.scan(round_, x, xs)
 
 
 def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
-              tau: int = 0, backend: str = "vmap", mesh=None, fused=False):
+              tau: int = 0, backend: str = "vmap", mesh=None, fused=False,
+              prox=None, snapshot: str = "last"):
     """tau local steps from the shared snapshot (default tau = 2*ns, the
     paper's recommendation from [17]); gbar = full gradient at the snapshot
     (the synchronization step); then average x across workers.
@@ -448,24 +502,40 @@ def run_dsvrg(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
     rounds (DESIGN.md §3); ``backend="spmd"`` places one worker per mesh
     device and the averages/sync gradient become collectives.
 
+    ``snapshot`` in {"last", "avg", "rand"} picks the anchor each worker
+    feeds the cross-worker average (see ``_dsvrg_scan``); avg/rand need
+    the inner trajectory, which the fused kernel does not materialize, so
+    they run unfused (``fused="auto"`` silently falls back here,
+    ``fused=True`` is refused by RunSpec pre-JAX).
+
     Validation is a ``solver.RunSpec`` build (DESIGN.md §Solver API)."""
     from repro.core import fused as fusedmod
     from repro.core import solver
     spec = solver.RunSpec(algo="dsvrg", p=sp.p, eta=float(eta),
                           rounds=rounds, backend=backend, tau=tau or None,
-                          fused=fused)
+                          fused=fused, prox=proxops.canonical(prox),
+                          snapshot=snapshot)
     if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_dsvrg(sp, eta=eta, rounds=rounds, key=key, tau=tau,
-                              mesh=mesh, fused=fused)
-    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam)
+                              mesh=mesh, fused=fused, prox=spec.prox,
+                              snapshot=snapshot)
+    px = proxops.parse(spec.prox) if spec.prox is not None else None
+    fused_t = (fusedmod.make_params(spec.fused, eta, sp.lam, prox=px)
+               if snapshot == "last" else None)
     tau = tau or 2 * sp.ns
     x = jnp.zeros((sp.d,))
-    g0 = convex.grad_norm0(sp.merged())
+    g0 = convex.grad_norm0(sp.merged(), prox=px, eta=eta)
     keys = jax.random.split(key, rounds)
+    # one shared uniform anchor index per round, drawn off the main key
+    # stream (fold_in) so last/avg trajectories are unaffected
+    snap_idx = (jax.random.randint(jax.random.fold_in(key, 1), (rounds,),
+                                   0, tau)
+                if snapshot == "rand" else None)
     return obs_stage.staged_call(
         _dsvrg_scan, sp, x, eta, g0, keys, _label="solve/dsvrg",
-        tau=tau, fused=fused_t, stream=obs_stream.stream_active())
+        tau=tau, fused=fused_t, stream=obs_stream.stream_active(),
+        prox=px, snapshot=snapshot, snap_idx=snap_idx)
 
 
 # ---------------------------------------------------------------------------
@@ -481,13 +551,14 @@ class DSagaState(NamedTuple):
 
 
 def _local_saga_steps(A, b, lam, kind, x, table, gbar, eta, n_global, idx,
-                      fused=None):
+                      fused=None, prox=None):
     """tau local SAGA steps on one worker's shard (Alg 5 lines 5-11): VR
     step from the scalar table, running-mean gbar update with the GLOBAL
     1/n scaling (line 9, §5.2).  The single spelling shared by both fetch
     disciplines and the spmd wave runner — the vmap-vs-spmd agreement
     pins rely on these being the same arithmetic (and, when ``fused`` is
-    set, the same single-launch kernel step)."""
+    set, the same single-launch kernel step — the fused tuple carries its
+    own prox copy)."""
     if fused is not None:
         from repro.core import fused as fusedmod
         return fusedmod.saga_steps(A, b, kind, x, table, gbar, n_global,
@@ -500,7 +571,7 @@ def _local_saga_steps(A, b, lam, kind, x, table, gbar, eta, n_global, idx,
         v = (s_new - table[i]) * A[i] + gbar + 2.0 * lam * x
         gbar = gbar + (s_new - table[i]) * A[i] / n_global
         table = table.at[i].set(s_new)
-        return (x - eta * v, table, gbar), None
+        return (proxops.apply_prox(prox, x - eta * v, eta), table, gbar), None
 
     (x, table, gbar), _ = jax.lax.scan(body, (x, table, gbar), idx)
     return x, table, gbar
@@ -508,7 +579,7 @@ def _local_saga_steps(A, b, lam, kind, x, table, gbar, eta, n_global, idx,
 
 def dsaga_event(sp: ShardedProblem, st: DSagaState, s, eta: float, tau: int,
                 key, literal_scaling: bool = False,
-                fused=None) -> DSagaState:
+                fused=None, prox=None) -> DSagaState:
     """Worker s: tau local SAGA steps from its fetched central state, then
     the delta push (Alg 5 lines 12-20). Events interleave round-robin — the
     async arrival order, one at a time (the paper's implementation is
@@ -518,9 +589,12 @@ def dsaga_event(sp: ShardedProblem, st: DSagaState, s, eta: float, tau: int,
     alpha = 1.0 / sp.p
     alpha_g = alpha if literal_scaling else 1.0
     idx = jax.random.randint(key, (tau,), 0, sp.ns)
+    # prox the FETCHED copy at block start; x_c itself stays linear in the
+    # pushed deltas (same rationale as async_event)
     x, table, gbar = _local_saga_steps(
-        sp.A[s], sp.b[s], sp.lam, sp.kind, st.x_c, st.tables[s], st.gbar_c,
-        eta, sp.p * sp.ns, idx, fused=fused)
+        sp.A[s], sp.b[s], sp.lam, sp.kind,
+        proxops.apply_prox(prox, st.x_c, eta), st.tables[s], st.gbar_c,
+        eta, sp.p * sp.ns, idx, fused=fused, prox=prox)
     dx = x - st.x_old[s]
     if literal_scaling:
         dg = gbar - st.gbar_old[s]       # printed line 13
@@ -562,7 +636,7 @@ def dsaga_init_stale(sp: ShardedProblem) -> AsyncState:
 
 def dsaga_event_stale(sp: ShardedProblem, st: AsyncState, s, eta: float,
                       tau: int, key, literal_scaling: bool = False,
-                      fused=None) -> AsyncState:
+                      fused=None, prox=None) -> AsyncState:
     """Algorithm 5 with Algorithm 3's fetch discipline: worker s runs its
     tau local SAGA steps from the central state it fetched at its PREVIOUS
     event (``st.x_fetch[s]``/``st.gbar_fetch[s]``) instead of the
@@ -578,8 +652,9 @@ def dsaga_event_stale(sp: ShardedProblem, st: AsyncState, s, eta: float,
     alpha_g = alpha if literal_scaling else 1.0
     idx = jax.random.randint(key, (tau,), 0, sp.ns)
     x, table, gbar = _local_saga_steps(
-        sp.A[s], sp.b[s], sp.lam, sp.kind, st.x_fetch[s], st.tables[s],
-        st.gbar_fetch[s], eta, sp.p * sp.ns, idx, fused=fused)
+        sp.A[s], sp.b[s], sp.lam, sp.kind,
+        proxops.apply_prox(prox, st.x_fetch[s], eta), st.tables[s],
+        st.gbar_fetch[s], eta, sp.p * sp.ns, idx, fused=fused, prox=prox)
     dx = x - st.x_old[s]
     if literal_scaling:
         dg = gbar - st.gbar_old[s]       # printed line 13
@@ -599,11 +674,11 @@ def dsaga_event_stale(sp: ShardedProblem, st: AsyncState, s, eta: float,
 
 @functools.partial(jax.jit,
                    static_argnames=("tau", "literal_scaling", "stale",
-                                    "fused", "stream"),
+                                    "fused", "stream", "prox"),
                    donate_argnames=("st",))
 def _dsaga_scan(sp: ShardedProblem, st, eta, g0, schedule, keys,
                 tau: int, literal_scaling: bool, stale: bool, fused=None,
-                stream: bool = False):
+                stream: bool = False, prox=None):
     """One scan runner for both fetch disciplines: ``stale`` selects the
     event function (and the matching state type — DSagaState for instant,
     AsyncState for stale) at trace time."""
@@ -621,10 +696,12 @@ def _dsaga_scan(sp: ShardedProblem, st, eta, g0, schedule, keys,
             runtime.TRACES.inc(trace_key)
             s, k = sk
             return event(sp, st, s, eta, tau, k, literal_scaling,
-                         fused=fused), None
+                         fused=fused, prox=prox), None
 
         st, _ = jax.lax.scan(one_event, st, (sched_row, key_row))
-        rel = convex.rel_grad_norm(merged, st.x_c, g0)
+        rel = convex.rel_grad_norm(
+            merged, proxops.apply_prox(prox, st.x_c, eta), g0,
+            prox=prox, eta=eta)
         if stream:
             obs_stream.scan_metric("rel", i, rel)
         return st, rel
@@ -637,7 +714,7 @@ def _dsaga_scan(sp: ShardedProblem, st, eta, g0, schedule, keys,
 def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
               tau: int = 100, literal_scaling: bool = False,
               backend: str = "vmap", fetch: str | None = None,
-              speeds=None, mesh=None, fused=False):
+              speeds=None, mesh=None, fused=False, prox=None):
     """Algorithm 5. Each worker runs tau SAGA steps with its local table;
     the running mean gbar is updated with the GLOBAL 1/n scaling (§5.2);
     deltas (dx, dgbar) are pushed with server coefficient alpha.
@@ -684,15 +761,17 @@ def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
         algo="dsaga", p=sp.p, eta=float(eta), rounds=rounds,
         backend=backend, fetch=fetch,
         speeds=None if speeds is None else tuple(float(s) for s in speeds),
-        tau=tau, fused=fused)
+        tau=tau, fused=fused, prox=proxops.canonical(prox))
     fetch = spec.fetch
     if spec.backend == "spmd":
         from repro.core import spmd
         return spmd.run_dsaga(sp, eta=eta, rounds=rounds, key=key, tau=tau,
                               literal_scaling=literal_scaling,
-                              speeds=spec.speeds, mesh=mesh, fused=fused)
-    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam)
-    g0 = convex.grad_norm0(sp.merged())
+                              speeds=spec.speeds, mesh=mesh, fused=fused,
+                              prox=spec.prox)
+    px = proxops.parse(spec.prox) if spec.prox is not None else None
+    fused_t = fusedmod.make_params(spec.fused, eta, sp.lam, prox=px)
+    g0 = convex.grad_norm0(sp.merged(), prox=px, eta=eta)
     schedule = runtime.event_schedule(sp.p, rounds, spec.speeds)
     keys = jax.random.split(key, schedule.size)
     sched, keys = runtime.per_round(schedule, keys, sp.p)
@@ -701,4 +780,4 @@ def run_dsaga(sp: ShardedProblem, *, eta: float, rounds: int, key: jax.Array,
         _dsaga_scan, sp, st, eta, g0, jnp.asarray(sched), keys,
         _label="solve/dsaga", tau=tau, literal_scaling=literal_scaling,
         stale=(fetch == "stale"), fused=fused_t,
-        stream=obs_stream.stream_active())
+        stream=obs_stream.stream_active(), prox=px)

@@ -10,16 +10,23 @@ kernel to the convex drivers:
 
   * the iterate/anchor vectors are padded once per epoch to the kernel
     tile (zero lanes stay exactly zero through the update: the padded
-    gbar/feature columns are zero and ``0*(1-eta*decay) - eta*0 = 0``);
+    gbar/feature columns are zero and ``0*(1-eta*decay) - eta*0 = 0``;
+    a box prox with lo > 0 does move pad lanes off zero, but pad lanes
+    never feed back — margins and outputs use the ``[:d]`` slice only);
   * the features are padded column-wise once so the per-step rank-1
     gradients ``s * a_i`` come out tile-shaped with a single gather;
   * the l2 term ``2*lam*x`` is folded into the kernel's static ``decay``
     instead of a separate elementwise pass.
 
 The step size and lam are baked into the kernel as static floats, so the
-fused configuration travels as a hashable tuple ``(eta, lam, interpret)``
-(``make_params``) that the jitted scan runners take as a static argument
-— ``None`` means "unfused oracle path".
+fused configuration travels as a hashable tuple
+``(eta, lam, interpret, prox)`` (``make_params``) that the jitted scan
+runners take as a static argument — ``None`` means "unfused oracle path".
+``prox`` is a :class:`repro.prox.operators.ProxSpec` (or None): the
+elementwise operators (l1 / elasticnet / box) fuse as a kernel epilogue
+on the updated iterate; a non-elementwise prox (group_l2) makes
+``fused="auto"`` fall back to the unfused oracle here, and ``fused=True``
+is refused pre-JAX by RunSpec.
 
 Numerics: the fused step computes ``s_new*a - s_old*a`` where the oracle
 computes ``(s_new - s_old)*a``, and applies the decay multiplicatively —
@@ -33,20 +40,33 @@ import jax
 import jax.numpy as jnp
 
 from repro import kernels
+from repro.core import convex
 from repro.kernels.vr_update import kernel as vr_kernel
+from repro.prox import operators as proxops
 
 
-def make_params(flag, eta: float, lam) -> tuple | None:
+def make_params(flag, eta: float, lam, prox=None) -> tuple | None:
     """Resolve a driver's ``fused=`` flag into the static kernel params.
 
-    Returns ``None`` (unfused) or ``(eta, lam, interpret)`` with python
-    floats — hashable, so the tuple rides through ``static_argnames`` of
-    the scan runners and the spmd runner caches.
+    Returns ``None`` (unfused) or ``(eta, lam, interpret, prox)`` with
+    python floats and a ProxSpec-or-None — hashable, so the tuple rides
+    through ``static_argnames`` of the scan runners and the spmd runner
+    caches.  A non-elementwise prox disables fusion: "auto" falls back to
+    the unfused oracle, and an explicit ``fused=True`` (already refused
+    by RunSpec pre-JAX) raises here as a second line of defense.
     """
     on, interpret = kernels.resolve_fused(flag)
     if not on:
         return None
-    return (float(eta), float(lam), bool(interpret))
+    if prox is not None:
+        prox = proxops.parse(prox)
+        if not proxops.is_elementwise(prox):
+            if flag is True:
+                raise ValueError(
+                    f"fused=True cannot fuse the non-elementwise prox "
+                    f"{prox.name!r}; use fused=False or 'auto'")
+            return None
+    return (float(eta), float(lam), bool(interpret), prox)
 
 
 def padded_len(d: int) -> int:
@@ -71,9 +91,7 @@ def _residual(z, bb, kind: str):
     """l'(z; b) — the scalar residual of convex.scalar_residual, computed
     from an already-formed margin (the fused bodies dot the unpadded
     feature row against the live iterate slice themselves)."""
-    if kind == "logistic":
-        return -bb * jax.nn.sigmoid(-bb * z)
-    return 2.0 * (z - bb)
+    return convex._pointwise_residual(z, bb, kind)
 
 
 def centralvr_epoch(A, b, kind, x, table, gbar, order, fp, *,
@@ -82,7 +100,7 @@ def centralvr_epoch(A, b, kind, x, table, gbar, order, fp, *,
     ``distributed._local_centralvr_epoch`` with the per-step update as one
     kernel launch.  Returns (x, table, acc[, traj]); ``acc`` is the
     running gtilde accumulator (data term, mean over this shard)."""
-    eta, lam, interpret = fp
+    eta, lam, interpret, prox = fp
     n, d = A.shape
     P = padded_len(d)
     Ap = pad_cols(A, P)
@@ -96,7 +114,7 @@ def centralvr_epoch(A, b, kind, x, table, gbar, order, fp, *,
         xo, _, gto, _ = vr_kernel.vr_update_flat(
             xp, s_new * ap, table[i] * ap, gbarp, accp,
             eta=eta, m=n, saga=False, decay=2.0 * lam,
-            interpret=interpret)
+            prox=prox, interpret=interpret)
         table = table.at[i].set(s_new)
         return (xo, table, gto), (xp[:d] if track else None)
 
@@ -110,7 +128,7 @@ def saga_steps(A, b, kind, x, table, gbar, n_global: int, idx, fp):
     ``distributed._local_saga_steps`` — VR step plus running-mean gbar
     update (global 1/n scaling) in the same launch.  Returns
     (x, table, gbar)."""
-    eta, lam, interpret = fp
+    eta, lam, interpret, prox = fp
     n, d = A.shape
     P = padded_len(d)
     Ap = pad_cols(A, P)
@@ -125,7 +143,7 @@ def saga_steps(A, b, kind, x, table, gbar, n_global: int, idx, fp):
         xo, _, _, gbo = vr_kernel.vr_update_flat(
             xp, s_new * ap, table[i] * ap, gbarp, zp,
             eta=eta, m=n_global, saga=True, decay=2.0 * lam,
-            interpret=interpret)
+            prox=prox, interpret=interpret)
         table = table.at[i].set(s_new)
         return (xo, table, gbo), None
 
@@ -144,7 +162,7 @@ def svrg_steps(A, b, kind, xbar, sbar, gbar, idx, fp):
     here once:  v = s*a - sbar*a + (gbar - 2*lam*xbar) + [decay] 2*lam*x,
     exactly the oracle's  (s - sbar)*a + gbar + 2*lam*(x - xbar).
     Returns the final iterate."""
-    eta, lam, interpret = fp
+    eta, lam, interpret, prox = fp
     n, d = A.shape
     P = padded_len(d)
     Ap = pad_cols(A, P)
@@ -158,7 +176,7 @@ def svrg_steps(A, b, kind, xbar, sbar, gbar, idx, fp):
         xo, _, _, _ = vr_kernel.vr_update_flat(
             xp, s_new * ap, sbar[i] * ap, gbarp, zp,
             eta=eta, m=n, saga=False, decay=2.0 * lam,
-            interpret=interpret)
+            prox=prox, interpret=interpret)
         return xo, None
 
     xp, _ = jax.lax.scan(body, xbarp, idx)

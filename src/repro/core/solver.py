@@ -62,6 +62,12 @@ class AlgoCaps(NamedTuple):
     accepts_speeds: bool = False  # heterogeneous-speed event schedule?
     accepts_tau: bool = False     # local-step count (inner loop length)?
     accepts_fused: bool = False   # fused vr_update kernel hot path?
+    accepts_prox: bool = False    # composite objectives (prox= axis)?
+    snapshots: Tuple[str, ...] = ()   # supported snapshot= anchors; the
+                                  # table-based VR algorithms pin their
+                                  # anchor to the running table ("last"
+                                  # only), the SVRG family re-anchors per
+                                  # round ("last" | "avg" | "rand")
 
 
 class Algorithm(NamedTuple):
@@ -99,8 +105,9 @@ def runner(name: str) -> Callable:
 # RunSpec — declarative, frozen, validated at construction
 # ---------------------------------------------------------------------------
 
-_SAMPLINGS = ("permutation", "uniform")
+_SAMPLINGS = ("permutation", "uniform", "sparse")
 _DECAY_ALGOS = ("sgd", "dist_sgd", "easgd")
+_SNAPSHOTS = ("last", "avg", "rand")
 
 
 @dataclass(frozen=True)
@@ -132,7 +139,24 @@ class RunSpec:
                     inside their jitted scan; this controls what the
                     result records.
       sampling      CentralVR sampling mode ("permutation"|"uniform",
-                    Algorithm 1 only)
+                    Algorithm 1 only); "sparse" routes Algorithm 1
+                    through the lazy CSR driver (``prox/lazy.py``) —
+                    per-coordinate just-in-time catch-up of the skipped
+                    ``eta*gbar`` (+ L1 prox) updates
+      prox          composite objective: apply ``prox_{eta*g}`` at every
+                    update site (``"l1:0.01"``, ``"elasticnet:a:b"``,
+                    ``"box:lo:hi"``, ``"group_l2:lam:size"`` — see
+                    ``repro.prox.operators``).  VR family only; stored
+                    normalized (params resolved) so asdict round-trips.
+                    ``fused=True`` + a non-elementwise prox (group_l2)
+                    is refused here, pre-JAX; ``fused="auto"`` falls
+                    back to the unfused oracle path instead
+      snapshot      VR anchor strategy: "last" (default — the anchor the
+                    table algorithms maintain implicitly), "avg"/"rand"
+                    re-anchor the SVRG family's round snapshot at the
+                    inner-iterate average / a uniformly drawn inner
+                    iterate (svrg, dsvrg only; refused with fused=True,
+                    whose kernel path anchors at the last iterate)
       decay         step-size decay for the SGD-family baselines
       fused         route the VR inner loop through the Pallas
                     ``vr_update`` kernel (DESIGN.md §Fused kernels
@@ -173,6 +197,8 @@ class RunSpec:
     fused: Any = False
     topology: str = "local"
     elastic: bool = False
+    prox: Optional[str] = None
+    snapshot: Optional[str] = None
 
     def __post_init__(self):
         if self.algo not in REGISTRY:
@@ -275,6 +301,71 @@ class RunSpec:
             raise ValueError(
                 "RunSpec.sampling: only 'centralvr' (Algorithm 1) exposes "
                 "the sampling mode")
+
+        # composite objective (prox=) — parse eagerly so a bad operator
+        # string fails here, pre-JAX, naming the field
+        if self.prox is not None:
+            from repro.prox import operators as proxops
+            if not caps.accepts_prox:
+                raise ValueError(
+                    f"RunSpec.prox: algorithm {self.algo!r} has no VR "
+                    "update site to compose a prox into; only the VR "
+                    "family (centralvr, centralvr_sync, centralvr_async, "
+                    "dsvrg, dsaga, svrg, saga) exposes prox=")
+            try:
+                _set("prox", proxops.canonical(self.prox))
+            except ValueError as e:
+                raise ValueError(f"RunSpec.prox: {e}") from None
+            if self.fused is True and not proxops.is_elementwise(self.prox):
+                raise ValueError(
+                    f"RunSpec.fused: prox "
+                    f"{proxops.parse(self.prox).name!r} couples "
+                    "coordinates, but the fused vr_update epilogue is "
+                    "elementwise; use fused=False (or 'auto', which falls "
+                    "back to the unfused oracle)")
+
+        # snapshot anchor strategy — capability-gated per algorithm
+        if self.snapshot is not None:
+            if self.snapshot not in _SNAPSHOTS:
+                raise ValueError(
+                    f"RunSpec.snapshot: unknown snapshot "
+                    f"{self.snapshot!r}: expected one of {_SNAPSHOTS}")
+            if not caps.snapshots:
+                raise ValueError(
+                    f"RunSpec.snapshot: algorithm {self.algo!r} has no VR "
+                    "anchor to re-snapshot; only the VR family exposes "
+                    "snapshot=")
+            if self.snapshot not in caps.snapshots:
+                raise ValueError(
+                    f"RunSpec.snapshot: algorithm {self.algo!r} supports "
+                    f"snapshot in {caps.snapshots}, got {self.snapshot!r} "
+                    "(the table-based algorithms maintain their anchor "
+                    "incrementally — 'last' only)")
+            if self.fused and self.snapshot != "last":
+                raise ValueError(
+                    "RunSpec.fused: the fused SVRG kernel path anchors at "
+                    f"the last iterate; snapshot={self.snapshot!r} "
+                    "requires fused=False")
+
+        # sparse lazy driver (Algorithm 1 only; sampling rule above)
+        if self.sampling == "sparse":
+            if self.backend != "vmap":
+                raise ValueError(
+                    "RunSpec.backend: sampling='sparse' is the lazy "
+                    "host-CSR driver (prox/lazy.py); it has no spmd "
+                    "program — use backend='vmap'")
+            if self.fused:
+                raise ValueError(
+                    "RunSpec.fused: sampling='sparse' already skips the "
+                    "dense update (lazy catch-up); fused= does not apply")
+            if self.prox is not None:
+                from repro.prox import operators as proxops
+                if proxops.parse(self.prox).name != "l1":
+                    raise ValueError(
+                        "RunSpec.prox: the lazy sparse driver composes "
+                        "skipped steps in closed form only for the "
+                        "separable soft-threshold; sampling='sparse' "
+                        f"supports prox='l1:...', got {self.prox!r}")
         if self.decay != 0.0 and self.algo not in _DECAY_ALGOS:
             raise ValueError(
                 f"RunSpec.decay: step-size decay only applies to "
@@ -318,10 +409,20 @@ class RunSpec:
                     "bit-exactness against the unfused event-serial "
                     "reference; fused= is not supported under "
                     "topology='process'")
+            if self.prox is not None:
+                raise ValueError(
+                    "RunSpec.prox: the process-mesh engines run the "
+                    "smooth objective only; prox= is not supported under "
+                    "topology='process'")
         if self.elastic and self.algo != "centralvr_async":
             raise ValueError(
                 f"RunSpec.elastic: only centralvr_async has wave "
                 f"boundaries to repartition at; got algo={self.algo!r}")
+        if self.elastic and self.prox is not None:
+            raise ValueError(
+                "RunSpec.prox: the elastic event-serial reference runs "
+                "the smooth objective only; prox= is not supported with "
+                "elastic=True")
 
     @property
     def epochs(self) -> int:
@@ -570,7 +671,7 @@ def _call_centralvr(spec, prob, eta, key, mesh):
     st, rels, evals = centralvr.run(prob, eta=eta, epochs=spec.rounds,
                                     key=key, sampling=spec.sampling,
                                     backend=spec.backend, mesh=mesh,
-                                    fused=spec.fused)
+                                    fused=spec.fused, prox=spec.prox)
     return st, st.x, rels, evals
 
 
@@ -578,7 +679,7 @@ def _call_sync(spec, sp, eta, key, mesh):
     from repro.core import distributed
     st, rels = distributed.run_sync(sp, eta=eta, rounds=spec.rounds,
                                     key=key, backend=spec.backend, mesh=mesh,
-                                    fused=spec.fused)
+                                    fused=spec.fused, prox=spec.prox)
     return st, st.x, rels, None
 
 
@@ -587,7 +688,7 @@ def _call_async(spec, sp, eta, key, mesh):
     st, rels = distributed.run_async(sp, eta=eta, rounds=spec.rounds,
                                      key=key, speeds=spec.speeds,
                                      backend=spec.backend, mesh=mesh,
-                                     fused=spec.fused)
+                                     fused=spec.fused, prox=spec.prox)
     return st, st.x_c, rels, None
 
 
@@ -596,7 +697,8 @@ def _call_dsvrg(spec, sp, eta, key, mesh):
     x, rels = distributed.run_dsvrg(sp, eta=eta, rounds=spec.rounds,
                                     key=key, tau=spec.tau or 0,
                                     backend=spec.backend, mesh=mesh,
-                                    fused=spec.fused)
+                                    fused=spec.fused, prox=spec.prox,
+                                    snapshot=spec.snapshot or "last")
     return x, x, rels, None
 
 
@@ -606,7 +708,7 @@ def _call_dsaga(spec, sp, eta, key, mesh):
                                      key=key, tau=spec.tau or 100,
                                      fetch=spec.fetch, speeds=spec.speeds,
                                      backend=spec.backend, mesh=mesh,
-                                     fused=spec.fused)
+                                     fused=spec.fused, prox=spec.prox)
     return st, st.x_c, rels, None
 
 
@@ -620,14 +722,16 @@ def _call_sgd(spec, prob, eta, key, mesh):
 def _call_svrg(spec, prob, eta, key, mesh):
     from repro.core import baselines
     x, rels = baselines.run_svrg(prob, eta=eta, epochs=spec.rounds, key=key,
-                                 inner=spec.tau or 0, fused=spec.fused)
+                                 inner=spec.tau or 0, fused=spec.fused,
+                                 prox=spec.prox,
+                                 snapshot=spec.snapshot or "last")
     return x, x, rels, None
 
 
 def _call_saga(spec, prob, eta, key, mesh):
     from repro.core import baselines
     x, rels = baselines.run_saga(prob, eta=eta, epochs=spec.rounds, key=key,
-                                 fused=spec.fused)
+                                 fused=spec.fused, prox=spec.prox)
     return x, x, rels, None
 
 
@@ -657,26 +761,31 @@ def _call_ps_svrg(spec, sp, eta, key, mesh):
 
 register("centralvr", "repro.core.centralvr", "run",
          AlgoCaps(distributed=False, spmd_ok=True, is_async=False,
-                  accepts_fused=True),
+                  accepts_fused=True, accepts_prox=True,
+                  snapshots=("last",)),
          _call_centralvr,
          "CentralVR, single worker (Algorithm 1); spmd = run on the mesh")
 register("centralvr_sync", "repro.core.distributed", "run_sync",
          AlgoCaps(distributed=True, spmd_ok=True, is_async=False,
-                  accepts_fused=True),
+                  accepts_fused=True, accepts_prox=True,
+                  snapshots=("last",)),
          _call_sync, "CentralVR-Sync (Algorithm 2)")
 register("centralvr_async", "repro.core.distributed", "run_async",
          AlgoCaps(distributed=True, spmd_ok=True, is_async=True,
-                  accepts_speeds=True, accepts_fused=True),
+                  accepts_speeds=True, accepts_fused=True,
+                  accepts_prox=True, snapshots=("last",)),
          _call_async,
          "CentralVR-Async (Algorithm 3), deterministic event schedule")
 register("dsvrg", "repro.core.distributed", "run_dsvrg",
          AlgoCaps(distributed=True, spmd_ok=True, is_async=False,
-                  accepts_tau=True, accepts_fused=True),
+                  accepts_tau=True, accepts_fused=True, accepts_prox=True,
+                  snapshots=("last", "avg", "rand")),
          _call_dsvrg, "Distributed SVRG (Algorithm 4)")
 register("dsaga", "repro.core.distributed", "run_dsaga",
          AlgoCaps(distributed=True, spmd_ok=True, is_async=True,
                   accepts_fetch=True, accepts_speeds=True,
-                  accepts_tau=True, accepts_fused=True),
+                  accepts_tau=True, accepts_fused=True, accepts_prox=True,
+                  snapshots=("last",)),
          _call_dsaga,
          "Distributed SAGA (Algorithm 5); spmd requires fetch='stale'")
 register("sgd", "repro.core.baselines", "run_sgd",
@@ -684,11 +793,13 @@ register("sgd", "repro.core.baselines", "run_sgd",
          _call_sgd, "plain SGD, permutation sampling (Fig. 1 baseline)")
 register("svrg", "repro.core.baselines", "run_svrg",
          AlgoCaps(distributed=False, spmd_ok=False, is_async=False,
-                  accepts_tau=True, accepts_fused=True),
+                  accepts_tau=True, accepts_fused=True, accepts_prox=True,
+                  snapshots=("last", "avg", "rand")),
          _call_svrg, "SVRG [17]; tau = inner-loop length (default n)")
 register("saga", "repro.core.baselines", "run_saga",
          AlgoCaps(distributed=False, spmd_ok=False, is_async=False,
-                  accepts_fused=True),
+                  accepts_fused=True, accepts_prox=True,
+                  snapshots=("last",)),
          _call_saga, "SAGA [12] (Fig. 1 baseline)")
 register("dist_sgd", "repro.core.baselines", "run_dist_sgd",
          AlgoCaps(distributed=True, spmd_ok=True, is_async=False,

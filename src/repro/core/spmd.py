@@ -71,6 +71,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import convex, runtime
 from repro.core.convex import Problem
 from repro.obs import stage as obs_stage
+from repro.prox import operators as proxops
 
 WORKER_AXIS = "workers"
 
@@ -200,13 +201,20 @@ def _round_indices(keys: jax.Array, p: int, ns: int, tau: int) -> jax.Array:
 # In-shard metric helpers
 # ---------------------------------------------------------------------------
 
-def _rel_grad_norm(local: Problem, x: jax.Array, g0: jax.Array) -> jax.Array:
+def _rel_grad_norm(local: Problem, x: jax.Array, g0: jax.Array,
+                   prox=None, eta=None) -> jax.Array:
     """The paper's y-axis on the GLOBAL objective, from inside a shard:
     per-shard data-term means are equal-weighted (every worker holds ns
-    samples), so their pmean is the merged problem's data gradient."""
+    samples), so their pmean is the merged problem's data gradient.  With
+    a prox, the smooth norm becomes the composite gradient-mapping norm —
+    the same metric ``convex.rel_grad_norm(..., prox=)`` reports, so the
+    vmap/spmd agreement pins cover the prox'd trajectories too."""
     s = convex.scalar_residual_all(local, x)
     data = jax.lax.pmean(convex.data_grad_from_scalars(local, s), WORKER_AXIS)
-    return jnp.linalg.norm(data + 2.0 * local.lam * x) / g0
+    full = data + 2.0 * local.lam * x
+    if prox is None:
+        return jnp.linalg.norm(full) / g0
+    return jnp.linalg.norm(proxops.grad_map(prox, x, full, eta)) / g0
 
 
 def _full_grad(local: Problem, x: jax.Array) -> jax.Array:
@@ -220,12 +228,15 @@ def _full_grad(local: Problem, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _sync_runner(mesh: Mesh, kind: str, fused=None):
-    """One compiled executable per (mesh, problem kind, fused params):
-    init epoch + the whole round scan inside a single jitted shard_map.
-    Cached so warm calls skip shard_map re-construction and hit the jit
-    cache.  ``fused`` is the static kernel-params tuple from
-    ``fused.make_params`` (hashable, so it extends the cache key)."""
+def _sync_runner(mesh: Mesh, kind: str, fused=None, prox=None):
+    """One compiled executable per (mesh, problem kind, fused params, prox
+    spec): init epoch + the whole round scan inside a single jitted
+    shard_map.  Cached so warm calls skip shard_map re-construction and
+    hit the jit cache.  ``fused`` is the static kernel-params tuple from
+    ``fused.make_params`` and ``prox`` a static ProxSpec-or-None
+    (both hashable, so they extend the cache key).  Prox placement mirrors
+    ``distributed.sync_round`` exactly: per local step, then once more
+    after the central pmean (the wave-boundary ordering, DESIGN.md §2)."""
     from repro.core.distributed import _local_centralvr_epoch, _local_sgd_epoch
 
     def body(A, b, lam, eta, g0, perm0, perms):
@@ -234,8 +245,9 @@ def _sync_runner(mesh: Mesh, kind: str, fused=None):
 
         # --- init: one plain-SGD epoch per worker, then average (line 2)
         x0 = jnp.zeros((A.shape[1],), dtype=A.dtype)
-        x_w, table, acc = _local_sgd_epoch(A, b, lam, kind, x0, eta, perm0)
-        x = jax.lax.pmean(x_w, WORKER_AXIS)
+        x_w, table, acc = _local_sgd_epoch(A, b, lam, kind, x0, eta, perm0,
+                                           prox=prox)
+        x = proxops.apply_prox(prox, jax.lax.pmean(x_w, WORKER_AXIS), eta)
         gbar = jax.lax.pmean(acc, WORKER_AXIS)
 
         # --- communication rounds (lines 4-18): local epoch, then the
@@ -243,10 +255,12 @@ def _sync_runner(mesh: Mesh, kind: str, fused=None):
         def one_round(carry, perm):
             x, table, gbar = carry
             x_w, table, acc = _local_centralvr_epoch(
-                A, b, lam, kind, x, table, gbar, eta, perm[0], fused=fused)
-            x = jax.lax.pmean(x_w, WORKER_AXIS)
+                A, b, lam, kind, x, table, gbar, eta, perm[0], fused=fused,
+                prox=prox)
+            x = proxops.apply_prox(prox, jax.lax.pmean(x_w, WORKER_AXIS),
+                                   eta)
             gbar = jax.lax.pmean(acc, WORKER_AXIS)
-            rel = _rel_grad_norm(local, x, g0)
+            rel = _rel_grad_norm(local, x, g0, prox=prox, eta=eta)
             return (x, table, gbar), rel
 
         (x, table, gbar), rels = jax.lax.scan(one_round, (x, table, gbar),
@@ -261,17 +275,18 @@ def _sync_runner(mesh: Mesh, kind: str, fused=None):
 
 
 def run_sync(sp, *, eta: float, rounds: int, key: jax.Array,
-             mesh: Optional[Mesh] = None, fused=False):
+             mesh: Optional[Mesh] = None, fused=False, prox=None):
     """Algorithm 2 with one worker per device (DESIGN.md §2, spmd backend).
     Same RNG draws as the vmap driver (precomputed on host), so the
     trajectories agree within reduction-order float noise."""
     from repro.core import fused as fusedmod
     from repro.core.distributed import SyncState
 
-    fused_t = fusedmod.make_params(fused, eta, sp.lam)
+    px = proxops.parse(prox) if prox is not None else None
+    fused_t = fusedmod.make_params(fused, eta, sp.lam, prox=px)
     mesh = _check_mesh(mesh, sp.p)
     k_init, k_run = jax.random.split(key)
-    g0 = convex.grad_norm0(sp.merged())
+    g0 = convex.grad_norm0(sp.merged(), prox=px, eta=eta)
     perm0 = jax.vmap(lambda kk: jax.random.permutation(kk, sp.ns))(
         jax.random.split(k_init, sp.p))
     perms = _round_perms(jax.random.split(k_run, rounds), sp.p, sp.ns)
@@ -279,7 +294,7 @@ def run_sync(sp, *, eta: float, rounds: int, key: jax.Array,
         mesh, (sp.A, sp.b, perm0), (sp.lam, jnp.asarray(eta), g0))
     (perms,), () = _put(mesh, (perms,), (), worker_dim=1)
     x, tables, gbar, rels = obs_stage.staged_call(
-        _sync_runner(mesh, sp.kind, fused_t),
+        _sync_runner(mesh, sp.kind, fused_t, px),
         A, b, lam, eta, g0, perm0, perms, _label="spmd/centralvr_sync")
     return SyncState(x=x, tables=tables, gbar=gbar), rels
 
@@ -289,17 +304,25 @@ def run_sync(sp, *, eta: float, rounds: int, key: jax.Array,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _dsvrg_runner(mesh: Mesh, kind: str, fused=None):
-    def body(A, b, lam, eta, g0, idx):
+def _dsvrg_runner(mesh: Mesh, kind: str, fused=None, prox=None,
+                  snapshot: str = "last"):
+    """Prox placement and snapshot selection mirror
+    ``distributed._dsvrg_scan`` exactly: prox per inner step and once more
+    after the cross-worker pmean; snapshot anchors last/avg/rand with the
+    rand index host-precomputed and shipped replicated (``snap``), so both
+    backends pick the same inner iterate."""
+    def body(A, b, lam, eta, g0, idx, snap):
         A, b = A[0], b[0]
         local = Problem(A, b, lam, kind)
         x0 = jnp.zeros((A.shape[1],), dtype=A.dtype)
 
-        def round_(x, idx_r):
+        def round_(x, ins):
+            idx_r, r = ins
             xbar = x
             gbar = _full_grad(local, xbar)   # sync step (line 5)
 
             if fused is not None:
+                # snapshot=="last" here (run_dsvrg falls back otherwise)
                 from repro.core import fused as fusedmod
                 sbar = convex.scalar_residual_all(local, xbar)
                 xl = fusedmod.svrg_steps(A, b, kind, xbar, sbar, gbar,
@@ -309,37 +332,50 @@ def _dsvrg_runner(mesh: Mesh, kind: str, fused=None):
                     g = (convex.scalar_residual(local, xl, i) * A[i]
                          - convex.scalar_residual(local, xbar, i) * A[i]
                          + gbar + 2.0 * lam * (xl - xbar))
-                    return xl - eta * g, None
+                    xl = proxops.apply_prox(prox, xl - eta * g, eta)
+                    return xl, (xl if snapshot != "last" else None)
 
-                xl, _ = jax.lax.scan(step, xbar, idx_r[0])
-            x = jax.lax.pmean(xl, WORKER_AXIS)
-            rel = _rel_grad_norm(local, x, g0)
+                xl, traj = jax.lax.scan(step, xbar, idx_r[0])
+                if snapshot == "avg":
+                    xl = traj.mean(0)
+                elif snapshot == "rand":
+                    xl = traj[r]
+            x = proxops.apply_prox(prox, jax.lax.pmean(xl, WORKER_AXIS),
+                                   eta)
+            rel = _rel_grad_norm(local, x, g0, prox=prox, eta=eta)
             return x, rel
 
-        return jax.lax.scan(round_, x0, idx)
+        return jax.lax.scan(round_, x0, (idx, snap))
 
     return jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(P(WORKER_AXIS), P(WORKER_AXIS), P(), P(), P(),
-                  P(None, WORKER_AXIS)),
+                  P(None, WORKER_AXIS), P()),
         out_specs=(P(), P()), check_rep=False))
 
 
 def run_dsvrg(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 0,
-              mesh: Optional[Mesh] = None, fused=False):
+              mesh: Optional[Mesh] = None, fused=False, prox=None,
+              snapshot: str = "last"):
     from repro.core import fused as fusedmod
 
-    fused_t = fusedmod.make_params(fused, eta, sp.lam)
+    px = proxops.parse(prox) if prox is not None else None
+    fused_t = (fusedmod.make_params(fused, eta, sp.lam, prox=px)
+               if snapshot == "last" else None)
     tau = tau or 2 * sp.ns
     mesh = _check_mesh(mesh, sp.p)
-    g0 = convex.grad_norm0(sp.merged())
+    g0 = convex.grad_norm0(sp.merged(), prox=px, eta=eta)
     idx = _round_indices(jax.random.split(key, rounds), sp.p, sp.ns, tau)
-    (A, b), (lam, eta, g0) = _put(
-        mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0))
+    # same draw as distributed.run_dsvrg (fold_in off the main key stream)
+    snap = (jax.random.randint(jax.random.fold_in(key, 1), (rounds,),
+                               0, tau)
+            if snapshot == "rand" else jnp.zeros((rounds,), jnp.int32))
+    (A, b), (lam, eta, g0, snap) = _put(
+        mesh, (sp.A, sp.b), (sp.lam, jnp.asarray(eta), g0, snap))
     (idx,), () = _put(mesh, (idx,), (), worker_dim=1)
-    return obs_stage.staged_call(_dsvrg_runner(mesh, sp.kind, fused_t),
-                                 A, b, lam, eta, g0, idx,
-                                 _label="spmd/dsvrg")
+    return obs_stage.staged_call(
+        _dsvrg_runner(mesh, sp.kind, fused_t, px, snapshot),
+        A, b, lam, eta, g0, idx, snap, _label="spmd/dsvrg")
 
 
 # ---------------------------------------------------------------------------
@@ -536,12 +572,16 @@ def _wave_push(x_c, gbar_c, dxs, dgs, rk, my_rank, alpha, alpha_g):
 
 
 @functools.lru_cache(maxsize=None)
-def _async_runner(mesh: Mesh, kind: str, fused=None):
+def _async_runner(mesh: Mesh, kind: str, fused=None, prox=None):
     """CentralVR-Async (Algorithm 3) with one worker per device: the whole
     wave schedule in one jitted shard_map.  Each worker's stale snapshot
     (x_fetch, gbar_fetch), previous contribution (x_old, gbar_old), and
     scalar table live on its own device; the central (x_c, gbar_c) are
-    replicated and advanced at wave boundaries."""
+    replicated and advanced at wave boundaries.  Prox placement mirrors
+    ``distributed.async_event``: the central accumulator stays linear in
+    the deltas (the wave prefix-sum reconstruction requires it) and each
+    worker prox's its fetched copy at epoch start; the metric evaluates
+    at ``prox(x_c)``."""
     from repro.core.distributed import _local_centralvr_epoch, _local_sgd_epoch
 
     p = int(mesh.devices.size)
@@ -555,8 +595,9 @@ def _async_runner(mesh: Mesh, kind: str, fused=None):
         # --- init == async_init: one SGD epoch per worker, average, and
         # every worker's previous contribution / fetch set to that iterate
         x0 = jnp.zeros((A.shape[1],), dtype=A.dtype)
-        x_w, table, acc = _local_sgd_epoch(A, b, lam, kind, x0, eta, perm0)
-        x_c = jax.lax.pmean(x_w, WORKER_AXIS)
+        x_w, table, acc = _local_sgd_epoch(A, b, lam, kind, x0, eta, perm0,
+                                           prox=prox)
+        x_c = proxops.apply_prox(prox, jax.lax.pmean(x_w, WORKER_AXIS), eta)
         gbar_c = jax.lax.pmean(acc, WORKER_AXIS)
         carry0 = (x_c, gbar_c, table, x_c, gbar_c, x_c, gbar_c)
 
@@ -570,8 +611,9 @@ def _async_runner(mesh: Mesh, kind: str, fused=None):
                 # every worker traces the epoch; inactive results are
                 # masked (round-robin schedules have no inactive slots)
                 x_new, table_new, gtilde = _local_centralvr_epoch(
-                    A, b, lam, kind, x_fetch, table, gbar_fetch, eta,
-                    perm[0], fused=fused)
+                    A, b, lam, kind,
+                    proxops.apply_prox(prox, x_fetch, eta), table,
+                    gbar_fetch, eta, perm[0], fused=fused, prox=prox)
                 on = act[w_idx]
                 dx = jnp.where(on, x_new - x_old, 0.0)
                 dg = jnp.where(on, gtilde - gbar_old, 0.0)
@@ -588,7 +630,9 @@ def _async_runner(mesh: Mesh, kind: str, fused=None):
                         x_fetch, gbar_fetch), None
 
             carry, _ = jax.lax.scan(one_wave, carry, (act_r, rank_r, perm_r))
-            rel = _rel_grad_norm(local, carry[0], g0)
+            rel = _rel_grad_norm(local,
+                                 proxops.apply_prox(prox, carry[0], eta),
+                                 g0, prox=prox, eta=eta)
             return carry, rel
 
         carry, rels = jax.lax.scan(one_round, carry0, (active, rank, perms))
@@ -617,7 +661,7 @@ def _wave_inputs(mesh, sp, schedule, draws):
 
 
 def run_async(sp, *, eta: float, rounds: int, key: jax.Array, speeds=None,
-              mesh: Optional[Mesh] = None, fused=False):
+              mesh: Optional[Mesh] = None, fused=False, prox=None):
     """Algorithm 3 as concurrency waves (DESIGN.md §2, spmd-async mode).
     Identical schedule, identical RNG draws, and identical delta algebra
     as ``distributed.run_async`` — the event-serial reference it is pinned
@@ -625,10 +669,11 @@ def run_async(sp, *, eta: float, rounds: int, key: jax.Array, speeds=None,
     from repro.core import fused as fusedmod
     from repro.core.distributed import AsyncState
 
-    fused_t = fusedmod.make_params(fused, eta, sp.lam)
+    px = proxops.parse(prox) if prox is not None else None
+    fused_t = fusedmod.make_params(fused, eta, sp.lam, prox=px)
     mesh = _check_mesh(mesh, sp.p)
     k_init, k_run = jax.random.split(key)
-    g0 = convex.grad_norm0(sp.merged())
+    g0 = convex.grad_norm0(sp.merged(), prox=px, eta=eta)
     # init draws: exactly sync_init's splits (async_init delegates to it)
     perm0 = jax.vmap(lambda kk: jax.random.permutation(kk, sp.ns))(
         jax.random.split(k_init, sp.p))
@@ -641,7 +686,7 @@ def run_async(sp, *, eta: float, rounds: int, key: jax.Array, speeds=None,
     active, rank, perms = _wave_inputs(mesh, sp, schedule, perms)
     (x_c, gbar_c, tables, x_old, gbar_old, x_fetch, gbar_fetch,
      rels) = obs_stage.staged_call(
-        _async_runner(mesh, sp.kind, fused_t),
+        _async_runner(mesh, sp.kind, fused_t, px),
         A, b, lam, eta, g0, perm0, active, rank, perms,
         _label="spmd/centralvr_async")
     return AsyncState(x_c=x_c, gbar_c=gbar_c, tables=tables, x_old=x_old,
@@ -650,10 +695,12 @@ def run_async(sp, *, eta: float, rounds: int, key: jax.Array, speeds=None,
 
 
 @functools.lru_cache(maxsize=None)
-def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool, fused=None):
+def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool, fused=None,
+                  prox=None):
     """Stale-fetch D-SAGA (Algorithm 5 with Algorithm 3's fetch
     discipline) as concurrency waves — the spmd execution of
-    ``distributed.dsaga_event_stale``."""
+    ``distributed.dsaga_event_stale`` (prox'd fetch, linear central
+    accumulator, metric at ``prox(x_c)``)."""
     from repro.core.distributed import _local_saga_steps
 
     p = int(mesh.devices.size)
@@ -681,8 +728,10 @@ def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool, fused=None):
                  x_fetch, gbar_fetch) = carry
                 act, rk, idx_w = wv
                 x_new, table_new, gb = _local_saga_steps(
-                    A, b, lam, kind, x_fetch, table, gbar_fetch, eta,
-                    n_global, idx_w[0], fused=fused)
+                    A, b, lam, kind,
+                    proxops.apply_prox(prox, x_fetch, eta), table,
+                    gbar_fetch, eta, n_global, idx_w[0], fused=fused,
+                    prox=prox)
                 on = act[w_idx]
                 dx = jnp.where(on, x_new - x_old, 0.0)
                 if literal_scaling:
@@ -702,7 +751,9 @@ def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool, fused=None):
                         x_fetch, gbar_fetch), None
 
             carry, _ = jax.lax.scan(one_wave, carry, (act_r, rank_r, idx_r))
-            rel = _rel_grad_norm(local, carry[0], g0)
+            rel = _rel_grad_norm(local,
+                                 proxops.apply_prox(prox, carry[0], eta),
+                                 g0, prox=prox, eta=eta)
             return carry, rel
 
         carry, rels = jax.lax.scan(one_round, carry0, (active, rank, idx))
@@ -720,16 +771,17 @@ def _dsaga_runner(mesh: Mesh, kind: str, literal_scaling: bool, fused=None):
 
 def run_dsaga(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 100,
               literal_scaling: bool = False, speeds=None,
-              mesh: Optional[Mesh] = None, fused=False):
+              mesh: Optional[Mesh] = None, fused=False, prox=None):
     """Stale-fetch Algorithm 5 as concurrency waves (DESIGN.md §2).
     Pinned against ``distributed.run_dsaga(fetch="stale")``, the
     event-serial scan with the same fetch discipline, schedule, and RNG."""
     from repro.core import fused as fusedmod
     from repro.core.distributed import AsyncState
 
-    fused_t = fusedmod.make_params(fused, eta, sp.lam)
+    px = proxops.parse(prox) if prox is not None else None
+    fused_t = fusedmod.make_params(fused, eta, sp.lam, prox=px)
     mesh = _check_mesh(mesh, sp.p)
-    g0 = convex.grad_norm0(sp.merged())
+    g0 = convex.grad_norm0(sp.merged(), prox=px, eta=eta)
     schedule = runtime.event_schedule(sp.p, rounds, speeds)
     # per-event draws: exactly dsaga_event's randint(keys[t], (tau,), 0, ns)
     idx = jax.vmap(lambda k: jax.random.randint(k, (tau,), 0, sp.ns))(
@@ -739,7 +791,7 @@ def run_dsaga(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 100,
     active, rank, idx = _wave_inputs(mesh, sp, schedule, idx)
     (x_c, gbar_c, tables, x_old, gbar_old, x_fetch, gbar_fetch,
      rels) = obs_stage.staged_call(
-        _dsaga_runner(mesh, sp.kind, bool(literal_scaling), fused_t),
+        _dsaga_runner(mesh, sp.kind, bool(literal_scaling), fused_t, px),
         A, b, lam, eta, g0, active, rank, idx, _label="spmd/dsaga")
     return AsyncState(x_c=x_c, gbar_c=gbar_c, tables=tables, x_old=x_old,
                       gbar_old=gbar_old, x_fetch=x_fetch,
@@ -752,7 +804,7 @@ def run_dsaga(sp, *, eta: float, rounds: int, key: jax.Array, tau: int = 100,
 
 def run_centralvr(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
                   sampling: str = "permutation", x0=None,
-                  mesh: Optional[Mesh] = None, fused=False):
+                  mesh: Optional[Mesh] = None, fused=False, prox=None):
     """Algorithm 1 has no worker axis to shard — ``backend="spmd"`` means
     "execute on the mesh": the problem is placed on the mesh's first
     device and the standard device-resident scan runs there, so a launcher
@@ -766,4 +818,4 @@ def run_centralvr(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
     if x0 is not None:
         x0 = jax.device_put(x0, dev)
     return centralvr.run(prob, eta=eta, epochs=epochs, key=key,
-                         sampling=sampling, x0=x0, fused=fused)
+                         sampling=sampling, x0=x0, fused=fused, prox=prox)

@@ -16,6 +16,15 @@ fused kernel streams every buffer exactly once through VMEM tiles:
 exactly the historical kernel); the convex drivers pass decay = 2*lam so the
 ridge term never needs a separate elementwise pass over x.
 
+``prox`` is a static elementwise proximal epilogue applied to x' before the
+store (composite objectives, DESIGN.md §Composite objectives) — one of
+None (default: the historical kernel, bit-for-bit), ``("l1", (lam1,))``,
+``("elasticnet", (lam1, lam2))``, or ``("box", (lo, hi))`` — i.e. the
+elementwise subset of ``repro.prox.operators`` as (name, params) tuples.
+The thresholds fold eta in at compile time, so the epilogue is a couple of
+VPU ops on the tile already in registers: the prox'd composite step costs
+no extra HBM traffic over the smooth one.
+
 Tiling: flat 1-D views, (8, 1024)-element VMEM tiles (float32: 32 KiB per
 operand, 8 operands -> ~256 KiB of VMEM per step, well inside the ~16 MiB
 budget while deep enough to pipeline HBM reads).
@@ -33,10 +42,29 @@ SUBLANES = 8
 TILE = SUBLANES * LANES
 
 
+def _prox_epilogue(xn, eta: float, prox):
+    """Elementwise prox on the updated iterate, all params static; pure
+    jnp.where/clip — VPU ops in both the Mosaic and interpret paths."""
+    name, params = prox
+    if name == "l1":
+        (lam1,) = params
+        t = eta * lam1
+        return jnp.sign(xn) * jnp.maximum(jnp.abs(xn) - t, 0.0)
+    if name == "elasticnet":
+        lam1, lam2 = params
+        t = eta * lam1
+        shrink = 1.0 / (1.0 + 2.0 * eta * lam2)
+        return jnp.sign(xn) * jnp.maximum(jnp.abs(xn) - t, 0.0) * shrink
+    if name == "box":
+        lo, hi = params
+        return jnp.clip(xn, lo, hi)
+    raise ValueError(f"non-elementwise prox {name!r} cannot fuse")
+
+
 def _vr_update_kernel(x_ref, g_ref, gold_ref, gbar_ref, gtilde_ref,
                       xo_ref, tbl_ref, gto_ref, gbo_ref,
                       *, eta: float, inv_m: float, saga: bool,
-                      decay: float = 0.0):
+                      decay: float = 0.0, prox=None):
     g = g_ref[...]
     gold = gold_ref[...]
     gbar = gbar_ref[...]
@@ -45,7 +73,10 @@ def _vr_update_kernel(x_ref, g_ref, gold_ref, gbar_ref, gtilde_ref,
     xf = x_ref[...].astype(acc_t)
     if decay:
         xf = xf * (1.0 - eta * decay)
-    xo_ref[...] = (xf - eta * v).astype(x_ref.dtype)
+    xn = xf - eta * v
+    if prox is not None:
+        xn = _prox_epilogue(xn, eta, prox)
+    xo_ref[...] = xn.astype(x_ref.dtype)
     tbl_ref[...] = g
     gto_ref[...] = gtilde_ref[...] + g * inv_m
     if saga:
@@ -55,7 +86,7 @@ def _vr_update_kernel(x_ref, g_ref, gold_ref, gbar_ref, gtilde_ref,
 
 
 def vr_update_flat(x, g, g_old, gbar, gtilde, *, eta: float, m: int,
-                   saga: bool = False, decay: float = 0.0,
+                   saga: bool = False, decay: float = 0.0, prox=None,
                    interpret: bool = False):
     """All inputs flat 1-D, length a multiple of TILE (ops.py pads).
     Returns (x', table', gtilde', gbar')."""
@@ -76,7 +107,7 @@ def vr_update_flat(x, g, g_old, gbar, gtilde, *, eta: float, m: int,
     ]
     fn = pl.pallas_call(
         functools.partial(_vr_update_kernel, eta=eta, inv_m=1.0 / m,
-                          saga=saga, decay=decay),
+                          saga=saga, decay=decay, prox=prox),
         grid=grid,
         in_specs=[block] * 5,
         out_specs=[block] * 4,

@@ -30,8 +30,13 @@ def parse_args(argv=None):
                     help="run every registry algorithm")
     ap.add_argument("--list", action="store_true",
                     help="print the registry (caps + doc) and exit")
-    ap.add_argument("--problem", choices=("logistic", "ridge"),
+    ap.add_argument("--problem",
+                    choices=("logistic", "ridge", "huber", "pseudo_huber"),
                     default="logistic")
+    ap.add_argument("--outlier-frac", type=float, default=0.0,
+                    help="label corruption rate (robust-loss experiments)")
+    ap.add_argument("--huber-delta", type=float, default=1.0,
+                    help="Huber/pseudo-Huber transition scale")
     ap.add_argument("--n", type=int, default=0,
                     help="samples per worker (0 -> 1000, or 64 in --quick)")
     ap.add_argument("--d", type=int, default=0,
@@ -52,6 +57,16 @@ def parse_args(argv=None):
                          "(async algos)")
     ap.add_argument("--tau", type=int, default=0,
                     help="local steps per event/round where supported")
+    ap.add_argument("--prox", default="",
+                    help="composite objective: prox spec 'name[:p1[:p2]]' "
+                         "(l1:lam1, elasticnet:lam1:lam2, box:lo:hi, "
+                         "group_l2:lam1:size); VR algorithms only")
+    ap.add_argument("--lam2", type=float, default=0.0,
+                    help="elastic-net quadratic weight: upgrades --prox "
+                         "l1:lam1 to elasticnet:lam1:lam2")
+    ap.add_argument("--snapshot", choices=("last", "avg", "rand"),
+                    default="",
+                    help="VR anchor strategy (svrg/dsvrg take avg/rand)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metric-every", type=int, default=1)
     ap.add_argument("--quick", action="store_true",
@@ -100,7 +115,39 @@ def build_spec(args, name, workers, rounds):
         kw["fetch"] = args.fetch
     if args.speeds and (caps.accepts_speeds or not args.sweep):
         kw["speeds"] = tuple(float(s) for s in args.speeds.split(","))
+    prox = resolve_prox(args)
+    if prox and (caps.accepts_prox or not args.sweep):
+        kw["prox"] = prox
+    elif prox:
+        note += " (no prox support: ran smooth)"
+    if args.snapshot and (args.snapshot in caps.snapshots or not args.sweep):
+        kw["snapshot"] = args.snapshot
+    elif args.snapshot and args.snapshot != "last":
+        note += f" (no {args.snapshot!r} snapshot: ran 'last')"
     return repro.RunSpec(**kw), note
+
+
+def resolve_prox(args) -> str:
+    """--prox [+ --lam2] -> a prox spec string. ``--lam2`` is sugar for
+    the elastic-net quadratic: it upgrades ``--prox l1:lam1`` to
+    ``elasticnet:lam1:lam2`` (and overrides an explicit elasticnet lam2)."""
+    from repro.prox import operators as proxops
+
+    if not args.prox:
+        if args.lam2:
+            raise SystemExit("--lam2 needs --prox l1:... or elasticnet:... "
+                             "(it sets the elastic-net quadratic weight)")
+        return ""
+    ps = proxops.parse(args.prox)
+    if args.lam2:
+        if ps.name == "l1":
+            ps = proxops.parse(f"elasticnet:{ps.params[0]:g}:{args.lam2:g}")
+        elif ps.name == "elasticnet":
+            ps = proxops.parse(
+                f"elasticnet:{ps.params[0]:g}:{args.lam2:g}")
+        else:
+            raise SystemExit(f"--lam2 does not apply to prox {ps.name!r}")
+    return proxops.canonical(ps)
 
 
 def main(argv=None) -> int:
@@ -114,7 +161,10 @@ def main(argv=None) -> int:
             flags = [k for k, v in
                      (("distributed", c.distributed), ("spmd", c.spmd_ok),
                       ("async", c.is_async), ("fetch", c.accepts_fetch),
-                      ("speeds", c.accepts_speeds), ("tau", c.accepts_tau))
+                      ("speeds", c.accepts_speeds), ("tau", c.accepts_tau),
+                      ("prox", c.accepts_prox),
+                      ("snapshot=" + "|".join(c.snapshots),
+                       len(c.snapshots) > 1))
                      if v]
             print(f"{name:16s} [{', '.join(flags)}] {e.doc}")
         return 0
@@ -137,7 +187,9 @@ def main(argv=None) -> int:
 
     from repro.config import ConvexConfig
 
-    cfg = ConvexConfig(problem=args.problem, n=n, d=d, seed=args.seed)
+    cfg = ConvexConfig(problem=args.problem, n=n, d=d, seed=args.seed,
+                       outlier_frac=args.outlier_frac,
+                       huber_delta=args.huber_delta)
     names = repro.algorithms() if args.sweep else [args.algo]
 
     from repro import obs

@@ -33,7 +33,8 @@ PROVENANCE_KEYS = ("spec", "final_rel", "rels_tail", "rounds_recorded",
                    "wall_s", "traces", "comms", "staleness", "schema_v")
 PROVENANCE_SPEC_KEYS = ("algo", "p", "eta", "rounds", "backend", "fetch",
                         "speeds", "tau", "seed", "metric_every", "sampling",
-                        "decay", "fused", "topology", "elastic")
+                        "decay", "fused", "topology", "elastic", "prox",
+                        "snapshot")
 
 # Elastic membership events (DESIGN.md §Multi-host & elasticity): the
 # required payload of each named event, pinned so the multihost-smoke CI

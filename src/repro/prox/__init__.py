@@ -1,0 +1,36 @@
+"""repro.prox — composite objectives: proximal operators and sparse
+lazy-correction drivers (DESIGN.md §Composite objectives).
+
+Lazy re-exports (``import repro.prox`` must stay jax-free until used):
+
+  * ``ProxSpec`` / ``parse`` / ``apply`` / ``penalty`` — operator library
+  * ``run_sparse`` — lazy CentralVR on CSR-style sparse features
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "ProxSpec": ("repro.prox.operators", "ProxSpec"),
+    "parse": ("repro.prox.operators", "parse"),
+    "apply": ("repro.prox.operators", "apply"),
+    "apply_prox": ("repro.prox.operators", "apply_prox"),
+    "penalty": ("repro.prox.operators", "penalty"),
+    "names": ("repro.prox.operators", "names"),
+    "is_elementwise": ("repro.prox.operators", "is_elementwise"),
+    "numeric_prox": ("repro.prox.operators", "numeric_prox"),
+    "run_sparse": ("repro.prox.lazy", "run_sparse"),
+    "sparsify": ("repro.prox.lazy", "sparsify"),
+    "make_sparse_data": ("repro.prox.lazy", "make_sparse_data"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    import importlib
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value
+    return value

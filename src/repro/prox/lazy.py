@@ -1,0 +1,299 @@
+"""Sparse features with LAZY variance-reduced updates (DESIGN.md
+§Composite objectives, sparse lazy corrections).
+
+On sparse data the CentralVR step touches only the nonzero coordinates of
+the sampled row through its correction term — but the epoch-frozen mean
+gradient ``gbar`` and the prox are DENSE: every step, every untouched
+coordinate j still moves by the same fixed map
+
+    psi(z) = S_c(z + b_j),     b_j = -eta * gbar_j,   c = eta * lam1
+
+(soft-threshold ``S_c`` from the l1 prox; identity threshold c = 0 when no
+prox is configured).  Because ``gbar`` is frozen for the whole epoch, k
+skipped steps compose in closed form — psi is piecewise linear with at
+most three phases (a linear drift on the coordinate's current sign side,
+an absorbing-or-escaping stop at zero, and a final linear drift on the
+other side), so ``psi^k`` is four masked closed-form phase advances with
+ceil-counted crossing steps, not k sequential updates.  This is the
+classical "lazy/just-in-time" update of sparse SGD solvers, extended to
+the prox composition: per-coordinate last-touched counters record when
+each coordinate was last materialized, the catch-up is applied on gather,
+and one final catch-up at epoch end materializes the dense iterate.
+
+Per-step work is O(nnz) instead of O(d); trajectories agree with the
+dense prox'd CentralVR driver (``core/centralvr.py``, the oracle this
+module is pinned against at 1e-10 in x64 — ``tests/test_prox_agreement``)
+because the touched-coordinate update is the dense update restricted to
+the row support and the catch-up reproduces the drift map exactly.
+
+Scope: ``prob.lam == 0`` (a ridge term rescales x every step, which
+densifies the drift into an affine-times-shrink map; fold L2 into the
+data term or use the dense driver) and prox None or ``l1`` (the only
+elementwise prox whose composition with the drift stays closed-form).
+``solver.RunSpec`` enforces the same limits pre-JAX for
+``sampling="sparse"``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import convex
+from repro.core.convex import Problem
+from repro.prox import operators as proxops
+
+
+class SparseProblem(NamedTuple):
+    """CSR-style fixed-width row storage: each row i holds ``width``
+    DISTINCT coordinate indices ``idx[i]`` with values ``val[i]`` (zero on
+    padding entries).  Distinctness is what makes padding exact: a
+    zero-valued entry at coordinate j applies the plain drift map to j —
+    exactly what the lazy catch-up would have done (see ``sparsify``)."""
+
+    idx: jax.Array      # (n, width) int32, distinct within each row
+    val: jax.Array      # (n, width) feature values, 0.0 on padding
+    b: jax.Array        # (n,) targets/labels
+    lam: jax.Array      # kept for Problem parity; must be 0 for the lazy path
+    kind: str
+    d: int
+
+    @property
+    def n(self):
+        return self.idx.shape[0]
+
+    @property
+    def width(self):
+        return self.idx.shape[1]
+
+
+jax.tree_util.register_pytree_node(
+    SparseProblem,
+    lambda p: ((p.idx, p.val, p.b, p.lam), (p.kind, p.d)),
+    lambda aux, leaves: SparseProblem(*leaves, kind=aux[0], d=aux[1]),
+)
+
+
+_PACK_CACHE: dict = {}      # id(A) -> (A strong ref, width, SparseProblem)
+_PACK_CACHE_CAP = 4
+
+
+def _cached_sparsify(prob: Problem, width: Optional[int] = None):
+    """sparsify with a tiny keep-alive cache: repeated solves of the SAME
+    problem (sweeps, warm benchmark calls) skip the O(n d log d) host
+    repack, the way the dense drivers skip re-tracing via the jit cache.
+    Keyed on ``id(prob.A)`` with the array held strongly so the id stays
+    valid for exactly as long as the entry lives."""
+    k = id(prob.A)
+    hit = _PACK_CACHE.get(k)
+    if hit is not None and hit[0] is prob.A and hit[1] == width:
+        return hit[2]
+    sp = sparsify(prob, width)
+    if len(_PACK_CACHE) >= _PACK_CACHE_CAP:
+        _PACK_CACHE.pop(next(iter(_PACK_CACHE)))
+    _PACK_CACHE[k] = (prob.A, width, sp)
+    return sp
+
+
+def sparsify(prob: Problem, width: Optional[int] = None) -> SparseProblem:
+    """Pack a dense Problem into fixed-width sparse rows, losslessly.
+
+    ``width`` defaults to the max row support; a stable argsort on the
+    zero-mask puts each row's nonzero coordinates first (in coordinate
+    order) and pads from that row's zero coordinates — so indices stay
+    distinct within a row and every padding value is exactly 0."""
+    A = np.asarray(prob.A)
+    n, d = A.shape
+    mask = A != 0
+    counts = mask.sum(axis=1)
+    kmax = int(counts.max()) if n else 0
+    w = kmax if width is None else int(width)
+    if w < kmax:
+        raise ValueError(
+            f"sparsify: width={w} would drop nonzeros (max row support "
+            f"is {kmax})")
+    w = min(max(w, 1), d)
+    if w < kmax:
+        raise ValueError(f"sparsify: width {w} exceeds d={d}")
+    order = np.argsort(~mask, axis=1, kind="stable")[:, :w]
+    vals = np.take_along_axis(A, order, axis=1)
+    return SparseProblem(jnp.asarray(order.astype(np.int32)),
+                         jnp.asarray(vals), prob.b, prob.lam, prob.kind, d)
+
+
+def make_sparse_data(key, n: int, d: int, nnz: int, *, kind: str = "ridge",
+                     noise: float = 0.01) -> Problem:
+    """Synthetic sparse-feature problem, lam = 0 (the lazy path's regime):
+    each row draws ``nnz`` distinct coordinates uniformly, values scaled
+    1/sqrt(nnz); returned DENSE so the dense drivers / metric / oracle all
+    run unchanged (``run_sparse`` packs it via :func:`sparsify`)."""
+    if not 1 <= nnz <= d:
+        raise ValueError(f"make_sparse_data: need 1 <= nnz={nnz} <= d={d}")
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    u = jax.random.uniform(k1, (n, d))
+    idx = jnp.argsort(u, axis=1)[:, :nnz]
+    vals = jax.random.normal(k2, (n, nnz)) / jnp.sqrt(float(nnz))
+    A = jnp.zeros((n, d)).at[jnp.arange(n)[:, None], idx].set(vals)
+    x_star = jax.random.normal(k3, (d,)) / jnp.sqrt(float(d))
+    z = A @ x_star + noise * jax.random.normal(k4, (n,))
+    if kind == "logistic":
+        b = jnp.sign(z)
+    elif kind == "ridge":
+        b = z
+    else:
+        raise ValueError(f"make_sparse_data: unknown kind {kind!r}")
+    return Problem(A, b, jnp.asarray(0.0), kind)
+
+
+# ---------------------------------------------------------------------------
+# The closed-form k-fold drift map  psi^k,  psi(z) = S_c(z + b)
+# ---------------------------------------------------------------------------
+
+def _soft(z, c):
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - c, 0.0)
+
+
+def lazy_apply(z, k, b, c):
+    """Apply ``psi^k`` elementwise, ``psi(z) = S_c(z + b)``, in closed form.
+
+    psi is piecewise linear: while the iterate stays strictly positive it
+    moves by ``b - c`` per step, while strictly negative by ``b + c``, and
+    zero is absorbing iff ``|b| <= c``.  Each loop round below (i) jumps
+    to the end of the current phase in one masked closed-form advance
+    (ceil-counted steps that provably keep the sign), then (ii) takes ONE
+    exact psi step across the phase boundary.  A trajectory crosses at
+    most three phases (sign side -> zero -> other side, each entered once
+    because the drift direction is fixed), so four rounds always consume
+    ``k``.  In exact arithmetic this equals k sequential applications;
+    in floats the linear advance ``z + t*delta`` differs from t repeated
+    additions by accumulated rounding only — well inside the 1e-10
+    dense-agreement pin in x64.
+
+    ``k`` is an int array (>= 0) broadcastable against ``z``; ``b``/``c``
+    broadcast likewise.
+    """
+    z = jnp.asarray(z)
+    rem = jnp.broadcast_to(jnp.asarray(k), z.shape).astype(jnp.int32)
+    b = jnp.broadcast_to(jnp.asarray(b), z.shape)
+    dp = b - c                          # per-step move while z > 0
+    dn = b + c                          # per-step move while z < 0
+    fin = jnp.zeros_like(rem)
+
+    def ceil_steps(num, den):
+        # largest step count that keeps the current sign: ceil(num/den)-1
+        q = num / jnp.where(den == 0.0, 1.0, den)
+        t = jnp.ceil(q) - 1.0
+        return jnp.maximum(t, 0.0).astype(jnp.int32)
+
+    for _ in range(4):
+        pos, neg = z > 0, z < 0
+        # closed-form advance within the current phase
+        t_pos = jnp.where(dp >= 0, rem,
+                          jnp.minimum(rem, ceil_steps(z, -dp)))
+        t_neg = jnp.where(dn <= 0, rem,
+                          jnp.minimum(rem, ceil_steps(-z, dn)))
+        t_zero = jnp.where(jnp.abs(b) <= c, rem, fin)
+        t = jnp.where(pos, t_pos, jnp.where(neg, t_neg, t_zero))
+        tf = t.astype(z.dtype)
+        z = jnp.where(pos, z + tf * dp, jnp.where(neg, z + tf * dn, z))
+        rem = rem - t
+        # one exact step across the phase boundary
+        step = rem > 0
+        z = jnp.where(step, _soft(z + b, c), z)
+        rem = jnp.where(step, rem - 1, rem)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Lazy epochs
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("kind", "vr"))
+def _lazy_epoch(idx, val, bvec, kind: str, z, table, gbar, eta, c, perm,
+                vr: bool = True):
+    """One lazy epoch over ``perm``.  ``vr=True`` is the CentralVR epoch
+    (correction from the scalar table, drift b = -eta*gbar); ``vr=False``
+    is the plain-SGD init epoch (no correction, zero drift).  Returns the
+    fully materialized (z, table, acc): the end-of-epoch catch-up brings
+    every coordinate to the final step, so ``z`` IS the dense iterate."""
+    n = idx.shape[0]
+    d = z.shape[0]
+    drift = -eta * gbar if vr else jnp.zeros_like(gbar)
+
+    def body(carry, ti):
+        z, last, table, acc = carry
+        t, i = ti
+        J = idx[i]
+        w = val[i]
+        # catch the row's coordinates up to step t (they were exact as of
+        # their last touch; everything since was the pure drift map)
+        zJ = lazy_apply(z[J], t - last[J], drift[J], c)
+        s_new = convex._pointwise_residual(w @ zJ, bvec[i], kind)
+        if vr:
+            vJ = (s_new - table[i]) * w + gbar[J]
+        else:
+            vJ = s_new * w
+        zJ = _soft(zJ - eta * vJ, c)
+        z = z.at[J].set(zJ)
+        last = last.at[J].set(t + 1)
+        table = table.at[i].set(s_new)
+        acc = acc.at[J].add(s_new * w / n)
+        return (z, last, table, acc), None
+
+    last0 = jnp.zeros((d,), jnp.int32)
+    acc0 = jnp.zeros_like(z)
+    (z, last, table, acc), _ = jax.lax.scan(
+        body, (z, last0, table, acc0),
+        (jnp.arange(n, dtype=jnp.int32), perm.astype(jnp.int32)))
+    # materialize: every coordinate catches up to the end of the epoch
+    z = lazy_apply(z, n - last, drift, c)
+    return z, table, acc
+
+
+def run_sparse(prob: Problem, *, eta: float, epochs: int, key: jax.Array,
+               x0: Optional[jax.Array] = None, prox=None):
+    """Algorithm 1 with lazy sparse updates — the ``sampling="sparse"``
+    execution of ``centralvr.run``.  Same return shape (state, rels,
+    grad_evals), same RNG splits, same arithmetic restricted to row
+    supports: the dense prox'd permutation driver is the exact oracle.
+    """
+    from repro.core.centralvr import VRState
+
+    if float(prob.lam) != 0.0:
+        raise ValueError(
+            "sparse lazy updates require lam == 0: the ridge term 2*lam*x "
+            "multiplies every coordinate every step, which breaks the "
+            "closed-form drift composition; use the dense driver (or fold "
+            "the l2 term into the data)")
+    px = proxops.parse(prox) if prox is not None else None
+    if px is not None and px.name != "l1":
+        raise ValueError(
+            f"sparse lazy updates support prox None or 'l1', got "
+            f"{px.name!r}: only the soft-threshold composes with the "
+            "drift in closed form")
+    c = jnp.asarray(eta * (px.params[0] if px is not None else 0.0))
+    sp = _cached_sparsify(prob)
+    n, d = prob.n, prob.d
+
+    k_init, k_run = jax.random.split(key)          # == centralvr.run
+    x = jnp.zeros((d,)) if x0 is None else x0
+    table = jnp.zeros((n,))
+    # init: one plain-SGD epoch (Algorithm 1 line 2), lazily
+    perm0 = jax.random.permutation(k_init, n)
+    x, table, gbar = _lazy_epoch(sp.idx, sp.val, sp.b, sp.kind, x, table,
+                                 jnp.zeros((d,)), eta, c, perm0, vr=False)
+
+    g0 = convex.grad_norm0(prob, prox=px, eta=eta)
+    keys = jax.random.split(k_run, epochs)
+    rels = []
+    for e in range(epochs):
+        perm = jax.random.permutation(keys[e], n)
+        x, table, gbar = _lazy_epoch(sp.idx, sp.val, sp.b, sp.kind, x,
+                                     table, gbar, eta, c, perm, vr=True)
+        rels.append(convex.rel_grad_norm(prob, x, g0, prox=px, eta=eta))
+    rels = jnp.stack(rels) if rels else jnp.zeros((0,))
+    grad_evals = prob.n * jnp.arange(2, epochs + 2)
+    return VRState(x=x, table=table, gbar=gbar), rels, grad_evals

@@ -300,8 +300,15 @@ def test_comms_model_pins():
 
 def test_comms_models_cover_the_registry_exactly():
     """Adding a registry algorithm without a comms model (or retiring one
-    without cleaning up) fails here, not in a benchmark run."""
-    assert set(comms._MODELS) == set(repro.algorithms())
+    without cleaning up) fails here, not in a benchmark run — naming the
+    offending algorithm, not just dumping two sets."""
+    missing, extra = comms.coverage_gaps(repro.algorithms())
+    assert not missing, (
+        f"registry algorithms with no comms model: {list(missing)} — add "
+        f"a _MODELS row in obs/comms.py")
+    assert not extra, (
+        f"comms models for retired algorithms: {list(extra)} — drop the "
+        f"_MODELS row in obs/comms.py")
 
 
 # ---------------------------------------------------------------------------

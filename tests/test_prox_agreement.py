@@ -1,0 +1,315 @@
+"""Prox'd trajectory agreement pins (ISSUE 10 tentpole, DESIGN.md
+§Composite objectives).
+
+The prox/snapshot axes must not fork numerics across execution paths:
+
+  * FUSED == UNFUSED: every VR-family algorithm with an elementwise prox
+    (l1, elasticnet, box) produces the same trajectory through the Pallas
+    ``vr_update`` prox epilogue as through the unfused oracle (x64,
+    1e-10);
+  * VMAP == SPMD (subprocess with 8 forced host devices, same rule as
+    test_spmd_backend): the prox'd sync/async/dsvrg/dsaga runners on the
+    mesh match the stacked vmap drivers, including the snapshot anchors
+    ("rand" draws its per-round index from the same host-precomputed
+    fold_in stream in both backends);
+  * SPARSE == DENSE: the lazy CSR driver (``prox/lazy.py``) replays the
+    dense prox'd CentralVR trajectory exactly — same RNG splits, same
+    arithmetic restricted to row supports, closed-form catch-up for
+    everything skipped (1e-10 in x64 — the tentpole acceptance pin);
+  * SNAPSHOT strategies change the trajectory they are supposed to
+    change ("avg"/"rand" differ from "last") and nothing else (smooth
+    defaults stay bit-identical to the pre-prox program);
+  * ROBUST losses solve end-to-end and RunSpec refuses the invalid
+    combinations pre-JAX, naming the offending field.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# x64 + same algebra in a different launch/communication order
+CONVEX_TOL = 1e-10
+
+PROXES = ("l1:0.01", "elasticnet:0.01:0.001", "box:-0.5:0.5")
+
+
+def _problem(p):
+    import jax
+
+    from repro.config import ConvexConfig
+    from repro.core import convex, distributed
+
+    if p == 1:
+        prob = convex.make_logistic_data(jax.random.PRNGKey(2), 48, 8)
+        return prob, convex.auto_eta(prob, 0.3)
+    cfg = ConvexConfig(problem="logistic", n=48, d=8, workers=p)
+    sp = distributed.make_distributed(jax.random.PRNGKey(2), cfg)
+    return sp, convex.auto_eta(sp.merged(), 0.3)
+
+
+# ---------------------------------------------------------------------------
+# fused == unfused with a prox epilogue (vmap, in-process)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,p", [
+    ("centralvr", 1), ("svrg", 1), ("saga", 1),
+    ("centralvr_sync", 4), ("centralvr_async", 4),
+    ("dsvrg", 4), ("dsaga", 4),
+])
+@pytest.mark.parametrize("prox", PROXES)
+def test_fused_matches_unfused_with_prox(algo, p, prox):
+    import jax
+
+    from repro import RunSpec, solve
+
+    problem, eta = _problem(p)
+    key = jax.random.PRNGKey(7)
+    res_u = solve(RunSpec(algo=algo, p=p, eta=eta, rounds=3, prox=prox),
+                  problem, key=key)
+    res_f = solve(RunSpec(algo=algo, p=p, eta=eta, rounds=3, prox=prox,
+                          fused=True), problem, key=key)
+    np.testing.assert_allclose(res_f.x, res_u.x, rtol=0, atol=CONVEX_TOL)
+    np.testing.assert_allclose(res_f.rels, res_u.rels, rtol=CONVEX_TOL,
+                               atol=CONVEX_TOL)
+    # the prox actually did something (box/l1 clamp the logistic iterate)
+    res_s = solve(RunSpec(algo=algo, p=p, eta=eta, rounds=3), problem,
+                  key=key)
+    assert float(np.abs(res_u.x - res_s.x).max()) > 1e-8
+
+
+# ---------------------------------------------------------------------------
+# vmap == spmd with prox + snapshot axes (forced-multi-device subprocess)
+# ---------------------------------------------------------------------------
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, "src")
+    from repro.core import spmd
+    spmd.force_host_devices(8)      # before the first jax operation
+    import json
+    import jax
+    jax.config.update("jax_enable_x64", True)   # match conftest precision
+    import numpy as np
+    from repro.config import ConvexConfig
+    from repro.core import convex, distributed
+
+    def diff(a, b):
+        return float(np.abs(np.asarray(a) - np.asarray(b)).max())
+
+    def final_x(st):
+        for attr in ("x", "x_c"):
+            if hasattr(st, attr):
+                return getattr(st, attr)
+        return st
+
+    key = jax.random.PRNGKey(7)
+    cfg = ConvexConfig(problem="logistic", n=48, d=8, workers=4)
+    sp = distributed.make_distributed(jax.random.PRNGKey(2), cfg)
+    eta = convex.auto_eta(sp.merged(), 0.3)
+
+    out = {"device_count": jax.device_count(), "drivers": {}}
+    cases = (
+        ("sync-l1", distributed.run_sync, {"prox": "l1:0.01"}),
+        ("sync-box", distributed.run_sync, {"prox": "box:-0.5:0.5"}),
+        ("async-l1", distributed.run_async, {"prox": "l1:0.01"}),
+        ("dsvrg-rand-l1", distributed.run_dsvrg,
+         {"tau": 32, "prox": "l1:0.01", "snapshot": "rand"}),
+        ("dsvrg-avg-en", distributed.run_dsvrg,
+         {"tau": 32, "prox": "elasticnet:0.01:0.001", "snapshot": "avg"}),
+        ("dsaga-l1", distributed.run_dsaga,
+         {"fetch": "stale", "prox": "l1:0.01"}),
+    )
+    for name, fn, kw in cases:
+        st_v, rels_v = fn(sp, eta=eta, rounds=3, key=key, backend="vmap",
+                          **kw)
+        st_s, rels_s = fn(sp, eta=eta, rounds=3, key=key, backend="spmd",
+                          **kw)
+        out["drivers"][name] = {"dx": diff(final_x(st_v), final_x(st_s)),
+                                "drel": diff(rels_v, rels_s)}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_prox_vmap_matches_spmd():
+    proc = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], cwd=ROOT,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    assert out["device_count"] == 8
+    for name, d in out["drivers"].items():
+        assert d["dx"] <= CONVEX_TOL, (name, d)
+        assert d["drel"] <= CONVEX_TOL, (name, d)
+
+
+# ---------------------------------------------------------------------------
+# sparse lazy == dense oracle (the tentpole acceptance pin)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["ridge", "logistic"])
+@pytest.mark.parametrize("prox", [None, "l1:0.02"])
+def test_sparse_lazy_matches_dense_oracle(kind, prox):
+    import jax
+
+    from repro.core import centralvr
+    from repro.prox import lazy
+
+    prob = lazy.make_sparse_data(jax.random.PRNGKey(7), 48, 40, 3,
+                                 kind=kind)
+    key = jax.random.PRNGKey(2)
+    st_d, rels_d, ge_d = centralvr.run(prob, eta=0.05, epochs=4, key=key,
+                                       prox=prox)
+    st_s, rels_s, ge_s = lazy.run_sparse(prob, eta=0.05, epochs=4, key=key,
+                                         prox=prox)
+    np.testing.assert_allclose(np.asarray(st_s.x), np.asarray(st_d.x),
+                               rtol=0, atol=CONVEX_TOL)
+    np.testing.assert_allclose(np.asarray(st_s.table),
+                               np.asarray(st_d.table), rtol=0,
+                               atol=CONVEX_TOL)
+    np.testing.assert_allclose(np.asarray(rels_s), np.asarray(rels_d),
+                               rtol=CONVEX_TOL, atol=CONVEX_TOL)
+    np.testing.assert_array_equal(np.asarray(ge_s), np.asarray(ge_d))
+    if prox is not None:
+        # the l1 run produced a genuinely sparse iterate
+        assert float(np.mean(np.asarray(st_s.x) == 0.0)) > 0.3
+
+
+def test_sparse_route_through_runspec():
+    """sampling="sparse" on the solver API routes Algorithm 1 through the
+    lazy driver and matches the dense permutation route exactly."""
+    import jax
+
+    from repro import RunSpec, solve
+    from repro.prox import lazy
+
+    prob = lazy.make_sparse_data(jax.random.PRNGKey(7), 48, 40, 3)
+    dense = solve(RunSpec(algo="centralvr", eta=0.05, rounds=3, seed=2,
+                          prox="l1:0.02"), prob)
+    sparse = solve(RunSpec(algo="centralvr", eta=0.05, rounds=3, seed=2,
+                           prox="l1:0.02", sampling="sparse"), prob)
+    np.testing.assert_allclose(sparse.x, dense.x, rtol=0, atol=CONVEX_TOL)
+    np.testing.assert_allclose(sparse.rels, dense.rels, rtol=CONVEX_TOL,
+                               atol=CONVEX_TOL)
+
+
+def test_sparse_lazy_guards():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.convex import Problem
+    from repro.prox import lazy
+
+    prob = lazy.make_sparse_data(jax.random.PRNGKey(7), 16, 12, 2)
+    with pytest.raises(ValueError, match="lam == 0"):
+        lazy.run_sparse(Problem(prob.A, prob.b, jnp.asarray(1e-3),
+                                prob.kind),
+                        eta=0.05, epochs=1, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="'l1'"):
+        lazy.run_sparse(prob, eta=0.05, epochs=1,
+                        key=jax.random.PRNGKey(0), prox="box:-1:1")
+    with pytest.raises(ValueError, match="drop nonzeros"):
+        lazy.sparsify(prob, width=1)
+
+
+# ---------------------------------------------------------------------------
+# snapshot strategies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,p", [("svrg", 1), ("dsvrg", 4)])
+def test_snapshot_axes_change_the_anchor(algo, p):
+    import jax
+
+    from repro import RunSpec, solve
+
+    problem, eta = _problem(p)
+    key = jax.random.PRNGKey(7)
+    runs = {snap: solve(RunSpec(algo=algo, p=p, eta=eta, rounds=3,
+                                snapshot=snap), problem, key=key)
+            for snap in ("last", "avg", "rand")}
+    # explicit "last" == default (the historical program)
+    default = solve(RunSpec(algo=algo, p=p, eta=eta, rounds=3), problem,
+                    key=key)
+    np.testing.assert_array_equal(np.asarray(runs["last"].x),
+                                  np.asarray(default.x))
+    # avg/rand re-anchor: the trajectories genuinely differ
+    for snap in ("avg", "rand"):
+        assert float(np.abs(runs[snap].x - runs["last"].x).max()) > 1e-8
+        assert np.all(np.isfinite(runs[snap].rels))
+
+
+def test_snapshot_refuses_fused():
+    from repro import RunSpec
+
+    with pytest.raises(ValueError, match="snapshot"):
+        RunSpec(algo="svrg", eta=0.1, rounds=1, snapshot="avg", fused=True)
+
+
+# ---------------------------------------------------------------------------
+# robust losses end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["huber", "pseudo_huber"])
+def test_robust_losses_solve(kind):
+    import jax
+
+    from repro import RunSpec, solve
+    from repro.core import convex
+
+    prob = convex.make_huber_data(jax.random.PRNGKey(3), 64, 8, 1e-3,
+                                  delta=1.0, outliers=0.1, kind=kind)
+    eta = convex.auto_eta(prob, 0.3)
+    res = solve(RunSpec(algo="centralvr", eta=eta, rounds=6,
+                        prox="l1:0.001"), prob, key=jax.random.PRNGKey(7))
+    assert res.rels[-1] < 0.5          # it converges, robustly
+    assert np.all(np.isfinite(res.rels))
+
+
+# ---------------------------------------------------------------------------
+# RunSpec contracts (pre-JAX, field-named errors)
+# ---------------------------------------------------------------------------
+
+def test_runspec_prox_contracts():
+    from repro import RunSpec
+
+    with pytest.raises(ValueError, match="RunSpec.prox"):
+        RunSpec(algo="sgd", eta=0.1, rounds=1, prox="l1:0.01")
+    with pytest.raises(ValueError, match="RunSpec.fused"):
+        RunSpec(algo="centralvr", eta=0.1, rounds=1,
+                prox="group_l2:0.01:4", fused=True)
+    with pytest.raises(ValueError, match="unknown prox operator"):
+        RunSpec(algo="centralvr", eta=0.1, rounds=1, prox="nope:1")
+    with pytest.raises(ValueError, match="RunSpec.snapshot"):
+        RunSpec(algo="saga", eta=0.1, rounds=1, snapshot="avg")
+    with pytest.raises(ValueError, match="RunSpec.sampling"):
+        RunSpec(algo="svrg", eta=0.1, rounds=1, sampling="sparse")
+    with pytest.raises(ValueError, match="RunSpec.prox"):
+        RunSpec(algo="centralvr", eta=0.1, rounds=1, sampling="sparse",
+                prox="elasticnet:0.01:0.001")
+    # stored canonically: params resolved, asdict round-trips
+    spec = RunSpec(algo="centralvr", eta=0.1, rounds=1, prox="l1")
+    assert spec.prox == "l1:0.001"
+    spec = RunSpec(algo="dsvrg", p=2, eta=0.1, rounds=1, snapshot="rand")
+    assert spec.snapshot == "rand"
+
+
+def test_provenance_carries_prox_and_snapshot():
+    import jax
+
+    from repro import RunSpec, solve
+    from repro.obs import schema
+
+    problem, eta = _problem(1)
+    res = solve(RunSpec(algo="centralvr", eta=eta, rounds=2,
+                        prox="l1:0.01"), problem, key=jax.random.PRNGKey(7))
+    prov = res.provenance()
+    assert prov["spec"]["prox"] == "l1:0.01"
+    assert "prox" in schema.PROVENANCE_SPEC_KEYS
+    assert "snapshot" in schema.PROVENANCE_SPEC_KEYS

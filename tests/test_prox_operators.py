@@ -1,0 +1,208 @@
+"""Property tests for ``repro.prox.operators`` (ISSUE 10 tentpole).
+
+Every registered operator is pinned three ways:
+
+  * ALGEBRAIC properties every proximal map must satisfy on any input —
+    nonexpansiveness (||prox(u) - prox(v)|| <= ||u - v||), the
+    fixed-point characterization (w* minimizes g  =>  prox(w*) = w*,
+    and for our operators prox(prox(w)) relates by the semigroup /
+    projection laws), and output feasibility (box stays in the box,
+    shrinkage never grows a coordinate for l1/elastic-net);
+  * the NUMERIC ORACLE: the closed forms must match the scipy-free
+    golden-section solution of the prox subproblem to 1e-6 (the oracle's
+    flat-minimum comparison limit is ~1e-8 — see ``numeric_prox``);
+  * the SPEC CONTRACTS: parse/canonical round-trips, registry errors
+    naming the operator and its signature, elementwise classification.
+
+Property tests run under the optional-hypothesis shim: without
+hypothesis installed they skip with a pointed reason while the plain
+tests still run.
+"""
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa
+
+from repro.prox import operators as proxops
+
+SPECS = ("l1:0.05", "elasticnet:0.05:0.02", "box:-0.7:1.3", "group_l2:0.1:4")
+
+# any finite-ish coordinate values; d = 8 keeps group_l2's groups exact
+coords = st.lists(st.floats(min_value=-5.0, max_value=5.0,
+                            allow_nan=False, allow_infinity=False),
+                  min_size=8, max_size=8)
+etas = st.floats(min_value=1e-4, max_value=2.0,
+                 allow_nan=False, allow_infinity=False)
+
+
+def _arr(xs):
+    return np.asarray(xs, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# algebraic properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", SPECS)
+@settings(max_examples=25, deadline=None)
+@given(u=coords, v=coords, eta=etas)
+def test_nonexpansive(spec, u, v, eta):
+    """||prox(u) - prox(v)|| <= ||u - v|| — the defining property of a
+    proximal map of a convex g (it is what makes prox'd SGD stable)."""
+    pu = np.asarray(proxops.apply(spec, _arr(u), eta))
+    pv = np.asarray(proxops.apply(spec, _arr(v), eta))
+    lhs = np.linalg.norm(pu - pv)
+    rhs = np.linalg.norm(_arr(u) - _arr(v))
+    assert lhs <= rhs + 1e-12
+
+
+@pytest.mark.parametrize("spec", SPECS)
+@settings(max_examples=25, deadline=None)
+@given(u=coords, eta=etas)
+def test_prox_decreases_objective(spec, u, eta):
+    """z = prox(w) must achieve an objective value no worse than w itself
+    in 0.5||z - w||^2 + eta*g(z) — i.e. eta*g(prox(w)) + dist cost <=
+    eta*g(w)."""
+    w = _arr(u)
+    z = np.asarray(proxops.apply(spec, w, eta))
+    gz = float(proxops.penalty(spec, z))
+    gw = float(proxops.penalty(spec, w))
+    if not np.isfinite(gw):        # infeasible w for the box indicator
+        assert np.isfinite(gz)     # the projection lands feasible
+        return
+    assert 0.5 * np.sum((z - w) ** 2) + eta * gz <= eta * gw + 1e-10
+
+
+@pytest.mark.parametrize("spec", SPECS)
+@settings(max_examples=25, deadline=None)
+@given(eta=etas)
+def test_penalty_minimizer_is_fixed_point(spec, eta):
+    """The minimizer of g is a fixed point of prox_{eta*g}: 0 for the
+    norms, any interior point for the box."""
+    w = np.zeros(8)
+    if proxops.parse(spec).name == "box":
+        lo, hi = proxops.parse(spec).params
+        w = np.full(8, 0.5 * (lo + hi))
+    z = np.asarray(proxops.apply(spec, w, eta))
+    np.testing.assert_allclose(z, w, rtol=0, atol=1e-14)
+
+
+@settings(max_examples=25, deadline=None)
+@given(u=coords, eta=etas)
+def test_l1_semigroup_and_shrinkage(u, eta):
+    """Soft-threshold laws: S_a(S_b(w)) = S_{a+b}(w), and |prox(w)| <= |w|
+    coordinatewise (shrinkage never grows a coordinate)."""
+    w = _arr(u)
+    lam = 0.07
+    once = np.asarray(proxops.apply(f"l1:{lam}", w, 2.0 * eta))
+    twice = np.asarray(proxops.apply(
+        f"l1:{lam}", np.asarray(proxops.apply(f"l1:{lam}", w, eta)), eta))
+    np.testing.assert_allclose(twice, once, rtol=0, atol=1e-12)
+    assert np.all(np.abs(once) <= np.abs(w) + 1e-15)
+
+
+@settings(max_examples=25, deadline=None)
+@given(u=coords, eta=etas)
+def test_box_is_idempotent_projection(u, eta):
+    """The box prox is a projection: output feasible, idempotent, and
+    independent of eta."""
+    w = _arr(u)
+    z1 = np.asarray(proxops.apply("box:-0.7:1.3", w, eta))
+    z2 = np.asarray(proxops.apply("box:-0.7:1.3", z1, 13.0))
+    assert np.all(z1 >= -0.7) and np.all(z1 <= 1.3)
+    np.testing.assert_array_equal(z1, z2)
+    np.testing.assert_array_equal(
+        z1, np.asarray(proxops.apply("box:-0.7:1.3", w, 5.0 * eta)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(u=coords, eta=etas)
+def test_group_l2_kills_or_shrinks_whole_groups(u, eta):
+    """Block soft-threshold acts per group: a group is either zeroed
+    entirely or shrunk radially (direction preserved)."""
+    w = _arr(u)
+    z = np.asarray(proxops.apply("group_l2:0.1:4", w, eta)).reshape(2, 4)
+    wg = w.reshape(2, 4)
+    for zg, wgi in zip(z, wg):
+        nz = np.linalg.norm(zg)
+        nw = np.linalg.norm(wgi)
+        assert nz <= nw + 1e-12
+        if nz > 0:       # shrunk, not zeroed: same direction
+            np.testing.assert_allclose(zg / nz, wgi / nw, rtol=0, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# closed forms vs the numeric oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", SPECS)
+@settings(max_examples=20, deadline=None)
+@given(u=coords, eta=etas)
+def test_closed_form_matches_numeric_oracle(spec, u, eta):
+    w = _arr(u)
+    closed = np.asarray(proxops.apply(spec, w, eta))
+    numeric = np.asarray(proxops.numeric_prox(spec, w, eta))
+    np.testing.assert_allclose(closed, numeric, rtol=0, atol=1e-6)
+
+
+def test_numeric_oracle_plain():
+    """One deterministic oracle pin per operator (runs without
+    hypothesis): a fixed vector with positive/negative/small coords."""
+    w = np.array([2.0, -1.5, 0.03, -0.02, 0.9, -0.9, 4.0, -4.0])
+    for spec in SPECS:
+        closed = np.asarray(proxops.apply(spec, w, 0.7))
+        numeric = np.asarray(proxops.numeric_prox(spec, w, 0.7))
+        np.testing.assert_allclose(closed, numeric, rtol=0, atol=1e-6,
+                                   err_msg=spec)
+
+
+# ---------------------------------------------------------------------------
+# spec contracts
+# ---------------------------------------------------------------------------
+
+def test_parse_canonical_roundtrip():
+    for spec in SPECS + ("l1", "elasticnet:0.3", "box", "group_l2:1e-2:8"):
+        ps = proxops.parse(spec)
+        assert proxops.parse(ps) is ps                      # idempotent
+        canon = proxops.canonical(spec)
+        assert proxops.parse(canon) == ps                   # round-trips
+        assert proxops.canonical(canon) == canon            # stable
+    assert proxops.canonical(None) is None
+
+
+def test_parse_errors_name_the_operator():
+    with pytest.raises(ValueError, match="unknown prox operator 'l2'"):
+        proxops.parse("l2:0.1")
+    with pytest.raises(ValueError, match="at most 1"):
+        proxops.parse("l1:0.1:0.2")
+    with pytest.raises(ValueError, match="must be a number"):
+        proxops.parse("l1:abc")
+    with pytest.raises(ValueError, match="empty box"):
+        proxops.parse("box:1:-1")
+    with pytest.raises(ValueError, match="positive integer"):
+        proxops.parse("group_l2:0.1:2.5")
+    with pytest.raises(ValueError, match="lam1 must be >= 0"):
+        proxops.parse("l1:-0.1")
+
+
+def test_elementwise_classification():
+    assert proxops.is_elementwise(None)
+    assert proxops.is_elementwise("l1:0.1")
+    assert proxops.is_elementwise("elasticnet:0.1:0.1")
+    assert proxops.is_elementwise("box:-1:1")
+    assert not proxops.is_elementwise("group_l2:0.1:4")
+
+
+def test_apply_prox_none_is_identity_and_grad_map_reduces():
+    w = np.array([1.0, -2.0, 0.5])
+    g = np.array([0.3, -0.1, 0.2])
+    out = proxops.apply_prox(None, w, 0.1)
+    assert out is w                                   # literally untouched
+    np.testing.assert_allclose(np.asarray(proxops.grad_map(None, w, g, 0.1)),
+                               0.1 * g, rtol=0, atol=0)
+    assert float(proxops.penalty(None, w)) == 0.0
+
+
+def test_group_l2_rejects_indivisible_dimension():
+    with pytest.raises(ValueError, match="not divisible"):
+        proxops.apply("group_l2:0.1:3", np.zeros(8), 0.1)
